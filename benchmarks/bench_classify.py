@@ -1,0 +1,44 @@
+"""Paper Figure 2: 1-NN classification accuracy by DTW_p, p in {1,2,4,inf},
+w = n/10, vs instances-per-class (reduced replication counts)."""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.classify import classification_accuracy
+from repro.data.synthetic import DATASETS
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
+
+
+def run(report):
+    rng = np.random.default_rng(1)
+    reps = 2 if FAST else 10
+    n_test = 20 if FAST else 100
+    instance_counts = (1, 5) if FAST else (1, 3, 5, 9)
+    ps = (1, 2, 4, jnp.inf)
+    for ds_name, (gen, n_classes) in DATASETS.items():
+        for n_inst in instance_counts:
+            for p in ps:
+                accs = []
+                t0 = time.perf_counter()
+                for r in range(reps):
+                    train_x, train_y = gen(rng, n_inst)
+                    test_x, test_y = gen(rng, max(n_test // n_classes, 1))
+                    w = max(train_x.shape[1] // 10, 1)
+                    accs.append(
+                        classification_accuracy(
+                            test_x, test_y, train_x, train_y, w=w, p=p
+                        )
+                    )
+                dt = (time.perf_counter() - t0) / max(reps, 1)
+                pname = "inf" if p == jnp.inf else str(p)
+                report(
+                    f"fig2/{ds_name}/n{n_inst}/p{pname}",
+                    dt * 1e6,
+                    f"accuracy={np.mean(accs):.3f}",
+                )

@@ -1,0 +1,56 @@
+"""Kernel-layer microbenchmarks: the three cascade stages, jnp fast path
+(what the CPU container can time) and Pallas-interpret parity checks.
+On-TPU numbers come from the same entry points with interpret=False."""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dtw import dtw_batch
+from repro.core.envelope import envelope, envelope_batch
+from repro.core.lb import lb_improved_powered_batch, lb_keogh_powered_batch
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(report):
+    rng = np.random.default_rng(3)
+    b, n = (256, 256) if FAST else (1024, 1000)
+    w = n // 10
+    db = jnp.asarray(rng.normal(size=(b, n)).astype(np.float32).cumsum(axis=1))
+    q = jnp.asarray(rng.normal(size=n).astype(np.float32).cumsum())
+    u, l = envelope(q, w)
+
+    t = _time(jax.jit(lambda xs: envelope_batch(xs, w)), db)
+    report("kernel/envelope_batch", t * 1e6, f"per_series_us={t/b*1e6:.2f}")
+
+    t = _time(jax.jit(lambda c: lb_keogh_powered_batch(c, u, l, 1)), db)
+    report("kernel/lb_keogh_batch", t * 1e6, f"per_series_us={t/b*1e6:.2f}")
+
+    t = _time(
+        jax.jit(lambda c: lb_improved_powered_batch(c, q, u, l, w, 1)), db
+    )
+    report("kernel/lb_improved_batch", t * 1e6, f"per_series_us={t/b*1e6:.2f}")
+
+    small = db[:32]
+    t = _time(jax.jit(lambda c: dtw_batch(q, c, w, 1, True)), small)
+    cells = 32 * n * (2 * w + 1)
+    report(
+        "kernel/dtw_banded_batch32", t * 1e6,
+        f"cells_per_sec={cells/t:.3e}",
+    )

@@ -1,0 +1,74 @@
+"""Paper Figures 6-10: nearest-neighbour retrieval wall time + pruning
+power, LB_Keogh (Algo 2) vs LB_Improved (Algo 3) vs full scan, over the
+paper's data families at container-friendly sizes.
+
+Emits rows: dataset, db_frac, method, ms_per_query, pruning_pct, speedup.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core.cascade import nn_search_host
+from repro.data.synthetic import (
+    control_charts,
+    cylinder_bell_funnel,
+    random_walks,
+    shape_dataset,
+)
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
+
+
+def datasets(rng):
+    if FAST:
+        yield "cylinder_bell_funnel", cylinder_bell_funnel(rng, 250)[0]
+        yield "control_charts", control_charts(rng, 120)[0]
+        yield "random_walk", random_walks(rng, 600, 256)
+        yield "shape_1024", shape_dataset(rng, 300, 512)
+        yield "shape_arrow", shape_dataset(rng, 600, 251, harmonics=6)
+    else:  # paper scale
+        yield "cylinder_bell_funnel", cylinder_bell_funnel(rng, 3334)[0]
+        yield "control_charts", control_charts(rng, 1667)[0]
+        yield "random_walk", random_walks(rng, 10_000, 1000)
+        yield "shape_1024", shape_dataset(rng, 5844, 1024)
+        yield "shape_arrow", shape_dataset(rng, 15_000, 251, harmonics=6)
+
+
+def run(report):
+    rng = np.random.default_rng(0)
+    n_queries = 3 if FAST else 10
+    fractions = (0.5, 1.0) if FAST else (0.25, 0.5, 0.75, 1.0)
+    for name, db in datasets(rng):
+        n = db.shape[1]
+        w = max(n // 10, 1)
+        order = rng.permutation(db.shape[0])
+        db = db[order]
+        queries = db[rng.integers(0, db.shape[0], n_queries)] + 0.1 * rng.standard_normal(
+            (n_queries, n)
+        ).astype(np.float32)
+        for frac in fractions:
+            sub = db[: int(db.shape[0] * frac)]
+            times = {}
+            prunes = {}
+            for method in ("full", "lb_keogh", "lb_improved"):
+                # warmup compile
+                nn_search_host(queries[0], sub[:64], w=w, method=method)
+                t0 = time.perf_counter()
+                stats = []
+                for q in queries:
+                    res = nn_search_host(q, sub, w=w, method=method)
+                    stats.append(res.stats)
+                dt = (time.perf_counter() - t0) / n_queries
+                times[method] = dt
+                prunes[method] = 100.0 * np.mean([s.pruning_ratio for s in stats])
+            for method in ("full", "lb_keogh", "lb_improved"):
+                report(
+                    f"fig6-10/{name}/frac{frac}/{method}",
+                    times[method] * 1e6,
+                    f"pruned={prunes[method]:.1f}% speedup_vs_full="
+                    f"{times['full'] / times[method]:.2f}x",
+                )

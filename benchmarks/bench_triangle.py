@@ -1,0 +1,39 @@
+"""Paper Section 6: triangle-inequality violation rates over 3 series
+families (white noise / random walk / CBF), DTW_1 and DTW_2, unconstrained."""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metrics import violation_fraction
+from repro.data.synthetic import cylinder_bell_funnel, random_walks, white_noise
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
+
+
+def run(report):
+    rng = np.random.default_rng(2)
+    n_series = 80 if FAST else 300
+    n_triples = 300 if FAST else 5000
+    length = 64 if FAST else 100
+    fams = {
+        "white_noise": white_noise(rng, n_series, length),
+        "random_walk": random_walks(rng, n_series, length),
+        "cbf": cylinder_bell_funnel(rng, n_series // 3)[0][:, :length],
+    }
+    for fam, series in fams.items():
+        for p in (1, 2):
+            t0 = time.perf_counter()
+            frac, _ = violation_fraction(
+                jnp.asarray(series), rng, n_triples, w=length, p=p
+            )
+            dt = time.perf_counter() - t0
+            report(
+                f"sec6/{fam}/p{p}",
+                dt / n_triples * 1e6,
+                f"violation_pct={100*frac:.2f}",
+            )

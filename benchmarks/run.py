@@ -1,0 +1,51 @@
+"""Benchmark runner: one module per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows.  REPRO_BENCH_FAST=0 runs
+paper-scale sizes (minutes-hours); the default is container-friendly.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_classify,
+        bench_kernels,
+        bench_lb,
+        bench_triangle,
+        perf_search,
+        roofline,
+    )
+
+    rows: list[tuple[str, float, str]] = []
+
+    def report(name: str, us_per_call: float, derived: str = ""):
+        rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod in (
+        bench_kernels,
+        bench_triangle,
+        bench_lb,
+        bench_classify,
+        perf_search,
+        roofline,
+    ):
+        try:
+            mod.run(report)
+        except Exception as e:  # keep the suite going; fail at the end
+            traceback.print_exc()
+            failures.append(f"{mod.__name__}: {e}")
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print(f"# {len(rows)} benchmark rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Batched serving example: prefill + decode with KV caches (reduced
+granite config), greedy sampling.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ParallelConfig
+from repro.configs.registry import get_config
+from repro.models.model_zoo import build_model
+from repro.serve import ServeEngine
+
+cfg = get_config("granite-3-2b", reduced=True)
+model = build_model(cfg, ParallelConfig(remat="none", compute_dtype="float32"))
+params = model.init(jax.random.PRNGKey(0))
+
+B, PROMPT, NEW = 4, 12, 24
+engine = ServeEngine(model, params, max_len=PROMPT + NEW + 1)
+rng = np.random.default_rng(0)
+prompts = rng.integers(0, cfg.vocab_size, (B, PROMPT)).astype(np.int32)
+
+t0 = time.perf_counter()
+out = engine.generate(prompts, NEW)
+dt = time.perf_counter() - t0
+print(f"{cfg.name}: {B} seqs x {NEW} new tokens in {dt:.2f}s "
+      f"({B*NEW/dt:.1f} tok/s incl. compile)")
+print("first sequence:", out[0].tolist())
+assert out.shape == (B, NEW) and (out < cfg.vocab_size).all()

@@ -1,0 +1,19 @@
+from repro.configs.base import (
+    SHAPES,
+    HybridConfig,
+    ModelConfig,
+    MoEConfig,
+    ParallelConfig,
+    ShapeConfig,
+    SSMConfig,
+)
+
+__all__ = [
+    "SHAPES",
+    "HybridConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "ParallelConfig",
+    "ShapeConfig",
+    "SSMConfig",
+]

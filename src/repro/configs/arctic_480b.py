@@ -1,0 +1,40 @@
+"""arctic-480b [moe]: 35L d=7168 56H (GQA kv=8) vocab=32000; 128 experts
+top-2 (d_ff 4864) + Arctic's parallel dense residual MLP.
+[hf:Snowflake/snowflake-arctic-base; hf]"""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=4864,
+    vocab_size=32000,
+    moe=MoEConfig(
+        n_experts=128,
+        top_k=2,
+        d_ff_expert=4864,
+        dense_residual_d_ff=4864,
+        group_tokens=1024,
+    ),
+    source="hf:Snowflake/snowflake-arctic-base",
+)
+
+REDUCED = ModelConfig(
+    name="arctic-480b-smoke",
+    family="moe",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_head=16,
+    d_ff=96,
+    vocab_size=128,
+    moe=MoEConfig(
+        n_experts=8, top_k=2, d_ff_expert=96, dense_residual_d_ff=96, group_tokens=32
+    ),
+)

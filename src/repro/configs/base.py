@@ -1,0 +1,131 @@
+"""Config schema for architectures, input shapes, and parallelism."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Family = Literal["dense", "moe", "vlm", "audio", "hybrid", "ssm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+    dense_residual_d_ff: int = 0  # Arctic-style parallel dense MLP (0 = off)
+    group_tokens: int = 1024  # routing-group size (capacity enforced per group)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 128  # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """Zamba-style: shared attention+MLP block applied every N ssm layers."""
+
+    shared_every: int = 6
+    shared_n_heads: int = 32
+    shared_n_kv: int = 32
+    shared_d_ff: int = 14336
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+    # attention pattern: cycle of per-layer windows; 0 = global attention
+    window_pattern: tuple[int, ...] = (0,)
+    rope_theta: float = 10_000.0
+    norm: Literal["rms", "ln"] = "rms"
+    ffn_act: str = "silu"
+    ffn_gated: bool = True
+    tie_embeddings: bool = False
+    scale_embed: bool = False  # gemma-style sqrt(d) embedding scale
+    norm_eps: float = 1e-5
+    logit_softcap: float = 0.0
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    hybrid: HybridConfig | None = None
+    # enc-dec (whisper): number of encoder layers; 0 = decoder-only
+    encoder_layers: int = 0
+    encoder_len: int = 1500  # stub audio frontend frames
+    # vlm: number of stub patch-embedding tokens prepended
+    vision_tokens: int = 0
+    source: str = ""  # citation tag from the assignment table
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding/head tables padded to a multiple of 512 (Megatron-style)
+        so the vocab dim divides any reasonable TP degree; logits at padded
+        ids are masked to -inf in the loss/decode paths."""
+        mult = 512 if self.vocab_size >= 4096 else 16
+        return -(-self.vocab_size // mult) * mult
+
+    def window_for_layer(self, i: int) -> int:
+        return self.window_pattern[i % len(self.window_pattern)]
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """May run the long_500k shape (DESIGN.md skip list)."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        # sliding-window-dominant stacks qualify (gemma3)
+        return all(wp > 0 for wp in self.window_pattern) or (
+            0 < sum(1 for wp in self.window_pattern if wp == 0)
+            <= len(self.window_pattern) // 5
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: Literal["train", "prefill", "decode"]
+    seq_len: int
+    global_batch: int
+
+
+TRAIN_4K = ShapeConfig("train_4k", "train", 4_096, 256)
+PREFILL_32K = ShapeConfig("prefill_32k", "prefill", 32_768, 32)
+DECODE_32K = ShapeConfig("decode_32k", "decode", 32_768, 128)
+LONG_500K = ShapeConfig("long_500k", "decode", 524_288, 1)
+
+SHAPES: dict[str, ShapeConfig] = {
+    s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    """Per-run parallelism/perf knobs (the §Perf hillclimb surface)."""
+
+    microbatch: int = 0  # 0 = no gradient accumulation
+    remat: Literal["none", "full", "dots"] = "full"
+    fsdp: bool = True  # shard params over "data" (ZeRO-3)
+    tensor_parallel: bool = True  # False: "model" axis becomes extra DP (ZeRO-3)
+    seq_shard_activations: bool = True  # SP: shard residual seq dim over "model"
+    shard_kv_cache_seq: bool = True  # decode: shard KV cache T over "model"
+    loss_chunk: int = 0  # 0 = unchunked cross-entropy
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    optimizer: Literal["adamw", "adafactor"] = "adamw"
+    moment_dtype: str = "float32"  # AdamW m/v dtype (bf16 = compressed)

@@ -1,0 +1,42 @@
+"""gemma3-4b [dense]: 34L d=2560 8H (GQA kv=4) d_ff=10240 vocab=262144,
+5:1 local(1024):global interleave, 128k context.
+[hf:google/gemma-3-1b-pt family; unverified]"""
+
+from repro.configs.base import ModelConfig
+
+_LOCAL = 1024
+
+CONFIG = ModelConfig(
+    name="gemma3-4b",
+    family="dense",
+    n_layers=34,
+    d_model=2560,
+    n_heads=8,
+    n_kv_heads=4,
+    d_head=256,
+    d_ff=10240,
+    vocab_size=262144,
+    window_pattern=(_LOCAL, _LOCAL, _LOCAL, _LOCAL, _LOCAL, 0),
+    rope_theta=1_000_000.0,
+    ffn_act="gelu_tanh",
+    ffn_gated=True,
+    tie_embeddings=True,
+    scale_embed=True,
+    source="hf:google/gemma-3-4b-pt",
+)
+
+REDUCED = ModelConfig(
+    name="gemma3-4b-smoke",
+    family="dense",
+    n_layers=7,  # exercises cycle + heterogeneous handling
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_head=16,
+    d_ff=128,
+    vocab_size=128,
+    window_pattern=(8, 8, 0),
+    ffn_act="gelu_tanh",
+    tie_embeddings=True,
+    scale_embed=True,
+)

@@ -1,0 +1,32 @@
+"""internvl2-2b [vlm]: InternLM2-1.8B backbone, 24L d=2048 16H (GQA kv=8)
+d_ff=8192 vocab=92553; InternViT frontend STUBBED (input_specs provides
+precomputed patch embeddings). [arXiv:2404.16821; hf]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=8192,
+    vocab_size=92553,
+    vision_tokens=256,
+    source="arXiv:2404.16821",
+)
+
+REDUCED = ModelConfig(
+    name="internvl2-2b-smoke",
+    family="vlm",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_head=16,
+    d_ff=128,
+    vocab_size=128,
+    vision_tokens=8,
+)

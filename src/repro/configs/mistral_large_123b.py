@@ -1,0 +1,29 @@
+"""mistral-large-123b [dense]: 88L d=12288 96H (GQA kv=8) d_ff=28672
+vocab=32768. [hf:mistralai/Mistral-Large-Instruct-2407; unverified]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-large-123b",
+    family="dense",
+    n_layers=88,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=28672,
+    vocab_size=32768,
+    source="hf:mistralai/Mistral-Large-Instruct-2407",
+)
+
+REDUCED = ModelConfig(
+    name="mistral-large-123b-smoke",
+    family="dense",
+    n_layers=4,
+    d_model=96,
+    n_heads=6,
+    n_kv_heads=2,
+    d_head=16,
+    d_ff=192,
+    vocab_size=128,
+)

@@ -1,0 +1,58 @@
+"""Architecture registry: --arch <id> -> (full config, reduced smoke config)."""
+
+from __future__ import annotations
+
+from repro.configs import (
+    arctic_480b,
+    gemma3_4b,
+    granite_3_2b,
+    grok_1_314b,
+    internvl2_2b,
+    mistral_large_123b,
+    rwkv6_1_6b,
+    stablelm_3b,
+    whisper_small,
+    zamba2_7b,
+)
+from repro.configs.base import LONG_500K, SHAPES, ModelConfig, ShapeConfig
+
+_MODULES = {
+    "granite-3-2b": granite_3_2b,
+    "gemma3-4b": gemma3_4b,
+    "mistral-large-123b": mistral_large_123b,
+    "stablelm-3b": stablelm_3b,
+    "internvl2-2b": internvl2_2b,
+    "arctic-480b": arctic_480b,
+    "grok-1-314b": grok_1_314b,
+    "whisper-small": whisper_small,
+    "zamba2-7b": zamba2_7b,
+    "rwkv6-1.6b": rwkv6_1_6b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    mod = _MODULES[arch]
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """The 40-cell matrix with the documented long_500k skip list."""
+    if shape.name == LONG_500K.name and not cfg.sub_quadratic:
+        return False, "long_500k skipped: pure full-attention arch (DESIGN.md)"
+    return True, ""
+
+
+def all_cells(include_skipped: bool = False):
+    """Yield (arch_id, shape_name, runnable, reason) for the 40-cell matrix."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            ok, why = cell_is_runnable(cfg, shape)
+            if ok or include_skipped:
+                yield arch, shape_name, ok, why

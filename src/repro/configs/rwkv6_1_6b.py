@@ -1,0 +1,30 @@
+"""rwkv6-1.6b [ssm]: Finch, 24L d=2048 (attn-free, 32 heads of 64),
+channel-mix d_ff=7168, vocab=65536; data-dependent decay.
+[arXiv:2404.05892; unverified]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_head=64,
+    d_ff=7168,
+    vocab_size=65536,
+    source="arXiv:2404.05892",
+)
+
+REDUCED = ModelConfig(
+    name="rwkv6-1.6b-smoke",
+    family="ssm",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_head=16,
+    d_ff=128,
+    vocab_size=128,
+)

@@ -1,0 +1,40 @@
+"""whisper-small [audio]: enc-dec, 12L each side, d=768 12H d_ff=3072
+vocab=51865; conv/audio frontend STUBBED (input_specs provides frame
+embeddings). [arXiv:2212.04356; unverified]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    n_layers=12,
+    encoder_layers=12,
+    encoder_len=1536,  # 1500 in the paper; padded to /512 for clean sharding
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_head=64,
+    d_ff=3072,
+    vocab_size=51865,
+    norm="ln",
+    ffn_act="gelu",
+    ffn_gated=False,
+    source="arXiv:2212.04356",
+)
+
+REDUCED = ModelConfig(
+    name="whisper-small-smoke",
+    family="audio",
+    n_layers=2,
+    encoder_layers=2,
+    encoder_len=16,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_head=16,
+    d_ff=128,
+    vocab_size=128,
+    norm="ln",
+    ffn_act="gelu",
+    ffn_gated=False,
+)

@@ -1,0 +1,38 @@
+"""zamba2-7b [hybrid]: 81 Mamba2 layers d=3584, ssm_state=64, plus a
+weight-shared attention(32H kv=32)+MLP(d_ff=14336) block every 6 layers.
+[arXiv:2411.15242; unverified]"""
+
+from repro.configs.base import HybridConfig, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    d_head=112,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm=SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=64, chunk=128),
+    hybrid=HybridConfig(
+        shared_every=6, shared_n_heads=32, shared_n_kv=32, shared_d_ff=14336
+    ),
+    source="arXiv:2411.15242",
+)
+
+REDUCED = ModelConfig(
+    name="zamba2-7b-smoke",
+    family="hybrid",
+    n_layers=5,  # 2 groups of 2 + tail of 1
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_head=16,
+    d_ff=128,
+    vocab_size=128,
+    ssm=SSMConfig(d_state=8, d_conv=4, expand=2, head_dim=16, chunk=16),
+    hybrid=HybridConfig(
+        shared_every=2, shared_n_heads=4, shared_n_kv=4, shared_d_ff=128
+    ),
+)

@@ -1,0 +1,54 @@
+"""Core of the paper: DTW_p, envelopes, LB_Keogh, LB_Improved, cascade search."""
+
+from repro.core.dtw import (
+    BIG,
+    dtw_banded,
+    dtw_banded_diag,
+    dtw_batch,
+    dtw_reference,
+)
+from repro.core.envelope import envelope, envelope_batch, envelope_naive
+from repro.core.lb import (
+    lb_improved,
+    lb_improved_powered,
+    lb_improved_powered_batch,
+    lb_keogh,
+    lb_keogh_powered,
+    lb_keogh_powered_batch,
+    project,
+)
+from repro.core.cascade import (
+    SearchResult,
+    SearchStats,
+    nn_search_host,
+    nn_search_scan,
+)
+from repro.core.classify import classification_accuracy, nn_classify
+from repro.core.metrics import theorem1_bound, triangle_ratio, violation_fraction
+
+__all__ = [
+    "BIG",
+    "dtw_banded",
+    "dtw_banded_diag",
+    "dtw_batch",
+    "dtw_reference",
+    "envelope",
+    "envelope_batch",
+    "envelope_naive",
+    "lb_keogh",
+    "lb_keogh_powered",
+    "lb_keogh_powered_batch",
+    "lb_improved",
+    "lb_improved_powered",
+    "lb_improved_powered_batch",
+    "project",
+    "SearchResult",
+    "SearchStats",
+    "nn_search_scan",
+    "nn_search_host",
+    "nn_classify",
+    "classification_accuracy",
+    "triangle_ratio",
+    "theorem1_bound",
+    "violation_fraction",
+]

@@ -1,0 +1,179 @@
+"""Sharded DTW nearest-neighbour search — the paper's parallel postscript.
+
+The paper's conclusion: *"Several instances of Algo. 3 can run in parallel
+as long as they can communicate the distance between the time series and
+the best candidate."*  This module turns that sentence into a mesh
+program:
+
+* the candidate database shards over (any subset of) the mesh axes;
+* every shard runs the same block cascade on its local stream;
+* every ``sync_every`` blocks the k-th-best *bound* is exchanged with
+  ``lax.pmin`` so all shards prune against the globally tightest
+  threshold (one scalar over the ICI — the paper's "communicate the
+  distance");
+* at the end local top-k lists are all-gathered and merged.
+
+``sync_every`` trades pruning power against collective latency; it is one
+of the §Perf hillclimb knobs (EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.cascade import (
+    Method,
+    SearchResult,
+    SearchStats,
+    init_carry,
+    make_block_step,
+)
+from repro.core.dtw import BIG, PNorm, finish_cost
+from repro.core.envelope import envelope
+
+
+def _sharded_search_fn(
+    mesh: Mesh,
+    axis_names: tuple[str, ...],
+    w: int,
+    p: PNorm,
+    k: int,
+    block: int,
+    sync_every: int,
+    method: Method,
+):
+    """Build the jitted shard_map search: (q, db_sharded) -> (top_v, top_i, stats)."""
+
+    db_spec = P(axis_names)  # shard candidate axis over all given mesh axes
+
+    def local_search(q, db_local):
+        n = q.shape[0]
+        upper, lower = envelope(q, w)
+        n_local = db_local.shape[0]
+        nb = n_local // block
+        shard_id = jnp.int32(0)
+        stride = 1
+        for ax in reversed(axis_names):
+            shard_id = shard_id + jax.lax.axis_index(ax) * stride
+            stride *= mesh.shape[ax]
+        base = shard_id * n_local + jnp.arange(nb) * block
+        blocks = db_local.reshape(nb, block, n)
+
+        body = make_block_step(q, upper, lower, w, p, k, block, method)
+
+        rounds = -(-nb // sync_every)
+        pad_rounds = rounds * sync_every - nb
+        if pad_rounds:
+            # replicate a poison block (top-k ignores BIG) to even rounds
+            poison = jnp.full((pad_rounds, block, n), 0.5 * BIG ** 0.25)
+            blocks = jnp.concatenate([blocks, poison], axis=0)
+            base = jnp.concatenate(
+                [base, jnp.full((pad_rounds,), n_local * 10**6, jnp.int32)]
+            )
+        blocks = blocks.reshape(rounds, sync_every, block, n)
+        base = base.reshape(rounds, sync_every)
+
+        # The block step prunes against min(local k-th best, gbound); the
+        # gbound slot of the carry is pmin-exchanged once per round (one
+        # scalar over the ICI — the paper's "communicate the distance").
+        def round_body(carry, inp):
+            carry, _ = jax.lax.scan(body, carry, inp)
+            top_v, top_i, gbound, *stats = carry
+            gbound = jnp.minimum(gbound, top_v[-1])
+            gbound = jax.lax.pmin(gbound, axis_names)
+            return (top_v, top_i, gbound, *stats), None
+
+        carry, _ = jax.lax.scan(round_body, init_carry(k), (blocks, base))
+        top_v, top_i, _gbound, c1, c2, c3, b2, b3 = carry
+        # gather per-shard top-k and merge
+        all_v = jax.lax.all_gather(top_v, axis_names, tiled=True)
+        all_i = jax.lax.all_gather(top_i, axis_names, tiled=True)
+        neg, sel = jax.lax.top_k(-all_v, k)
+        stats = jnp.stack(
+            [
+                jax.lax.psum(c1, axis_names),
+                jax.lax.psum(c2, axis_names),
+                jax.lax.psum(c3, axis_names),
+                jax.lax.psum(b2, axis_names),
+                jax.lax.psum(b3, axis_names),
+            ]
+        )
+        return -neg, all_i[sel], stats
+
+    fn = shard_map(
+        local_search,
+        mesh=mesh,
+        in_specs=(P(), db_spec),
+        out_specs=(P(), P(), P()),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_fn(mesh, axis_names, w, p, k, block, sync_every, method):
+    return _sharded_search_fn(mesh, axis_names, w, p, k, block, sync_every, method)
+
+
+def sharded_nn_search(
+    q,
+    db,
+    mesh: Mesh,
+    axis_names: Sequence[str] | None = None,
+    w: int = 0,
+    p: PNorm = 1,
+    k: int = 1,
+    block: int = 32,
+    sync_every: int = 4,
+    method: Method = "lb_improved",
+) -> SearchResult:
+    """Search a database sharded over ``mesh`` axes.
+
+    ``db`` rows must divide evenly by (shards * block); callers pad with
+    ``pad_database``.
+    """
+    axis_names = tuple(axis_names if axis_names is not None else mesh.axis_names)
+    q = jnp.asarray(q)
+    n = q.shape[0]
+    w = int(min(w, n - 1))
+    fn = _cached_fn(mesh, axis_names, w, p, int(k), int(block), int(sync_every), method)
+    db = jax.device_put(
+        db, NamedSharding(mesh, P(axis_names))
+    )
+    top_v, top_i, stats = fn(q, db)
+    c1, c2, c3, b2, b3 = (int(v) for v in np.asarray(stats))
+    n_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
+    res_stats = SearchStats(
+        n_candidates=int(db.shape[0]),
+        lb1_pruned=c1,
+        lb2_pruned=c2,
+        full_dtw=c3,
+        blocks_total=int(db.shape[0]) // block,
+        blocks_lb2=b2,
+        blocks_dtw=b3,
+    )
+    return SearchResult(
+        distances=np.asarray(finish_cost(jnp.asarray(top_v), p)),
+        indices=np.asarray(top_i),
+        stats=res_stats,
+    )
+
+
+def pad_database(db: np.ndarray, mesh: Mesh, axis_names=None, block: int = 32):
+    """Pad rows so the DB divides by shards*block; returns (db, n_real)."""
+    axis_names = tuple(axis_names if axis_names is not None else mesh.axis_names)
+    shards = int(np.prod([mesh.shape[a] for a in axis_names]))
+    mult = shards * block
+    n = db.shape[0]
+    n_pad = (-n) % mult
+    if n_pad:
+        filler = np.full((n_pad, db.shape[1]), 0.5 * BIG ** 0.25, db.dtype)
+        db = np.concatenate([db, filler], axis=0)
+    return db, n

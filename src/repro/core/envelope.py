@@ -1,0 +1,90 @@
+"""Warping envelopes U(x), L(x) — paper Sections 8-9.
+
+``U(x)_i = max{x_k : |k-i| <= w}`` and ``L(x)_i = min{x_k : |k-i| <= w}``.
+
+The paper computes envelopes with Lemire's streaming double-ended-queue
+algorithm (Algorithm 1, <= 3n comparisons).  That algorithm's control flow
+is data-dependent and strictly sequential — hostile to the TPU VPU.  We
+adapt the van Herk–Gil–Werman (vHGW) sliding-window max/min instead: block
+the padded series into tiles of W = 2w+1, take per-tile prefix- and
+suffix-cummax, and combine two lookups per output element.  vHGW matches
+Lemire's ~3 comparisons/element bound while every step is a dense vector
+op, so the paper's cost model carries over unchanged (DESIGN.md §3.1).
+
+Everything here is jit/vmap-friendly; ``envelope_naive`` is the oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG = -jnp.inf
+POS = jnp.inf
+
+
+def _slide_extreme(x: jax.Array, w: int, *, take_max: bool) -> jax.Array:
+    """Centered sliding max (or min) with window [i-w, i+w], vHGW scheme."""
+    n = x.shape[0]
+    if w <= 0:
+        return x
+    win = 2 * w + 1
+    fill = jnp.array(NEG if take_max else POS, x.dtype)
+    # pad so that window starts s = i - w become s' = i on the padded array
+    total = n + 2 * w
+    nblocks = -(-total // win)
+    pad_back = nblocks * win - total
+    xp = jnp.concatenate(
+        [jnp.full((w,), fill, x.dtype), x, jnp.full((w + pad_back,), fill, x.dtype)]
+    )
+    blocks = xp.reshape(nblocks, win)
+    if take_max:
+        pref = jax.lax.cummax(blocks, axis=1)
+        suff = jax.lax.cummax(blocks[:, ::-1], axis=1)[:, ::-1]
+    else:
+        pref = jax.lax.cummin(blocks, axis=1)
+        suff = jax.lax.cummin(blocks[:, ::-1], axis=1)[:, ::-1]
+    pref = pref.reshape(-1)
+    suff = suff.reshape(-1)
+    idx = jnp.arange(n)  # window over padded array: [i, i + win - 1]
+    left = suff[idx]
+    right = pref[idx + win - 1]
+    return jnp.maximum(left, right) if take_max else jnp.minimum(left, right)
+
+
+@functools.partial(jax.jit, static_argnames=("w",))
+def envelope(x: jax.Array, w: int) -> tuple[jax.Array, jax.Array]:
+    """Return (U, L), each shaped like ``x`` (1-D)."""
+    if x.ndim != 1:
+        raise ValueError(f"envelope expects 1-D series, got {x.shape}")
+    w = int(min(w, x.shape[0] - 1))
+    return (
+        _slide_extreme(x, w, take_max=True),
+        _slide_extreme(x, w, take_max=False),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("w",))
+def envelope_batch(xs: jax.Array, w: int) -> tuple[jax.Array, jax.Array]:
+    """(B, n) -> (U, L) each (B, n)."""
+    w = int(min(w, xs.shape[-1] - 1))
+    up = jax.vmap(lambda s: _slide_extreme(s, w, take_max=True))(xs)
+    lo = jax.vmap(lambda s: _slide_extreme(s, w, take_max=False))(xs)
+    return up, lo
+
+
+def envelope_naive(x, w: int):
+    """Numpy oracle: direct windowed max/min, O(n*w)."""
+    x = np.asarray(x)
+    n = len(x)
+    w = int(min(w, n - 1))
+    U = np.empty_like(x)
+    L = np.empty_like(x)
+    for i in range(n):
+        lo, hi = max(0, i - w), min(n, i + w + 1)
+        U[i] = x[lo:hi].max()
+        L[i] = x[lo:hi].min()
+    return U, L

@@ -1,0 +1,106 @@
+"""LB_Keogh and LB_Improved — paper Sections 10-11.
+
+Conventions follow the paper's Algorithm 2/3: the *query* ``q`` has a
+precomputed envelope (U, L); each *candidate* ``c`` is checked against it.
+
+  H(c, q)            : projection of c onto the envelope of q   (Eq. 1)
+  LB_Keogh_p(c, q)   = || c - H(c, q) ||_p                      (Cor. 3)
+  LB_Improved_p(c,q)^p = LB_Keogh_p(c,q)^p
+                        + LB_Keogh_p(q, H(c,q))^p               (Cor. 4)
+
+Internally the cascade works with *powered* values (sum |.|^p, no root)
+so thresholds compare without transcendentals; public helpers return the
+rooted distance.  For p = inf, "powered" means the plain max.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dtw import PNorm, elem_cost, finish_cost
+from repro.core.envelope import envelope, envelope_batch
+
+
+def project(c: jax.Array, upper: jax.Array, lower: jax.Array) -> jax.Array:
+    """H(c, q): clamp candidate into the envelope of the query (Eq. 1)."""
+    return jnp.clip(c, lower, upper)
+
+
+def lb_keogh_powered(
+    c: jax.Array, upper: jax.Array, lower: jax.Array, p: PNorm = 1
+) -> jax.Array:
+    """sum_i |c_i - H(c,q)_i|^p (max for p=inf); broadcasts over leading dims."""
+    # distance to the envelope: (c - U)_+ + (L - c)_+ ; one side is 0
+    over = jnp.maximum(c - upper, 0.0)
+    under = jnp.maximum(lower - c, 0.0)
+    d = elem_cost(over + under, p)
+    if p == jnp.inf:
+        return jnp.max(d, axis=-1)
+    return jnp.sum(d, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def lb_keogh(
+    c: jax.Array, upper: jax.Array, lower: jax.Array, p: PNorm = 1
+) -> jax.Array:
+    return finish_cost(lb_keogh_powered(c, upper, lower, p), p)
+
+
+def lb_improved_powered(
+    c: jax.Array,
+    q: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    w: int,
+    p: PNorm = 1,
+) -> jax.Array:
+    """Two-pass powered bound for a single candidate (1-D arrays)."""
+    pass1 = lb_keogh_powered(c, upper, lower, p)
+    h = project(c, upper, lower)
+    hu, hl = envelope(h, w)
+    pass2 = lb_keogh_powered(q, hu, hl, p)
+    if p == jnp.inf:
+        return jnp.maximum(pass1, pass2)
+    return pass1 + pass2
+
+
+@functools.partial(jax.jit, static_argnames=("w", "p"))
+def lb_improved(
+    c: jax.Array, q: jax.Array, w: int, p: PNorm = 1
+) -> jax.Array:
+    upper, lower = envelope(q, w)
+    return finish_cost(lb_improved_powered(c, q, upper, lower, w, p), p)
+
+
+# ---------------------------------------------------------------- batched
+
+
+def lb_keogh_powered_batch(
+    cs: jax.Array, upper: jax.Array, lower: jax.Array, p: PNorm = 1
+) -> jax.Array:
+    """(B, n) candidates vs one envelope -> (B,) powered bounds."""
+    return lb_keogh_powered(cs, upper[None, :], lower[None, :], p)
+
+
+def lb_improved_powered_batch(
+    cs: jax.Array,
+    q: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    w: int,
+    p: PNorm = 1,
+) -> jax.Array:
+    """(B, n) candidates -> (B,) powered two-pass bounds (both passes)."""
+    pass1 = lb_keogh_powered_batch(cs, upper, lower, p)
+    h = project(cs, upper[None, :], lower[None, :])
+    hu, hl = envelope_batch(h, w)
+    d = elem_cost(
+        jnp.maximum(q[None, :] - hu, 0.0) + jnp.maximum(hl - q[None, :], 0.0), p
+    )
+    pass2 = jnp.max(d, axis=-1) if p == jnp.inf else jnp.sum(d, axis=-1)
+    if p == jnp.inf:
+        return jnp.maximum(pass1, pass2)
+    return pass1 + pass2

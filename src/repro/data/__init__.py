@@ -1,0 +1,24 @@
+from repro.data.pipeline import PipelineState, SyntheticTokenPipeline
+from repro.data.synthetic import (
+    DATASETS,
+    control_charts,
+    cylinder_bell_funnel,
+    random_walks,
+    shape_dataset,
+    wave_noise,
+    waveform,
+    white_noise,
+)
+
+__all__ = [
+    "DATASETS",
+    "PipelineState",
+    "SyntheticTokenPipeline",
+    "control_charts",
+    "cylinder_bell_funnel",
+    "random_walks",
+    "shape_dataset",
+    "wave_noise",
+    "waveform",
+    "white_noise",
+]

@@ -1,0 +1,191 @@
+"""Logical-axis sharding: one rules table maps model code onto any mesh.
+
+Model code never names mesh axes.  Params carry logical axis tuples
+(from PSpec); activations are annotated with ``constrain(x, *axes)``.
+``make_rules`` builds the table for a given (mesh, model, parallel
+config) — this is the single place where DP/FSDP/TP/SP/EP decisions
+live, and the main §Perf hillclimb surface.
+
+Default policy (v5e pod, DESIGN.md §5):
+
+  params   embed->data (ZeRO-3/FSDP)   ffn/heads/kv/vocab/expert->model (TP/EP)
+  acts     batch->(pod,data)           seq->model at layer boundaries (SP)
+           heads/vocab/expert->model
+
+``kv`` only shards when the head count divides the model-axis size; the
+KV *cache* falls back to sequence sharding otherwise (distributed
+flash-decode).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = tuple[str | None, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    table: Mapping[str, tuple[str, ...] | None]
+
+    def pspec(self, axes: Sequence[str | None]) -> P:
+        used: set[str] = set()
+        out = []
+        for ax in axes:
+            mesh_axes = self.table.get(ax) if ax is not None else None
+            if mesh_axes is None:
+                out.append(None)
+                continue
+            picked = tuple(a for a in mesh_axes if a not in used)
+            used.update(picked)
+            out.append(picked if len(picked) != 1 else picked[0])
+        return P(*out)
+
+    def sharding(self, axes: Sequence[str | None]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(axes))
+
+
+_local = threading.local()
+
+
+def set_rules(rules: ShardingRules | None) -> None:
+    _local.rules = rules
+
+
+def get_rules() -> ShardingRules | None:
+    return getattr(_local, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules):
+    prev = get_rules()
+    set_rules(rules)
+    try:
+        yield rules
+    finally:
+        set_rules(prev)
+
+
+def constrain(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Annotate activation sharding by logical axis names (no-op w/o rules)."""
+    rules = get_rules()
+    if rules is None:
+        return x
+    assert len(axes) == x.ndim, (axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, rules.sharding(axes))
+
+
+def shard_fit(sharding: NamedSharding, shape: tuple[int, ...]) -> NamedSharding:
+    """Drop mesh axes from dims they do not divide (e.g. batch=1 decode).
+
+    jit's explicit in_shardings require exact divisibility; this keeps
+    the intended sharding wherever legal and falls back to replication
+    per-dim otherwise.
+    """
+    mesh = sharding.mesh
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = sharding.spec
+    new = []
+    for dim, entry in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            new.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        keep: list[str] = []
+        div = 1
+        for a in axes:
+            if shape[dim] % (div * sizes[a]) == 0:
+                keep.append(a)
+                div *= sizes[a]
+        new.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    return NamedSharding(mesh, P(*new))
+
+
+def fit_tree(shardings, specs):
+    """shard_fit over parallel (sharding, ShapeDtypeStruct) trees."""
+    return jax.tree.map(
+        lambda sh, sp: shard_fit(sh, sp.shape),
+        shardings,
+        specs,
+        is_leaf=lambda x: isinstance(x, NamedSharding),
+    )
+
+
+def make_rules(
+    mesh: Mesh,
+    *,
+    n_kv_heads: int = 0,
+    n_heads: int = 0,
+    n_experts: int = 0,
+    seq_shard: bool = True,
+    shard_kv_cache_seq: bool = True,
+    fsdp: bool = True,
+    tensor_parallel: bool = True,
+) -> ShardingRules:
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = axis_sizes.get("model", 1)
+    data_axes = tuple(a for a in ("pod", "data") if a in axis_sizes)
+
+    if not tensor_parallel:
+        # pure-DP mode for small dense models (§Perf iteration S2): the
+        # "model" axis becomes extra data parallelism; params ZeRO-3
+        # shard over (data, model); no TP/SP collectives inside layers.
+        all_axes = data_axes + (("model",) if "model" in axis_sizes else ())
+        none_rules = {
+            k: None
+            for k in (
+                "layer", "cycle", "ffn", "heads", "kv", "q_dim", "kv_dim",
+                "vocab", "expert", "head_dim", "state", "conv", "inner",
+                "act_seq", "act_embed", "act_heads", "act_kv", "act_vocab",
+                "act_expert", "act_inner", "act_ffn", "act_cap", "act_none",
+            )
+        }
+        table = {
+            **none_rules,
+            "embed": all_axes if fsdp else None,
+            "act_batch": all_axes,
+            "act_cache_seq": None,
+        }
+        return ShardingRules(mesh=mesh, table=table)
+
+    def div(n: int) -> bool:
+        return n > 0 and n % model_n == 0
+
+    table: dict[str, tuple[str, ...] | None] = {
+        # ---- param dims
+        "layer": None,
+        "cycle": None,
+        "embed": ("data",) if fsdp else None,
+        "ffn": ("model",),
+        "heads": ("model",) if div(n_heads) else None,
+        "kv": ("model",) if div(n_kv_heads) else None,
+        "q_dim": ("model",),  # fused n_heads*d_head projections
+        "kv_dim": ("model",) if div(n_kv_heads) else None,
+        "vocab": ("model",),
+        "expert": ("model",) if div(n_experts) else None,
+        "head_dim": None,
+        "state": None,
+        "conv": None,
+        "inner": ("model",),  # ssm d_inner
+        # ---- activation dims
+        "act_batch": data_axes,
+        "act_seq": ("model",) if seq_shard else None,
+        "act_embed": None,
+        "act_heads": ("model",) if div(n_heads) else None,
+        "act_kv": ("model",) if div(n_kv_heads) else None,
+        "act_vocab": ("model",),
+        "act_expert": ("model",) if div(n_experts) else None,
+        "act_inner": ("model",),
+        "act_ffn": ("model",),
+        "act_cap": None,
+        "act_cache_seq": ("model",) if shard_kv_cache_seq else None,
+        "act_none": None,
+    }
+    return ShardingRules(mesh=mesh, table=table)

@@ -1,0 +1,41 @@
+"""Pallas TPU kernels for the paper's three compute hot-spots.
+
+The paper's retrieval loop spends its time in exactly three places —
+envelope construction, the LB_Keogh pass, and the banded DTW DP — and
+optimizes each (Algorithm 1, Algorithm 2/3, the O(nw) DP).  Each gets a
+TPU kernel here, with the layout rethought for VMEM/VPU execution
+(DESIGN.md §3):
+
+* ``envelope``    — van Herk–Gil–Werman sliding min/max (replaces the
+  sequential deque of the paper's Algorithm 1).
+* ``lb_keogh``    — fused clamp-project-accumulate; emits the powered bound
+  AND the projection H(c, q) in one VMEM pass (feeds LB_Improved pass 2).
+* ``lb_improved`` — fused pass 2: envelope of the projection + second
+  accumulation in one VMEM pass (the two-pass contribution itself).
+* ``dtw``         — banded DP with the loop-carried band row resident in
+  VMEM; within-row recurrence solved by cumsum+cummin doubling.
+
+Kernels are validated in interpret mode against the pure-jnp oracles in
+each ``ref.py`` (which are in turn validated against numpy DPs).
+"""
+
+from repro.kernels.dtw import dtw_op, dtw_ref
+from repro.kernels.envelope import envelope_op, envelope_ref
+from repro.kernels.lb_improved import (
+    lb_improved_op,
+    lb_improved_pass2_op,
+    lb_improved_ref,
+)
+from repro.kernels.lb_keogh import lb_keogh_op, lb_keogh_ref
+
+__all__ = [
+    "dtw_op",
+    "dtw_ref",
+    "envelope_op",
+    "envelope_ref",
+    "lb_improved_op",
+    "lb_improved_pass2_op",
+    "lb_improved_ref",
+    "lb_keogh_op",
+    "lb_keogh_ref",
+]

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: banded DTW_p dynamic program.
+
+One grid step computes DTW_p(q, c) for a single candidate.  The DP runs
+row-by-row; the loop-carried band row (width 2w+1) lives in VMEM/VREGs
+for the whole computation, so HBM traffic is exactly the two input
+series.  The within-row (min,+) recurrence is solved in closed form with
+one cumsum + one cummin (Hillis-Steele doubling — log2(W) vector steps),
+the same restructuring as repro.core.dtw.dtw_banded (DESIGN.md §3).
+
+Layout notes:
+* the candidate arrives pre-padded with PAD_VALUE sentinels on both sides
+  (length n + 2w) so each row's cost slice ``ypad[i : i + 2w + 1]`` is a
+  contiguous dynamic slice — no gathers;
+* validity of a band cell is derived from a static iota against the
+  dynamic row index, all (1, W)-shaped (Mosaic wants >= 2-D);
+* supports p in {1, 2} (the cascade's fast path); other p values use the
+  pure-jnp path in repro.core.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import BIG, cummin_doubling, cumsum_doubling
+
+
+def _dtw_kernel(q_ref, ypad_ref, out_ref, *, n: int, w: int, p):
+    width = 2 * w + 1
+    ks = jax.lax.broadcasted_iota(jnp.int32, (1, width), 1)  # band offset k
+
+    prev0 = jnp.full((1, width), BIG, jnp.float32).at[0, w].set(0.0)
+
+    def row(i, prev):
+        yrow = ypad_ref[0, pl.ds(i, width)].reshape(1, width)
+        qi = q_ref[0, i]
+        diff = jnp.abs(qi - yrow)
+        cost = diff if p == 1 else diff * diff
+        j = i + ks - w  # column index of each band cell
+        valid = (j >= 0) & (j < n)
+        cost_sum = jnp.where(valid, cost, 0.0)
+
+        up = jnp.concatenate(
+            [prev[:, 1:], jnp.full((1, 1), BIG, jnp.float32)], axis=1
+        )
+        b = jnp.minimum(up, prev)
+        s = cumsum_doubling(cost_sum, axis=1)
+        t = jnp.where(valid, b + cost_sum - s, BIG)
+        new = jnp.minimum(s + cummin_doubling(t, axis=1), BIG)
+        return jnp.where(valid, new, BIG)
+
+    last = jax.lax.fori_loop(0, n, row, prev0)
+    out_ref[0, 0] = last[0, w]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "w", "p", "interpret"))
+def dtw_banded_pallas(
+    q: jax.Array,
+    cands_pad: jax.Array,
+    n: int,
+    w: int,
+    p=1,
+    interpret: bool = True,
+):
+    """q (1, n); cands_pad (B, n + 2w) sentinel-padded -> powered DTW (B,)."""
+    b = cands_pad.shape[0]
+    width = 2 * w + 1
+    kern = functools.partial(_dtw_kernel, n=n, w=w, p=p)
+    out = pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n + 2 * w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        interpret=interpret,
+    )(q, cands_pad)
+    return out[:, 0]

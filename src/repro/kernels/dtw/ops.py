@@ -1,0 +1,33 @@
+"""Public wrapper for the banded DTW kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dtw import finish_cost
+from repro.kernels.common import PAD_VALUE, interpret_default
+from repro.kernels.dtw.kernel import dtw_banded_pallas
+
+
+def dtw_op(
+    q: jax.Array,
+    cands: jax.Array,
+    w: int,
+    p=1,
+    powered: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """DTW_p of query (n,) against candidates (B, n) via the TPU kernel."""
+    if interpret is None:
+        interpret = interpret_default()
+    if p not in (1, 2):
+        raise ValueError("kernel fast path supports p in {1, 2}")
+    q = jnp.asarray(q, jnp.float32)
+    cands = jnp.asarray(cands, jnp.float32)
+    b, n = cands.shape
+    w = int(min(w, n - 1))
+    pad = jnp.full((b, w), PAD_VALUE, jnp.float32)
+    cands_pad = jnp.concatenate([pad, cands, pad], axis=1)
+    out = dtw_banded_pallas(q[None, :], cands_pad, n, w, p, interpret)
+    return out if powered else finish_cost(out, p)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the DTW kernel (itself validated against the
+O(n^2) numpy DP ``repro.core.dtw.dtw_reference`` in the test-suite)."""
+
+from repro.core.dtw import dtw_batch, dtw_reference  # noqa: F401
+
+
+def dtw_ref(q, cands, w: int, p=1, powered: bool = False):
+    return dtw_batch(q, cands, w, p, powered)

@@ -1,0 +1,4 @@
+from repro.kernels.envelope.ops import envelope_op
+from repro.kernels.envelope.ref import envelope_ref
+
+__all__ = ["envelope_op", "envelope_ref"]

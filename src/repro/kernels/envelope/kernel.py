@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: warping envelope via van Herk–Gil–Werman.
+
+One grid step processes a tile of ``tile_b`` series resident in VMEM and
+emits both U and L.  The sliding max/min of window 2w+1 is computed with
+per-block prefix/suffix scans (Hillis-Steele doubling, log2(W) vector
+ops) — the TPU-native replacement for the paper's sequential deque
+(DESIGN.md §3).
+
+Layout: the wrapper pads each series to ``nblocks * (2w+1)`` twice — once
+with -BIG sentinels (max pass) and once with +BIG (min pass) — so the
+kernel is completely branch-free.  Both passes run fused in one
+pallas_call: the inputs share the VMEM tile and the scans share the
+instruction schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import cummax_doubling, cummin_doubling
+
+
+def _envelope_kernel(xmax_ref, xmin_ref, u_ref, l_ref, *, w: int, n: int):
+    win = 2 * w + 1
+    xmax = xmax_ref[...]  # (tile_b, nblocks * win), -BIG padded
+    xmin = xmin_ref[...]  # (tile_b, nblocks * win), +BIG padded
+    tile_b = xmax.shape[0]
+    nblocks = xmax.shape[1] // win
+
+    bmax = xmax.reshape(tile_b * nblocks, win)
+    bmin = xmin.reshape(tile_b * nblocks, win)
+
+    pref_max = cummax_doubling(bmax, axis=1).reshape(tile_b, nblocks * win)
+    suff_max = cummax_doubling(bmax[:, ::-1], axis=1)[:, ::-1].reshape(
+        tile_b, nblocks * win
+    )
+    pref_min = cummin_doubling(bmin, axis=1).reshape(tile_b, nblocks * win)
+    suff_min = cummin_doubling(bmin[:, ::-1], axis=1)[:, ::-1].reshape(
+        tile_b, nblocks * win
+    )
+
+    # window i covers padded positions [i, i + win - 1]
+    u_ref[...] = jnp.maximum(suff_max[:, :n], pref_max[:, win - 1 : win - 1 + n])
+    l_ref[...] = jnp.minimum(suff_min[:, :n], pref_min[:, win - 1 : win - 1 + n])
+
+
+@functools.partial(jax.jit, static_argnames=("w", "n", "tile_b", "interpret"))
+def envelope_pallas_padded(
+    xpad_max: jax.Array,
+    xpad_min: jax.Array,
+    w: int,
+    n: int,
+    tile_b: int = 8,
+    interpret: bool = True,
+):
+    """Inputs (B, nblocks*(2w+1)) sentinel-padded; returns (U, L) each (B, n)."""
+    b, total = xpad_max.shape
+    win = 2 * w + 1
+    if total % win:
+        raise ValueError(f"padded length {total} not a multiple of window {win}")
+    if b % tile_b:
+        raise ValueError(f"batch {b} not a multiple of tile_b {tile_b}")
+    grid = (b // tile_b,)
+    kern = functools.partial(_envelope_kernel, w=w, n=n)
+    u, l = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, total), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, total), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), xpad_max.dtype),
+            jax.ShapeDtypeStruct((b, n), xpad_max.dtype),
+        ],
+        interpret=interpret,
+    )(xpad_max, xpad_min)
+    return u, l

@@ -1,0 +1,40 @@
+"""Jit-friendly public wrapper for the envelope Pallas kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import BIG, interpret_default, round_up
+from repro.kernels.envelope.kernel import envelope_pallas_padded
+
+
+def envelope_op(
+    xs: jax.Array, w: int, tile_b: int = 8, interpret: bool | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Batched warping envelope (U, L) of ``xs`` (B, n) via the TPU kernel.
+
+    Handles sentinel padding, window-multiple rounding and batch tiling;
+    the kernel itself is branch-free.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    xs = jnp.asarray(xs)
+    b, n = xs.shape
+    w = int(min(w, n - 1))
+    if w == 0:
+        return xs, xs
+    win = 2 * w + 1
+    total = round_up(n + 2 * w, win)
+    bp = round_up(b, tile_b)
+
+    def padded(fill):
+        lo = jnp.full((bp, w), fill, xs.dtype)
+        hi = jnp.full((bp, total - n - w), fill, xs.dtype)
+        body = jnp.pad(xs, ((0, bp - b), (0, 0)), constant_values=fill)
+        return jnp.concatenate([lo, body, hi], axis=1)
+
+    u, l = envelope_pallas_padded(
+        padded(-BIG), padded(BIG), w, n, tile_b, interpret
+    )
+    return u[:b], l[:b]

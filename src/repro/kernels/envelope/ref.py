@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the envelope kernel (validated vs numpy in tests)."""
+
+from repro.core.envelope import envelope_batch
+
+
+def envelope_ref(xs, w: int):
+    """(B, n) -> (U, L), each (B, n)."""
+    return envelope_batch(xs, w)

@@ -1,0 +1,57 @@
+"""Public wrapper: full two-pass LB_Improved via the fused kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import BIG, interpret_default, round_up
+from repro.kernels.lb_improved.kernel import lb_improved_pass2_pallas
+from repro.kernels.lb_keogh.ops import lb_keogh_op
+
+
+def lb_improved_pass2_op(
+    h: jax.Array,
+    q: jax.Array,
+    w: int,
+    p=1,
+    tile_b: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Second term of Corollary 4: LB_Keogh(q, H)^p for projections h (B, n)."""
+    if interpret is None:
+        interpret = interpret_default()
+    h = jnp.asarray(h)
+    b, n = h.shape
+    w = int(min(w, n - 1))
+    win = 2 * w + 1
+    total = round_up(n + 2 * w, win)
+    bp = round_up(b, tile_b)
+
+    def padded(fill):
+        lo = jnp.full((bp, w), fill, h.dtype)
+        hi = jnp.full((bp, total - n - w), fill, h.dtype)
+        body = jnp.pad(h, ((0, bp - b), (0, 0)), constant_values=fill)
+        return jnp.concatenate([lo, body, hi], axis=1)
+
+    lb2 = lb_improved_pass2_pallas(
+        padded(-BIG), padded(BIG), jnp.asarray(q), w, n, p, tile_b, interpret
+    )
+    return lb2[:b]
+
+
+def lb_improved_op(
+    cands: jax.Array,
+    q: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    w: int,
+    p=1,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Full powered LB_Improved for a candidate batch, kernel end to end:
+    pass 1 (fused clamp-project-accumulate) feeds its projection straight
+    into pass 2 (fused envelope-accumulate)."""
+    lb1, h = lb_keogh_op(cands, upper, lower, p, interpret=interpret)
+    lb2 = lb_improved_pass2_op(h, q, w, p, interpret=interpret)
+    return lb1 + lb2

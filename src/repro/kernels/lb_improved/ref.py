@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the fused LB_Improved kernels."""
+
+from repro.core.lb import lb_improved_powered_batch
+
+
+def lb_improved_ref(cands, q, upper, lower, w: int, p=1):
+    return lb_improved_powered_batch(cands, q, upper, lower, w, p)

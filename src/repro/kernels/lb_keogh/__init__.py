@@ -1,0 +1,4 @@
+from repro.kernels.lb_keogh.ops import lb_keogh_op
+from repro.kernels.lb_keogh.ref import lb_keogh_ref
+
+__all__ = ["lb_keogh_op", "lb_keogh_ref"]

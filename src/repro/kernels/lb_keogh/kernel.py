@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: fused LB_Keogh — clamp-project-accumulate.
+
+For a tile of candidates resident in VMEM this computes, in one pass over
+the data (paper Algorithm 2 lines 7-12 + Algorithm 3's projection):
+
+    over  = max(c - U, 0);  under = max(L - c, 0)
+    lb    = sum_i (over + under)^p          (powered LB_Keogh)
+    H     = clip(c, L, U)                   (projection, Eq. 1)
+
+Emitting both lb and H in the same kernel is what makes the two-pass
+LB_Improved cheap: pass 2 re-uses H without another sweep through HBM.
+The query envelope (U, L) is broadcast to every grid step; candidates
+stream through VMEM tile by tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lb_keogh_kernel(c_ref, u_ref, l_ref, lb_ref, h_ref, *, p):
+    c = c_ref[...]  # (tile_b, n)
+    u = u_ref[...]  # (1, n)
+    l = l_ref[...]
+    over = jnp.maximum(c - u, 0.0)
+    under = jnp.maximum(l - c, 0.0)
+    d = over + under  # one side is always 0
+    if p == 1:
+        cost = d
+    elif p == 2:
+        cost = d * d
+    else:
+        cost = d**p
+    lb_ref[...] = jnp.sum(cost, axis=1, keepdims=True)
+    h_ref[...] = jnp.clip(c, l, u)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "tile_b", "interpret"))
+def lb_keogh_pallas(
+    cands: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    p=1,
+    tile_b: int = 8,
+    interpret: bool = True,
+):
+    """cands (B, n), envelope (n,) -> (lb (B,), H (B, n)); B % tile_b == 0."""
+    b, n = cands.shape
+    if b % tile_b:
+        raise ValueError(f"batch {b} not a multiple of tile_b {tile_b}")
+    grid = (b // tile_b,)
+    kern = functools.partial(_lb_keogh_kernel, p=p)
+    lb, h = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 1), cands.dtype),
+            jax.ShapeDtypeStruct((b, n), cands.dtype),
+        ],
+        interpret=interpret,
+    )(cands, upper[None, :], lower[None, :])
+    return lb[:, 0], h

@@ -1,0 +1,29 @@
+"""Public wrapper for the fused LB_Keogh kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default, round_up
+from repro.kernels.lb_keogh.kernel import lb_keogh_pallas
+
+
+def lb_keogh_op(
+    cands: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    p=1,
+    tile_b: int = 8,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Powered LB_Keogh + projection H for a candidate batch (B, n)."""
+    if interpret is None:
+        interpret = interpret_default()
+    cands = jnp.asarray(cands)
+    b, n = cands.shape
+    bp = round_up(b, tile_b)
+    if bp != b:
+        cands = jnp.pad(cands, ((0, bp - b), (0, 0)))
+    lb, h = lb_keogh_pallas(cands, upper, lower, p, tile_b, interpret)
+    return lb[:b], h[:b]

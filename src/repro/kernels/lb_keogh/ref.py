@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused LB_Keogh kernel."""
+
+import jax.numpy as jnp
+
+from repro.core.lb import lb_keogh_powered_batch, project
+
+
+def lb_keogh_ref(cands, upper, lower, p=1):
+    lb = lb_keogh_powered_batch(cands, upper, lower, p)
+    h = project(cands, upper[None, :], lower[None, :])
+    return lb, h

@@ -1,0 +1,80 @@
+"""Per-cell parallelism policy: (arch, shape, mesh) -> ParallelConfig + optimizer.
+
+This is the tuning table the §Perf hillclimb edits.  Defaults follow the
+napkin math in EXPERIMENTS.md §Dry-run: microbatch sized for ~8-16k
+tokens per data shard per microbatch, chunked loss for vocab >= 64k,
+bf16 params + Adafactor for the >=100B models (optimizer state must fit
+16 GB/chip), AdamW with bf16 moments in between.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.optim import OptimizerConfig
+
+BIG_MODEL_PARAMS = 50e9
+
+
+def parallel_for_cell(
+    cfg: ModelConfig, shape: ShapeConfig, n_params: int, data_shards: int
+) -> ParallelConfig:
+    if shape.kind != "train":
+        # §Perf iteration D1: serving params that fit replicated over the
+        # data axis (sharded over "model" only) skip the per-token FSDP
+        # all-gather entirely; >=20B models keep ZeRO-3 sharding.
+        return ParallelConfig(
+            microbatch=0,
+            remat="none",
+            fsdp=n_params > 20e9,  # replicated-over-data bf16 params <= ~2.5GB/chip
+            seq_shard_activations=shape.seq_len >= 16_384,
+            shard_kv_cache_seq=True,
+            loss_chunk=0,
+            param_dtype="bfloat16",
+            compute_dtype="bfloat16",
+        )
+    big = n_params >= BIG_MODEL_PARAMS
+    # §Perf iteration S2 (validated on stablelm train_4k: collective
+    # bytes 6.3e12 -> 3.2e10/device): models small enough to ZeRO-3 on
+    # 256 chips train pure-DP — the "model" axis becomes extra data
+    # parallelism and all TP/SP collectives disappear.
+    # (huge-vocab models excluded: measured 1.6x collective REGRESSION on
+    # gemma3-4b — replicated 262k-vocab tables make embedding/head grads
+    # the dominant all-reduce; they keep vocab-sharded TP)
+    pure_dp = cfg.moe is None and n_params < 10e9 and cfg.vocab_padded <= 66_000
+    if pure_dp:
+        data_shards = data_shards * 16  # model axis folded into DP
+    per_shard_seqs = max(shape.global_batch // data_shards, 1)
+    tokens_per_shard = per_shard_seqs * shape.seq_len
+    # §Perf iteration A2: fewer microbatches amortise FSDP gathers; 16k
+    # tokens/shard/microbatch fits with remat for every assigned model.
+    micro = max(1, min(per_shard_seqs, tokens_per_shard // 16_384))
+    loss_chunk = 65_536 if cfg.vocab_size >= 64_000 else 0
+    return ParallelConfig(
+        microbatch=micro,
+        remat="full",
+        tensor_parallel=not pure_dp,
+        # §Perf iteration A3: SP's per-layer seq<->full reshards dominate
+        # MoE cells' collectives; activations stay batch-sharded there.
+        seq_shard_activations=not pure_dp and cfg.moe is None,
+        shard_kv_cache_seq=True,
+        loss_chunk=loss_chunk,
+        param_dtype="bfloat16" if big else "float32",
+        compute_dtype="bfloat16",
+        optimizer="adafactor" if big else "adamw",
+        moment_dtype="bfloat16" if n_params >= 5e9 else "float32",
+    )
+
+
+def optimizer_for_cell(cfg: ModelConfig, parallel: ParallelConfig, n_params: int):
+    return OptimizerConfig(
+        kind=parallel.optimizer,
+        lr=3e-4,
+        moment_dtype=parallel.moment_dtype,
+    )
+
+
+def apply_overrides(parallel: ParallelConfig, overrides: dict) -> ParallelConfig:
+    """CLI/tuning overrides, e.g. {"microbatch": 4, "remat": "dots"}."""
+    return dataclasses.replace(parallel, **overrides)

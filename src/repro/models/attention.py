@@ -1,0 +1,251 @@
+"""Attention substrate: GQA full / flash / banded-local / decode paths.
+
+Layout convention: (B, T, H, d_head) everywhere.  GQA is computed grouped
+— q reshaped to (B, T, Hkv, G, dh) so kv heads are never materialised
+G-fold.
+
+Three execution paths, chosen statically (window sizes are static per
+layer — DESIGN.md: the window pattern is compiled into layer groups):
+
+* ``full_attention``   — materialised scores; used for short T.
+* ``flash_attention``  — scan over q chunks; global layers run an inner
+  online-softmax scan over kv chunks; *windowed* layers instead slice a
+  static-width kv band per q chunk (banded attention — the same tiling
+  idea as the banded DTW kernel), so local-attention FLOPs scale with
+  window, not T^2.
+* ``decode_attention`` — single-position q against a (possibly
+  sequence-sharded) KV cache.
+
+All softmax statistics are fp32 regardless of compute dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def _split_gqa(q: jax.Array, n_kv: int) -> jax.Array:
+    b, t, h, d = q.shape
+    return q.reshape(b, t, n_kv, h // n_kv, d)
+
+
+def _mask_bias(
+    q_pos: jax.Array, kv_pos: jax.Array, causal: bool, window: int
+) -> jax.Array:
+    """(Tq, Tkv) additive bias; kv_pos may contain negatives (banding pad)."""
+    ok = kv_pos[None, :] >= 0
+    if causal:
+        ok &= kv_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= (q_pos[:, None] - kv_pos[None, :]) < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def full_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Materialised-scores path. q (B,Tq,Hq,dh); k,v (B,Tkv,Hkv,dh)."""
+    b, tq, hq, dh = q.shape
+    tkv, hkv = k.shape[1], k.shape[2]
+    qg = _split_gqa(q, hkv)
+    scale = dh**-0.5
+    s = jnp.einsum(
+        "btkgd,bskd->bkgts",
+        qg.astype(k.dtype) * jnp.asarray(scale, k.dtype),
+        k,
+        preferred_element_type=jnp.float32,
+    )
+    q_pos = q_offset + jnp.arange(tq)
+    kv_pos = jnp.arange(tkv)
+    s = s + _mask_bias(q_pos, kv_pos, causal, window)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", p.astype(v.dtype), v)
+    return out.reshape(b, tq, hq, dh)
+
+
+def _online_chunk(acc, m, l, s, v_chunk):
+    """Online-softmax update: s (B,K,G,cq,ckv) fp32, v (B,ckv,K,dh)."""
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l = l * alpha + jnp.sum(p, axis=-1)
+    pv = jnp.einsum(
+        "bkgts,bskd->bkgtd",
+        p.astype(v_chunk.dtype),
+        v_chunk,
+        preferred_element_type=jnp.float32,
+    )
+    acc = acc * alpha[..., None] + pv
+    return acc, m_new, l
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    chunk_q: int = 512,
+    chunk_kv: int = 512,
+) -> jax.Array:
+    """Chunked attention; memory O(chunk^2), FLOPs O(T*window) when local."""
+    b, tq, hq, dh = q.shape
+    tkv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = dh**-0.5
+
+    cq = min(chunk_q, tq)
+    pad_q = (-tq) % cq
+    nq = (tq + pad_q) // cq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    q_chunks = q.reshape(b, nq, cq, hq, dh).transpose(1, 0, 2, 3, 4)
+
+    if window > 0:
+        # static-width banded path: q chunk i attends kv[band_start, +band)
+        band = window - 1 + cq
+        band = min(-(-band // 128) * 128, tkv)
+
+        @jax.checkpoint  # flash-style bwd: recompute band scores, never save p
+        def q_step(_, inp):
+            qc, qstart = inp
+            start = jnp.clip(qstart + cq - band, 0, max(tkv - band, 0))
+            kb = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            qg = _split_gqa(qc, hkv).astype(kb.dtype) * jnp.asarray(
+                scale, kb.dtype
+            )
+            s = jnp.einsum(
+                "btkgd,bskd->bkgts", qg, kb, preferred_element_type=jnp.float32
+            )
+            q_pos = q_offset + qstart + jnp.arange(cq)
+            kv_pos = start + jnp.arange(band)
+            s = s + _mask_bias(q_pos, kv_pos, causal, window)
+            p = jax.nn.softmax(s, axis=-1)
+            out = jnp.einsum("bkgts,bskd->btkgd", p.astype(v.dtype), vb)
+            return None, out.reshape(b, cq, hq, dh)
+
+        _, outs = jax.lax.scan(
+            q_step, None, (q_chunks, jnp.arange(nq) * cq)
+        )
+    else:
+        ckv = min(chunk_kv, tkv)
+        pad_kv = (-tkv) % ckv
+        nkv = (tkv + pad_kv) // ckv
+        kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        k_chunks = kp.reshape(b, nkv, ckv, hkv, dh).transpose(1, 0, 2, 3, 4)
+        v_chunks = vp.reshape(b, nkv, ckv, hkv, dh).transpose(1, 0, 2, 3, 4)
+
+        def q_step(_, inp):
+            qc, qstart = inp
+            qg = _split_gqa(qc, hkv).astype(k.dtype) * jnp.asarray(scale, k.dtype)
+            q_pos = q_offset + qstart + jnp.arange(cq)
+
+            @jax.checkpoint  # flash-style bwd: per-chunk p recomputed, not saved
+            def kv_step(carry, kv_inp):
+                acc, m, l = carry
+                kc, vc, kvstart = kv_inp
+                s = jnp.einsum(
+                    "btkgd,bskd->bkgts", qg, kc, preferred_element_type=jnp.float32
+                )
+                kv_pos = kvstart + jnp.arange(ckv)
+                kv_valid = kv_pos < tkv
+                bias = _mask_bias(q_pos, kv_pos, causal, window)
+                bias = jnp.where(kv_valid[None, :], bias, NEG_INF)
+                acc, m, l = _online_chunk(acc, m, l, s + bias, vc)
+                return (acc, m, l), None
+
+            acc0 = jnp.zeros((b, hkv, g, cq, dh), jnp.float32)
+            m0 = jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+            (acc, m, l), _ = jax.lax.scan(
+                kv_step, (acc0, m0, l0), (k_chunks, v_chunks, jnp.arange(nkv) * ckv)
+            )
+            out = acc / jnp.maximum(l[..., None], 1e-30)
+            out = out.transpose(0, 3, 1, 2, 4).reshape(b, cq, hq, dh)
+            return None, out.astype(v.dtype)
+
+        _, outs = jax.lax.scan(q_step, None, (q_chunks, jnp.arange(nq) * cq))
+
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nq * cq, hq, dh)
+    return out[:, :tq]
+
+
+def attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    flash_threshold: int = 1024,
+    chunk_q: int = 512,
+    chunk_kv: int = 512,
+):
+    """Dispatch: full path for short sequences, chunked beyond."""
+    if k.shape[1] <= flash_threshold and window == 0:
+        return full_attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    return flash_attention(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        chunk_q=chunk_q, chunk_kv=chunk_kv,
+    )
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    *,
+    window: int = 0,
+    kv_pos: jax.Array | None = None,
+) -> jax.Array:
+    """One-token decode. q (B,1,Hq,dh); caches (B,Tc,Hkv,dh); pos scalar.
+
+    ``kv_pos`` gives the absolute position held in each cache slot (ring
+    caches for windowed layers pass pos - ((pos - j) % Tc)); default is
+    the identity layout.  The cache may be sequence-sharded over the
+    "model" mesh axis; the masked softmax below then lowers to a
+    distributed flash-decode (all-reduce of max/sum stats) under GSPMD.
+    """
+    b, _, hq, dh = q.shape
+    tc, hkv = k_cache.shape[1], k_cache.shape[2]
+    qg = _split_gqa(q, hkv).astype(k_cache.dtype) * jnp.asarray(
+        dh**-0.5, k_cache.dtype
+    )
+    s = jnp.einsum(
+        "btkgd,bskd->bkgts", qg, k_cache, preferred_element_type=jnp.float32
+    )
+    if kv_pos is None:
+        kv_pos = jnp.arange(tc)
+    ok = (kv_pos <= pos) & (kv_pos >= 0)
+    if window > 0:
+        ok &= (pos - kv_pos) < window
+    s = jnp.where(ok[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgts,bskd->btkgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, 1, hq, dh).astype(v_cache.dtype)
+
+
+def ring_kv_pos(pos: jax.Array, cache_len: int) -> jax.Array:
+    """Absolute position stored in each ring-cache slot at decode step ``pos``."""
+    j = jnp.arange(cache_len)
+    return pos - ((pos - j) % cache_len)

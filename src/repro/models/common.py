@@ -1,0 +1,149 @@
+"""Model substrate: param specs, init, norms, RoPE, logical axes.
+
+Params are plain nested dicts of jax.Arrays.  Every model family defines
+a flat ``{path: PSpec}`` table — the single source of truth for shapes,
+initializers and *logical sharding axes*.  ``init_from_specs`` builds the
+param tree; ``axes_from_specs`` builds a parallel tree of logical-axis
+tuples that ``repro.distributed.sharding`` maps onto the mesh.
+
+Logical axis vocabulary (mapped to mesh axes by sharding rules):
+
+  layer    — stacked-scan layer dim (never sharded)
+  embed    — d_model           (FSDP: sharded over "data")
+  ffn      — MLP hidden        (TP:   sharded over "model")
+  heads    — query heads       (TP:   "model")
+  kv       — kv heads          (TP:   "model" when divisible)
+  vocab    — vocabulary        (TP:   "model")
+  expert   — MoE experts       (EP:   "model")
+  dconv/state/head_dim/... — never sharded
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | embed
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _nest(flat: dict[str, object]) -> dict:
+    tree: dict = {}
+    for path, leaf in flat.items():
+        parts = path.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return tree
+
+
+def init_from_specs(
+    specs: dict[str, PSpec], key: jax.Array, dtype=jnp.float32
+) -> dict:
+    flat = {}
+    keys = jax.random.split(key, max(len(specs), 1))
+    for (path, spec), k in zip(sorted(specs.items()), keys):
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, dtype)
+        elif spec.init == "normal":
+            arr = spec.scale * jax.random.normal(k, spec.shape, dtype)
+        elif spec.init == "embed":
+            arr = jax.random.normal(k, spec.shape, dtype)
+        else:  # fan_in truncated normal
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            std = spec.scale / math.sqrt(max(fan_in, 1))
+            arr = std * jax.random.truncated_normal(k, -3.0, 3.0, spec.shape, dtype)
+        flat[path] = arr
+    return _nest(flat)
+
+
+def abstract_from_specs(specs: dict[str, PSpec], dtype=jnp.float32) -> dict:
+    """ShapeDtypeStruct tree (for dry-run lowering without allocation)."""
+    return _nest(
+        {p: jax.ShapeDtypeStruct(s.shape, dtype) for p, s in specs.items()}
+    )
+
+
+def axes_from_specs(specs: dict[str, PSpec]) -> dict:
+    return _nest({p: s.axes for p, s in specs.items()})
+
+
+def param_count(specs: dict[str, PSpec]) -> int:
+    return int(sum(np.prod(s.shape) for s in specs.values()))
+
+
+# ------------------------------------------------------------------ norms
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + gamma.astype(jnp.float32)) + beta.astype(jnp.float32)).astype(dt)
+
+
+# ------------------------------------------------------------------- rope
+
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, d_head); positions: (..., T)."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)  # (d_head/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,T,1,dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mask_padded_logits(logits: jax.Array, vocab_size: int) -> jax.Array:
+    """-inf the ids beyond the true vocab (tables are padded to x512)."""
+    vp = logits.shape[-1]
+    if vp == vocab_size:
+        return logits
+    ids = jnp.arange(vp)
+    return jnp.where(ids < vocab_size, logits, jnp.asarray(-1e30, logits.dtype))
+
+
+# ------------------------------------------------------------- activations
+
+
+def act_fn(name: str) -> Callable[[jax.Array], jax.Array]:
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]

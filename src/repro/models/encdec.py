@@ -1,0 +1,238 @@
+"""Whisper-style encoder-decoder backbone (whisper-small).
+
+Per the assignment, the conv/audio frontend is a **stub**: the encoder
+consumes precomputed frame embeddings (B, T_enc, d) supplied in the
+batch (``input_specs`` provides them).  Encoder layers are bidirectional
+full attention; decoder layers are causal self-attention + cross-
+attention into the encoder output.  LayerNorm (the family's norm) is
+used throughout.
+
+Decode: the decoder self-KV cache grows with generated tokens; the
+cross-attention K/V are computed once from the encoder output at prefill
+and live in the cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_mod
+from repro.models.common import PSpec, apply_rope, layer_norm, mask_padded_logits
+from repro.models.ffn import ffn_apply, ffn_specs
+
+
+def _proj_specs(prefix, d, n_heads, n_kv, dh, lead):
+    ls = tuple(n for n, _ in lead)
+    la = tuple(a for _, a in lead)
+    return {
+        f"{prefix}/wq": PSpec(ls + (d, n_heads * dh), la + ("embed", "q_dim")),
+        f"{prefix}/wk": PSpec(ls + (d, n_kv * dh), la + ("embed", "kv_dim")),
+        f"{prefix}/wv": PSpec(ls + (d, n_kv * dh), la + ("embed", "kv_dim")),
+        f"{prefix}/wo": PSpec(ls + (n_heads * dh, d), la + ("q_dim", "embed")),
+    }
+
+
+def _ln_specs(prefix, d, lead):
+    ls = tuple(n for n, _ in lead)
+    la = tuple(a for _, a in lead)
+    return {
+        f"{prefix}/g": PSpec(ls + (d,), la + ("embed",), init="zeros"),
+        f"{prefix}/b": PSpec(ls + (d,), la + ("embed",), init="zeros"),
+    }
+
+
+def build_specs(cfg: ModelConfig) -> dict[str, PSpec]:
+    d, v = cfg.d_model, cfg.vocab_padded
+    specs = {
+        "embed/tok": PSpec((v, d), ("vocab", "embed"), init="embed"),
+        "lm_head": PSpec((d, v), ("embed", "vocab")),
+    }
+    enc_lead = ((cfg.encoder_layers, "layer"),)
+    dec_lead = ((cfg.n_layers, "layer"),)
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    specs.update(_proj_specs("enc/attn", d, h, kv, dh, enc_lead))
+    specs.update(ffn_specs("enc/ffn", d, cfg.d_ff, cfg.ffn_gated, enc_lead))
+    specs.update(_ln_specs("enc/ln1", d, enc_lead))
+    specs.update(_ln_specs("enc/ln2", d, enc_lead))
+    specs.update(_ln_specs("enc_final", d, ()))
+    specs.update(_proj_specs("dec/self", d, h, kv, dh, dec_lead))
+    specs.update(_proj_specs("dec/cross", d, h, kv, dh, dec_lead))
+    specs.update(ffn_specs("dec/ffn", d, cfg.d_ff, cfg.ffn_gated, dec_lead))
+    specs.update(_ln_specs("dec/ln1", d, dec_lead))
+    specs.update(_ln_specs("dec/ln2", d, dec_lead))
+    specs.update(_ln_specs("dec/ln3", d, dec_lead))
+    specs.update(_ln_specs("dec_final", d, ()))
+    return specs
+
+
+def _tree_at(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecLM:
+    cfg: ModelConfig
+    parallel: ParallelConfig
+
+    @property
+    def _cdtype(self):
+        return jnp.dtype(self.parallel.compute_dtype)
+
+    def _ln(self, p, x):
+        return layer_norm(x, p["g"], p["b"], self.cfg.norm_eps)
+
+    def _qkv(self, p, xq, xkv, rope_pos=None):
+        cfg = self.cfg
+        b, tq, _ = xq.shape
+        tk = xkv.shape[1]
+        q = jnp.einsum("btd,dq->btq", xq, p["wq"].astype(xq.dtype))
+        k = jnp.einsum("btd,dq->btq", xkv, p["wk"].astype(xq.dtype))
+        v = jnp.einsum("btd,dq->btq", xkv, p["wv"].astype(xq.dtype))
+        q = q.reshape(b, tq, cfg.n_heads, cfg.d_head)
+        k = k.reshape(b, tk, cfg.n_kv_heads, cfg.d_head)
+        v = v.reshape(b, tk, cfg.n_kv_heads, cfg.d_head)
+        if rope_pos is not None:
+            qp, kp = rope_pos
+            q = apply_rope(q, qp, cfg.rope_theta)
+            k = apply_rope(k, kp, cfg.rope_theta)
+        return q, k, v
+
+    def _out(self, p, o):
+        b, t = o.shape[:2]
+        o = o.reshape(b, t, self.cfg.n_heads * self.cfg.d_head)
+        return jnp.einsum("btq,qd->btd", o, p["wo"].astype(o.dtype))
+
+    # -------------------------------------------------------------- encoder
+
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        """frames: (B, T_enc, d) stub embeddings -> encoder states."""
+        cfg = self.cfg
+        x = frames.astype(self._cdtype)
+        x = constrain(x, "act_batch", "act_seq", "act_embed")
+        t = x.shape[1]
+        pos = jnp.arange(t)[None, :]
+
+        def layer(x, lp):
+            xn = self._ln(lp["ln1"], x)
+            q, k, v = self._qkv(lp["attn"], xn, xn, rope_pos=(pos, pos))
+            a = attn_mod.attention(q, k, v, causal=False, window=0)
+            x = x + self._out(lp["attn"], a)
+            x = x + ffn_apply(lp["ffn"], self._ln(lp["ln2"], x), cfg.ffn_act, cfg.ffn_gated)
+            return constrain(x, "act_batch", "act_seq", "act_embed"), None
+
+        body = layer
+        if self.parallel.remat != "none":
+            body = jax.checkpoint(layer)
+        x, _ = jax.lax.scan(body, x, params["enc"])
+        return self._ln(params["enc_final"], x)
+
+    # -------------------------------------------------------------- decoder
+
+    def _dec_layer(self, lp, x, enc_kv, *, decode=False, cache=None, pos=None):
+        cfg = self.cfg
+        b, t, _ = x.shape
+        xn = self._ln(lp["ln1"], x)
+        if not decode:
+            tpos = jnp.arange(t)[None, :]
+            q, k, v = self._qkv(lp["self"], xn, xn, rope_pos=(tpos, tpos))
+            a = attn_mod.attention(q, k, v, causal=True, window=0)
+            self_cache = (k, v)
+        else:
+            ppos = jnp.full((b, 1), pos)
+            q, k, v = self._qkv(lp["self"], xn, xn, rope_pos=(ppos, ppos))
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), pos, axis=1
+            )
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), pos, axis=1
+            )
+            a = attn_mod.decode_attention(q, ck, cv, pos)
+            self_cache = {"k": ck, "v": cv}
+        x = x + self._out(lp["self"], a)
+
+        xn = self._ln(lp["ln2"], x)
+        ek, ev = enc_kv
+        qc = jnp.einsum("btd,dq->btq", xn, lp["cross"]["wq"].astype(x.dtype))
+        qc = qc.reshape(b, t, cfg.n_heads, cfg.d_head)
+        c = attn_mod.attention(qc, ek, ev, causal=False, window=0)
+        x = x + self._out(lp["cross"], c)
+
+        x = x + ffn_apply(lp["ffn"], self._ln(lp["ln3"], x), cfg.ffn_act, cfg.ffn_gated)
+        return constrain(x, "act_batch", "act_seq", "act_embed"), self_cache
+
+    def _cross_kv(self, lp, enc_out):
+        b, te, _ = enc_out.shape
+        k = jnp.einsum("btd,dq->btq", enc_out, lp["cross"]["wk"].astype(enc_out.dtype))
+        v = jnp.einsum("btd,dq->btq", enc_out, lp["cross"]["wv"].astype(enc_out.dtype))
+        cfg = self.cfg
+        return (
+            k.reshape(b, te, cfg.n_kv_heads, cfg.d_head),
+            v.reshape(b, te, cfg.n_kv_heads, cfg.d_head),
+        )
+
+    def forward(self, params, tokens, frames):
+        """Training forward: (B,T_dec) tokens + (B,T_enc,d) frames -> logits."""
+        cfg = self.cfg
+        enc_out = self.encode(params, frames)
+        x = params["embed"]["tok"].astype(self._cdtype)[tokens]
+        x = constrain(x, "act_batch", "act_seq", "act_embed")
+
+        def layer(x, lp):
+            enc_kv = self._cross_kv(lp, enc_out)
+            x, _ = self._dec_layer(lp, x, enc_kv)
+            return x, None
+
+        body = layer
+        if self.parallel.remat != "none":
+            body = jax.checkpoint(layer)
+        x, _ = jax.lax.scan(body, x, params["dec"])
+        h = self._ln(params["dec_final"], x)
+        logits = jnp.einsum("btd,dv->btv", h, params["lm_head"].astype(h.dtype))
+        logits = mask_padded_logits(logits, cfg.vocab_size)
+        return constrain(logits, "act_batch", "act_none", "act_vocab"), jnp.float32(0.0)
+
+    # --------------------------------------------------------------- decode
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        l, kv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+        te = cfg.encoder_len
+        return {
+            "self": {
+                "k": jnp.zeros((l, batch, max_len, kv, dh), dtype),
+                "v": jnp.zeros((l, batch, max_len, kv, dh), dtype),
+            },
+            "cross": {
+                "k": jnp.zeros((l, batch, te, kv, dh), dtype),
+                "v": jnp.zeros((l, batch, te, kv, dh), dtype),
+            },
+        }
+
+    def cache_axes(self):
+        axes = ("layer", "act_batch", "act_cache_seq", "act_kv", "act_none")
+        return {"self": {"k": axes, "v": axes}, "cross": {"k": axes, "v": axes}}
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x = params["embed"]["tok"].astype(self._cdtype)[tokens]
+
+        def layer(x, inp):
+            lp, selfc, crossc = inp
+            x, new_selfc = self._dec_layer(
+                lp, x, (crossc["k"], crossc["v"]), decode=True, cache=selfc, pos=pos
+            )
+            return x, new_selfc
+
+        x, new_self = jax.lax.scan(
+            layer, x, (params["dec"], cache["self"], cache["cross"])
+        )
+        h = self._ln(params["dec_final"], x)
+        logits = jnp.einsum("btd,dv->btv", h, params["lm_head"].astype(h.dtype))
+        logits = mask_padded_logits(logits, cfg.vocab_size)
+        return logits, {"self": new_self, "cross": cache["cross"]}

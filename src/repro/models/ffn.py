@@ -1,0 +1,41 @@
+"""Dense (optionally gated) FFN blocks."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import PSpec, act_fn
+
+
+def ffn_specs(
+    prefix: str,
+    d_model: int,
+    d_ff: int,
+    gated: bool,
+    lead: tuple[tuple[int, str], ...] = (),
+) -> dict[str, PSpec]:
+    """Param specs for one FFN; ``lead`` adds stacked leading dims."""
+    ls = tuple(n for n, _ in lead)
+    la = tuple(a for _, a in lead)
+    specs = {
+        f"{prefix}/wi": PSpec(ls + (d_model, d_ff), la + ("embed", "ffn")),
+        f"{prefix}/wo": PSpec(ls + (d_ff, d_model), la + ("ffn", "embed")),
+    }
+    if gated:
+        specs[f"{prefix}/wg"] = PSpec(ls + (d_model, d_ff), la + ("embed", "ffn"))
+    return specs
+
+
+def ffn_apply(params: dict, x: jax.Array, act: str, gated: bool) -> jax.Array:
+    """x: (B, T, d_model)."""
+    h = jnp.einsum("btd,df->btf", x, params["wi"].astype(x.dtype))
+    if gated:
+        g = jnp.einsum("btd,df->btf", x, params["wg"].astype(x.dtype))
+        h = act_fn(act)(g) * h
+    else:
+        h = act_fn(act)(h)
+    # TP interior: ffn dim sharded over "model"; seq gathered (Megatron SP)
+    h = constrain(h, "act_batch", "act_none", "act_ffn")
+    return jnp.einsum("btf,fd->btd", h, params["wo"].astype(x.dtype))

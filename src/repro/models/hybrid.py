@@ -1,0 +1,253 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one weight-shared attention
+block applied every N ssm layers (arXiv:2411.15242).
+
+Layer stream (zamba2-7b: 81 mamba layers, shared block every 6):
+
+    [6 x mamba] -> shared(attn+mlp) -> [6 x mamba] -> shared -> ... tail
+
+The shared block's weights are *reused* at every application (true
+Zamba-style sharing — one set of attention/MLP params for the whole
+stack); each application keeps its own KV cache at decode.  Simplified
+vs release: no LoRA-per-application adapters, no input concat (noted in
+DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_mod
+from repro.models.common import PSpec, apply_rope, mask_padded_logits, rms_norm
+from repro.models.ffn import ffn_apply, ffn_specs
+from repro.models.ssm import (
+    ssm_apply,
+    ssm_decode_step,
+    ssm_init_state,
+    ssm_specs,
+)
+
+
+def _tree_at(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def groups_of(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_groups, group_len, tail) for the mamba/shared interleave."""
+    every = cfg.hybrid.shared_every
+    n_groups, tail = divmod(cfg.n_layers, every)
+    return n_groups, every, tail
+
+
+def build_specs(cfg: ModelConfig) -> dict[str, PSpec]:
+    d, v = cfg.d_model, cfg.vocab_padded
+    hy = cfg.hybrid
+    n_groups, glen, tail = groups_of(cfg)
+    specs: dict[str, PSpec] = {
+        "embed/tok": PSpec((v, d), ("vocab", "embed"), init="embed"),
+        "final_norm": PSpec((d,), ("embed",), init="zeros"),
+        "lm_head": PSpec((d, v), ("embed", "vocab")),
+    }
+    lead = ((n_groups, "layer"), (glen, "cycle"))
+    specs.update(ssm_specs("mamba/block", d, cfg.ssm, lead))
+    specs["mamba/norm"] = PSpec(
+        (n_groups, glen, d), ("layer", "cycle", "embed"), init="zeros"
+    )
+    if tail:
+        tlead = ((tail, "layer"),)
+        specs.update(ssm_specs("mamba_tail/block", d, cfg.ssm, tlead))
+        specs["mamba_tail/norm"] = PSpec((tail, d), ("layer", "embed"), init="zeros")
+    # shared attention + MLP block (single copy)
+    dh = cfg.d_head
+    specs.update(
+        {
+            "shared/attn/wq": PSpec((d, hy.shared_n_heads * dh), ("embed", "q_dim")),
+            "shared/attn/wk": PSpec((d, hy.shared_n_kv * dh), ("embed", "kv_dim")),
+            "shared/attn/wv": PSpec((d, hy.shared_n_kv * dh), ("embed", "kv_dim")),
+            "shared/attn/wo": PSpec((hy.shared_n_heads * dh, d), ("q_dim", "embed")),
+            "shared/attn_norm": PSpec((d,), ("embed",), init="zeros"),
+            "shared/ffn_norm": PSpec((d,), ("embed",), init="zeros"),
+        }
+    )
+    specs.update(ffn_specs("shared/ffn", d, hy.shared_d_ff, cfg.ffn_gated, ()))
+    return specs
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridLM:
+    cfg: ModelConfig
+    parallel: ParallelConfig
+
+    @property
+    def _cdtype(self):
+        return jnp.dtype(self.parallel.compute_dtype)
+
+    # ---------------------------------------------------------- shared block
+
+    def _shared_block(self, params, x, *, decode=False, cache=None, pos=None):
+        cfg, hy = self.cfg, self.cfg.hybrid
+        b, t, d = x.shape
+        dh = cfg.d_head
+        sp = params["shared"]
+        xn = rms_norm(x, sp["attn_norm"], cfg.norm_eps)
+        q = jnp.einsum("btd,dq->btq", xn, sp["attn"]["wq"].astype(x.dtype))
+        k = jnp.einsum("btd,dq->btq", xn, sp["attn"]["wk"].astype(x.dtype))
+        v = jnp.einsum("btd,dq->btq", xn, sp["attn"]["wv"].astype(x.dtype))
+        q = q.reshape(b, t, hy.shared_n_heads, dh)
+        k = k.reshape(b, t, hy.shared_n_kv, dh)
+        v = v.reshape(b, t, hy.shared_n_kv, dh)
+        if not decode:
+            pos_ids = jnp.arange(t)[None, :]
+            q = apply_rope(q, pos_ids, cfg.rope_theta)
+            k = apply_rope(k, pos_ids, cfg.rope_theta)
+            a = attn_mod.attention(q, k, v, causal=True, window=0)
+            new_cache = None
+        else:
+            ppos = jnp.full((b, 1), pos)
+            q = apply_rope(q, ppos, cfg.rope_theta)
+            k = apply_rope(k, ppos, cfg.rope_theta)
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), pos, axis=1
+            )
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), pos, axis=1
+            )
+            a = attn_mod.decode_attention(q, ck, cv, pos)
+            new_cache = {"k": ck, "v": cv}
+        a = a.reshape(b, t, hy.shared_n_heads * dh)
+        x = x + jnp.einsum("btq,qd->btd", a, sp["attn"]["wo"].astype(x.dtype))
+        xn = rms_norm(x, sp["ffn_norm"], cfg.norm_eps)
+        x = x + ffn_apply(sp["ffn"], xn, cfg.ffn_act, cfg.ffn_gated)
+        return constrain(x, "act_batch", "act_seq", "act_embed"), new_cache
+
+    # -------------------------------------------------------------- forward
+
+    def forward(self, params, tokens, **_):
+        cfg = self.cfg
+        n_groups, glen, tail = groups_of(cfg)
+        x = params["embed"]["tok"].astype(self._cdtype)[tokens]
+        x = constrain(x, "act_batch", "act_seq", "act_embed")
+
+        def group(x, gp):
+            for i in range(glen):
+                lp = _tree_at(gp, i)
+                xn = rms_norm(x, lp["norm"], cfg.norm_eps)
+                x = x + ssm_apply(lp["block"], xn, cfg.ssm)
+                x = constrain(x, "act_batch", "act_seq", "act_embed")
+            x, _ = self._shared_block(params, x)
+            return x, None
+
+        body = jax.checkpoint(group) if self.parallel.remat != "none" else group
+        x, _ = jax.lax.scan(body, x, params["mamba"])
+        if tail:
+
+            def tail_layer(x, lp):
+                xn = rms_norm(x, lp["norm"], cfg.norm_eps)
+                x = x + ssm_apply(lp["block"], xn, cfg.ssm)
+                return constrain(x, "act_batch", "act_seq", "act_embed"), None
+
+            tbody = (
+                jax.checkpoint(tail_layer)
+                if self.parallel.remat != "none"
+                else tail_layer
+            )
+            x, _ = jax.lax.scan(tbody, x, params["mamba_tail"])
+        h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("btd,dv->btv", h, params["lm_head"].astype(h.dtype))
+        logits = mask_padded_logits(logits, cfg.vocab_size)
+        return constrain(logits, "act_batch", "act_none", "act_vocab"), jnp.float32(0.0)
+
+    # --------------------------------------------------------------- decode
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg, hy = self.cfg, self.cfg.hybrid
+        n_groups, glen, tail = groups_of(cfg)
+        state = ssm_init_state(batch, cfg.d_model, cfg.ssm, dtype)
+
+        def stack(n, m=None):
+            def rep(a):
+                reps = (n,) + ((m,) if m else ()) + (1,) * a.ndim
+                return jnp.tile(a[None] if m is None else a[None, None], reps)
+
+            return jax.tree.map(rep, state)
+
+        cache: dict[str, Any] = {
+            "mamba": stack(n_groups, glen),
+            "shared": {
+                "k": jnp.zeros(
+                    (n_groups, batch, max_len, hy.shared_n_kv, cfg.d_head), dtype
+                ),
+                "v": jnp.zeros(
+                    (n_groups, batch, max_len, hy.shared_n_kv, cfg.d_head), dtype
+                ),
+            },
+        }
+        if tail:
+            cache["mamba_tail"] = stack(tail)
+        return cache
+
+    def cache_axes(self):
+        cfg = self.cfg
+        n_groups, glen, tail = groups_of(cfg)
+        ssm_axes = {
+            "ssm": ("layer", "cycle", "act_batch", "act_heads", "act_none", "act_none"),
+            "conv": ("layer", "cycle", "act_batch", "act_none", "act_inner"),
+        }
+        out = {
+            "mamba": ssm_axes,
+            "shared": {
+                "k": ("layer", "act_batch", "act_cache_seq", "act_kv", "act_none"),
+                "v": ("layer", "act_batch", "act_cache_seq", "act_kv", "act_none"),
+            },
+        }
+        if tail:
+            out["mamba_tail"] = {
+                "ssm": ("layer", "act_batch", "act_heads", "act_none", "act_none"),
+                "conv": ("layer", "act_batch", "act_none", "act_inner"),
+            }
+        return out
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        n_groups, glen, tail = groups_of(cfg)
+        x = params["embed"]["tok"].astype(self._cdtype)[tokens]
+
+        def group(x, inp):
+            gp, gstate, gkv = inp
+            new_states = []
+            for i in range(glen):
+                lp = _tree_at(gp, i)
+                st = _tree_at(gstate, i)
+                xn = rms_norm(x, lp["norm"], cfg.norm_eps)
+                y, ns = ssm_decode_step(lp["block"], xn, st, cfg.ssm)
+                x = x + y
+                new_states.append(ns)
+            x, nkv = self._shared_block(params, x, decode=True, cache=gkv, pos=pos)
+            stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_states)
+            return x, (stacked, nkv)
+
+        x, (new_mamba, new_kv) = jax.lax.scan(
+            group, x, (params["mamba"], cache["mamba"], cache["shared"])
+        )
+        new_cache = {"mamba": new_mamba, "shared": new_kv}
+        if tail:
+
+            def tail_layer(x, inp):
+                lp, st = inp
+                xn = rms_norm(x, lp["norm"], cfg.norm_eps)
+                y, ns = ssm_decode_step(lp["block"], xn, st, cfg.ssm)
+                return x + y, ns
+
+            x, new_tail = jax.lax.scan(
+                tail_layer, x, (params["mamba_tail"], cache["mamba_tail"])
+            )
+            new_cache["mamba_tail"] = new_tail
+        h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("btd,dv->btv", h, params["lm_head"].astype(h.dtype))
+        logits = mask_padded_logits(logits, cfg.vocab_size)
+        return logits, new_cache

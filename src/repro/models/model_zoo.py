@@ -1,0 +1,161 @@
+"""Uniform model API over the four family implementations.
+
+``build_model(cfg, parallel)`` returns a ``Model`` whose members are the
+pure functions the trainer / server / dry-run drive.  ``batch_specs``
+produces ShapeDtypeStruct stand-ins for every input of a given
+(model, shape) cell — the dry-run lowers against these, so no memory is
+allocated for the full-size configurations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.models import encdec, hybrid, rwkv_lm, transformer
+from repro.models.common import (
+    PSpec,
+    abstract_from_specs,
+    axes_from_specs,
+    init_from_specs,
+    param_count,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    name: str
+    cfg: ModelConfig
+    parallel: ParallelConfig
+    specs: dict[str, PSpec]
+    impl: Any  # family implementation object
+
+    # ------------------------------------------------------------- params
+
+    def init(self, rng: jax.Array, dtype=jnp.float32):
+        return init_from_specs(self.specs, rng, dtype)
+
+    def abstract_params(self, dtype=jnp.float32):
+        return abstract_from_specs(self.specs, dtype)
+
+    @property
+    def param_axes(self):
+        return axes_from_specs(self.specs)
+
+    @property
+    def n_params(self) -> int:
+        return param_count(self.specs)
+
+    # ------------------------------------------------------------ applies
+
+    def forward(self, params, batch: dict) -> tuple[jax.Array, jax.Array]:
+        """batch -> (logits (B,T,V), aux loss)."""
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return self.impl.forward(params, batch["tokens"], batch["frames"])
+        if cfg.family == "vlm":
+            return self.impl.forward(
+                params, batch["tokens"], vision_embeds=batch["vision_embeds"]
+            )
+        return self.impl.forward(params, batch["tokens"])
+
+    def hidden_and_aux(self, params, batch: dict):
+        """For chunked-loss training on transformer families."""
+        cfg = self.cfg
+        if hasattr(self.impl, "hidden"):
+            ve = batch.get("vision_embeds") if cfg.family == "vlm" else None
+            h, aux, _ = self.impl.hidden(params, batch["tokens"], ve)
+            return h, aux
+        logits, aux = self.forward(params, batch)
+        return None, aux  # pragma: no cover - families without hidden()
+
+    def prefill_step(self, params, batch: dict):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            # enc-dec prefill: encode + full decoder pass (cacheless probe)
+            return self.impl.forward(params, batch["tokens"], batch["frames"])[0]
+        if hasattr(self.impl, "prefill_step"):
+            ve = batch.get("vision_embeds") if cfg.family == "vlm" else None
+            return self.impl.prefill_step(params, batch["tokens"], ve)
+        return self.forward(params, batch)[0]
+
+    def decode_step(self, params, cache, tokens, pos):
+        return self.impl.decode_step(params, cache, tokens, pos)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return self.impl.init_cache(batch, max_len, dtype)
+
+    def cache_axes(self):
+        return self.impl.cache_axes()
+
+
+def build_model(cfg: ModelConfig, parallel: ParallelConfig | None = None) -> Model:
+    parallel = parallel or ParallelConfig()
+    if cfg.family in ("dense", "moe", "vlm"):
+        impl = transformer.TransformerLM(cfg, parallel)
+        specs = transformer.build_specs(cfg)
+    elif cfg.family == "audio":
+        impl = encdec.EncDecLM(cfg, parallel)
+        specs = encdec.build_specs(cfg)
+    elif cfg.family == "hybrid":
+        impl = hybrid.HybridLM(cfg, parallel)
+        specs = hybrid.build_specs(cfg)
+    elif cfg.family == "ssm":
+        impl = rwkv_lm.RWKVLM(cfg, parallel)
+        specs = rwkv_lm.build_specs(cfg)
+    else:  # pragma: no cover
+        raise ValueError(f"unknown family {cfg.family}")
+    return Model(cfg.name, cfg, parallel, specs, impl)
+
+
+# ------------------------------------------------------------ input specs
+
+
+def batch_specs(model: Model, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for the cell's inputs (no allocation)."""
+    cfg = model.cfg
+    b, t = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        spec: dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((b, t), i32),
+            "labels": jax.ShapeDtypeStruct((b, t), i32),
+        }
+        if cfg.family == "vlm":
+            tt = t - cfg.vision_tokens
+            spec["tokens"] = jax.ShapeDtypeStruct((b, tt), i32)
+            spec["labels"] = jax.ShapeDtypeStruct((b, t), i32)
+            spec["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16
+            )
+        if cfg.family == "audio":
+            spec["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_len, cfg.d_model), jnp.bfloat16
+            )
+        return spec
+    if shape.kind == "prefill":
+        spec = {"tokens": jax.ShapeDtypeStruct((b, t), i32)}
+        if cfg.family == "vlm":
+            spec["tokens"] = jax.ShapeDtypeStruct((b, t - cfg.vision_tokens), i32)
+            spec["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16
+            )
+        if cfg.family == "audio":
+            spec["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_len, cfg.d_model), jnp.bfloat16
+            )
+        return spec
+    # decode: one new token against a cache of length seq_len
+    cache = jax.eval_shape(
+        functools.partial(model.init_cache, b, t, jnp.bfloat16)
+    )
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+        "cache": cache,
+    }

@@ -1,0 +1,158 @@
+"""Top-k MoE FFN with grouped, capacity-bounded gather/scatter dispatch.
+
+Design (DESIGN.md §5, EP):
+
+* tokens are routed in **groups** of ``group_tokens`` along the sequence
+  axis (capacity is enforced per group, GShard-style); groups are
+  processed under ``lax.scan`` so the dispatch buffers are transient and
+  small — this is what keeps the 128-expert models inside VMEM/HBM at
+  32k sequence lengths;
+* dispatch is **gather/scatter**, not one-hot einsum: no O(S*E*C*d)
+  matmul FLOPs pollute the roofline, only real expert GEMMs;
+* expert weights are stacked (E, d, ff) and sharded expert->"model" (EP)
+  + ff->"data" (FSDP); the scatter into the (E, C, d) buffer lowers to
+  the expected all-to-all under GSPMD;
+* optional Arctic-style parallel dense residual MLP.
+
+Routing: softmax over top-k logits (Mixtral-style renormalisation),
+router in fp32, load-balancing aux loss returned alongside.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import PSpec, act_fn
+from repro.models.ffn import ffn_apply, ffn_specs
+
+
+def moe_specs(
+    prefix: str,
+    d_model: int,
+    cfg: MoEConfig,
+    gated: bool,
+    lead: tuple[tuple[int, str], ...] = (),
+) -> dict[str, PSpec]:
+    ls = tuple(n for n, _ in lead)
+    la = tuple(a for _, a in lead)
+    e, f = cfg.n_experts, cfg.d_ff_expert
+    specs = {
+        f"{prefix}/router": PSpec(ls + (d_model, e), la + ("embed", "expert")),
+        f"{prefix}/wi": PSpec(ls + (e, d_model, f), la + ("expert", "embed", "ffn")),
+        f"{prefix}/wo": PSpec(ls + (e, f, d_model), la + ("expert", "ffn", "embed")),
+    }
+    if gated:
+        specs[f"{prefix}/wg"] = PSpec(
+            ls + (e, d_model, f), la + ("expert", "embed", "ffn")
+        )
+    if cfg.dense_residual_d_ff:
+        specs.update(
+            ffn_specs(f"{prefix}/residual", d_model, cfg.dense_residual_d_ff, gated, lead)
+        )
+    return specs
+
+
+def _route_group(params, xg, cfg: MoEConfig, act: str, gated: bool):
+    """xg: (B, S, d) one routing group per batch row."""
+    b, s, d = xg.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(int(s * k * cfg.capacity_factor / e), 1)
+
+    logits = jnp.einsum(
+        "bsd,de->bse", xg.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+    gate_all = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(logits, k)  # (B,S,K)
+    probs = jax.nn.softmax(top_vals, axis=-1)  # renormalised over top-k
+
+    # aux load-balance loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(gate_all, axis=(0, 1))
+    ce = jnp.mean(
+        jax.nn.one_hot(top_idx[..., 0], e, dtype=jnp.float32), axis=(0, 1)
+    )
+    aux = e * jnp.sum(me * ce)
+
+    # capacity positions: token-major, choice-major order
+    flat_idx = top_idx.reshape(b, s * k)
+    onehot = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)  # (B, SK, E)
+    pos_all = jnp.cumsum(onehot, axis=1) - 1  # position within expert
+    pos = jnp.sum(pos_all * onehot, axis=-1)  # (B, SK)
+    keep = pos < cap
+    dest = jnp.where(keep, flat_idx * cap + pos, e * cap)  # overflow slot
+
+    # scatter tokens into the expert buffer (B, E*C (+1 overflow), d)
+    token_of = jnp.broadcast_to(jnp.arange(s)[None, :, None], (b, s, k)).reshape(
+        b, s * k
+    )
+    xrep = jnp.take_along_axis(xg, token_of[..., None], axis=1)  # (B, SK, d)
+    xrep = constrain(xrep, "act_batch", "act_none", "act_embed")
+    buf = jnp.zeros((b, e * cap + 1, d), xg.dtype)
+    bidx = jnp.arange(b)[:, None]
+    buf = buf.at[bidx, dest].add(xrep)
+    buf = constrain(buf, "act_batch", "act_none", "act_embed")
+    xbuf = buf[:, : e * cap].reshape(b, e, cap, d)
+    xbuf = constrain(xbuf, "act_batch", "act_expert", "act_cap", "act_embed")
+
+    # expert GEMMs
+    h = jnp.einsum("becd,edf->becf", xbuf, params["wi"].astype(xg.dtype))
+    if gated:
+        g = jnp.einsum("becd,edf->becf", xbuf, params["wg"].astype(xg.dtype))
+        h = act_fn(act)(g) * h
+    else:
+        h = act_fn(act)(h)
+    h = constrain(h, "act_batch", "act_expert", "act_cap", "act_ffn")
+    ybuf = jnp.einsum("becf,efd->becd", h, params["wo"].astype(xg.dtype))
+    ybuf = constrain(ybuf, "act_batch", "act_expert", "act_cap", "act_embed")
+    ybuf = ybuf.reshape(b, e * cap, d)
+    ybuf = jnp.concatenate([ybuf, jnp.zeros((b, 1, d), ybuf.dtype)], axis=1)
+
+    # gather back, weight by router prob, sum the k choices
+    yrep = jnp.take_along_axis(ybuf, dest[..., None], axis=1)  # (B, SK, d)
+    yrep = constrain(yrep, "act_batch", "act_none", "act_embed")
+    wts = (probs.reshape(b, s * k) * keep).astype(yrep.dtype)
+    y = jnp.zeros((b, s, d), yrep.dtype)
+    y = y.at[bidx, token_of].add(yrep * wts[..., None])
+    y = constrain(y, "act_batch", "act_none", "act_embed")
+    return y, aux
+
+
+def moe_apply(
+    params: dict, x: jax.Array, cfg: MoEConfig, act: str, gated: bool
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, T, d) -> (y, aux_loss). Scans over routing groups along T."""
+    b, t, d = x.shape
+    s = min(cfg.group_tokens, t)
+    n_groups = -(-t // s)
+    pad = n_groups * s - t
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+    xg = xp.reshape(b, n_groups, s, d).transpose(1, 0, 2, 3)
+
+    # Hoist the FSDP gather of expert weights OUT of the group scan:
+    # without this, GSPMD re-all-gathers (and re-reduces grads of) the
+    # full expert stack once per group iteration (§Perf iteration A1:
+    # 16 groups -> 16x expert-weight collective traffic on arctic).
+    # The ffn dim KEEPS its TP sharding (act_ffn): gathering it too
+    # replicated grok's 9.7GB/layer expert stack — §Perf A1b regression.
+    # Single-group calls (decode) skip the hoist: nothing to amortise.
+    if n_groups > 1:
+        params = dict(params)
+        for name, axes in (
+            ("wi", ("act_expert", "act_none", "act_ffn")),
+            ("wg", ("act_expert", "act_none", "act_ffn")),
+            ("wo", ("act_expert", "act_ffn", "act_none")),
+        ):
+            if name in params:
+                params[name] = constrain(params[name].astype(x.dtype), *axes)
+
+    def step(carry, xc):
+        y, aux = _route_group(params, xc, cfg, act, gated)
+        return carry + aux, y
+
+    aux_total, ys = jax.lax.scan(step, jnp.float32(0.0), xg)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, n_groups * s, d)[:, :t]
+    if cfg.dense_residual_d_ff:
+        y = y + ffn_apply(params["residual"], x, act, gated)
+    return y, aux_total / n_groups

@@ -1,0 +1,221 @@
+"""RWKV-6 ("Finch") time-mix / channel-mix — backbone of rwkv6-1.6b.
+
+Attention-free linear recurrence with *data-dependent per-channel decay*
+(arXiv:2404.05892):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+
+Like the SSD block, the full-sequence form is chunked: intra-chunk terms
+become an L x L decay-weighted matrix per head (computed in fp32 with
+clamped log-decays so within-chunk decay ratios stay inside fp32 range),
+and only the (H, dh, dh) state crosses chunk boundaries in a lax.scan.
+
+Simplifications vs the released model (noted in DESIGN.md): the LoRA
+token-shift mixers are collapsed to learned per-channel mixing
+coefficients, and the decay LoRA to a direct projection — the
+data-dependent-decay structure (the paper's contribution) is preserved.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import PSpec, act_fn, rms_norm
+
+LOG_DECAY_MIN = -0.24  # per-step clamp: e^(-0.24*128) ~ 4.3e-14 within a chunk
+LOG_DECAY_MAX = -1e-4
+CHUNK = 128
+
+
+def rwkv_time_specs(
+    prefix: str, d_model: int, head_dim: int, lead: tuple[tuple[int, str], ...] = ()
+) -> dict[str, PSpec]:
+    ls = tuple(n for n, _ in lead)
+    la = tuple(a for _, a in lead)
+    h = d_model // head_dim
+    s: dict[str, PSpec] = {}
+    for name in ("r", "k", "v", "g", "w"):
+        s[f"{prefix}/w{name}"] = PSpec(
+            ls + (d_model, d_model), la + ("embed", "inner")
+        )
+        s[f"{prefix}/mu_{name}"] = PSpec(
+            ls + (d_model,), la + ("embed",), init="zeros"
+        )
+    s[f"{prefix}/w_bias"] = PSpec(ls + (d_model,), la + ("inner",), init="zeros")
+    s[f"{prefix}/u"] = PSpec(ls + (h, head_dim), la + ("heads", "head_dim"), init="zeros")
+    s[f"{prefix}/ln"] = PSpec(ls + (d_model,), la + ("inner",), init="zeros")
+    s[f"{prefix}/wo"] = PSpec(ls + (d_model, d_model), la + ("inner", "embed"))
+    return s
+
+
+def rwkv_channel_specs(
+    prefix: str, d_model: int, d_ff: int, lead: tuple[tuple[int, str], ...] = ()
+) -> dict[str, PSpec]:
+    ls = tuple(n for n, _ in lead)
+    la = tuple(a for _, a in lead)
+    return {
+        f"{prefix}/wk": PSpec(ls + (d_model, d_ff), la + ("embed", "ffn")),
+        f"{prefix}/wv": PSpec(ls + (d_ff, d_model), la + ("ffn", "embed")),
+        f"{prefix}/wr": PSpec(ls + (d_model, d_model), la + ("embed", "inner")),
+        f"{prefix}/mu_k": PSpec(ls + (d_model,), la + ("embed",), init="zeros"),
+        f"{prefix}/mu_r": PSpec(ls + (d_model,), la + ("embed",), init="zeros"),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None):
+    """Shift right by one along T; position 0 sees ``prev`` (or zeros)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _wkv_chunk_scan(r, k, v, logw, u, chunk: int):
+    """r,k,v (B,T,H,dh); logw (B,T,H,dh) clamped <= 0; u (H,dh)."""
+    b, t, h, dh = r.shape
+    l = min(chunk, t)
+    pad = (-t) % l
+    if pad:
+        z = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, z), jnp.pad(k, z), jnp.pad(v, z)
+        logw = jnp.pad(logw, z)
+    nc = (t + pad) // l
+
+    def chunks(a):
+        return a.reshape(b, nc, l, h, dh).transpose(1, 0, 2, 3, 4)
+
+    rc, kc, vc, wc = map(chunks, (r, k, v, logw))
+
+    def step(state, inp):
+        rk, kk, vk, lwk = inp
+        rk = rk.astype(jnp.float32)
+        kk = kk.astype(jnp.float32)
+        vk = vk.astype(jnp.float32)
+        lw = jnp.cumsum(lwk.astype(jnp.float32), axis=1)  # (B,l,H,dh) inclusive
+        lw_prev = lw - lwk  # exclusive cumsum: decay up to (not incl.) t
+        total = lw[:, -1]  # (B,H,dh)
+
+        # y_t = r_t . S_{t-1}-part:   S before t within chunk
+        #   A[t,s] = sum_i r[t,i] k[s,i] exp(lw_prev[t,i] - lw[s,i]),  s < t
+        r_dec = rk * jnp.exp(lw_prev)  # bounded: lw_prev <= 0
+        k_dec = kk * jnp.exp(-lw)  # grows within chunk; clamped logs keep finite
+        a = jnp.einsum("blhi,bmhi->blmh", r_dec, k_dec)
+        tri = jnp.tril(jnp.ones((l, l), bool), k=-1)  # strictly lower
+        a = a * tri[None, :, :, None]
+        y_intra = jnp.einsum("blmh,bmhd->blhd", a, vk)
+
+        # current-token bonus: (r ⊙ u ⊙ k) summed over key dim
+        bonus = jnp.einsum("blhi,blhi->blh", rk * u[None, None], kk)
+        y_bonus = bonus[..., None] * vk
+
+        # inter-chunk state term
+        y_inter = jnp.einsum("blhi,bhid->blhd", r_dec, state)
+
+        # state update: S' = diag(exp(total)) S + sum_s exp(total - lw[s]) k_s v_s^T
+        carry = jnp.exp(total[:, None] - lw)  # (B,l,H,dh)
+        s_new = state * jnp.exp(total)[..., None] + jnp.einsum(
+            "blhi,blhd->bhid", kk * carry, vk
+        )
+        return s_new, (y_intra + y_bonus + y_inter).astype(r.dtype)
+
+    s0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * l, h, dh)
+    return y[:, :t]
+
+
+def rwkv_time_apply(
+    params: dict, x: jax.Array, head_dim: int, shift_prev: jax.Array | None = None
+) -> jax.Array:
+    b, t, d = x.shape
+    h = d // head_dim
+    xs = _token_shift(x, shift_prev)
+
+    def proj(name):
+        xm = _mix(x, xs, params[f"mu_{name}"])
+        return jnp.einsum("btd,de->bte", xm, params[f"w{name}"].astype(x.dtype))
+
+    r = proj("r").reshape(b, t, h, head_dim)
+    k = proj("k").reshape(b, t, h, head_dim)
+    v = proj("v").reshape(b, t, h, head_dim)
+    g = jax.nn.silu(proj("g"))
+    logw = -jnp.exp(
+        proj("w").astype(jnp.float32) + params["w_bias"].astype(jnp.float32)
+    )
+    logw = jnp.clip(logw, LOG_DECAY_MIN, LOG_DECAY_MAX).reshape(b, t, h, head_dim)
+
+    y = _wkv_chunk_scan(r, k, v, logw, params["u"].astype(jnp.float32), CHUNK)
+    y = y.reshape(b, t, d)
+    y = rms_norm(y, params["ln"])  # stand-in for per-head group norm
+    y = constrain(y, "act_batch", "act_seq", "act_inner")
+    return jnp.einsum("bte,ed->btd", y * g, params["wo"].astype(x.dtype))
+
+
+def rwkv_channel_apply(
+    params: dict, x: jax.Array, shift_prev: jax.Array | None = None
+) -> jax.Array:
+    xs = _token_shift(x, shift_prev)
+    xk = _mix(x, xs, params["mu_k"])
+    xr = _mix(x, xs, params["mu_r"])
+    k = jnp.einsum("btd,df->btf", xk, params["wk"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    k = constrain(k, "act_batch", "act_none", "act_ffn")
+    kv = jnp.einsum("btf,fd->btd", k, params["wv"].astype(x.dtype))
+    rgate = jax.nn.sigmoid(
+        jnp.einsum("btd,de->bte", xr, params["wr"].astype(x.dtype))
+    )
+    return rgate * kv
+
+
+# ------------------------------------------------------------------ decode
+
+
+def rwkv_init_state(b: int, d_model: int, head_dim: int, dtype=jnp.float32):
+    h = d_model // head_dim
+    return {
+        "wkv": jnp.zeros((b, h, head_dim, head_dim), jnp.float32),
+        "shift_t": jnp.zeros((b, 1, d_model), dtype),
+        "shift_c": jnp.zeros((b, 1, d_model), dtype),
+    }
+
+
+def rwkv_time_decode(params: dict, x: jax.Array, state: dict, head_dim: int):
+    """x (B,1,d); returns (y, new wkv state, new shift)."""
+    b, _, d = x.shape
+    h = d // head_dim
+    xs = state["shift_t"].astype(x.dtype)
+
+    def proj(name):
+        xm = _mix(x, xs, params[f"mu_{name}"])
+        return jnp.einsum("btd,de->bte", xm, params[f"w{name}"].astype(x.dtype))
+
+    r = proj("r").reshape(b, h, head_dim).astype(jnp.float32)
+    k = proj("k").reshape(b, h, head_dim).astype(jnp.float32)
+    v = proj("v").reshape(b, h, head_dim).astype(jnp.float32)
+    g = jax.nn.silu(proj("g"))
+    logw = -jnp.exp(
+        proj("w").astype(jnp.float32) + params["w_bias"].astype(jnp.float32)
+    )
+    w = jnp.exp(jnp.clip(logw, LOG_DECAY_MIN, LOG_DECAY_MAX)).reshape(
+        b, h, head_dim
+    )
+
+    s = state["wkv"]
+    u = params["u"].astype(jnp.float32)
+    kv = jnp.einsum("bhi,bhd->bhid", k, v)
+    y = jnp.einsum("bhi,bhid->bhd", r, s + u[None, :, :, None] * kv)
+    s_new = s * w[..., None] + kv
+    y = rms_norm(y.reshape(b, 1, d).astype(x.dtype), params["ln"])
+    out = jnp.einsum("bte,ed->btd", y * g, params["wo"].astype(x.dtype))
+    return out, s_new, x
+
+
+def rwkv_channel_decode(params: dict, x: jax.Array, state: dict):
+    y = rwkv_channel_apply(params, x, shift_prev=state["shift_c"].astype(x.dtype))
+    return y, x

@@ -1,0 +1,108 @@
+"""RWKV-6 language model (rwkv6-1.6b): attention-free Finch stack."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import PSpec, mask_padded_logits, rms_norm
+from repro.models.rwkv import (
+    rwkv_channel_apply,
+    rwkv_channel_decode,
+    rwkv_channel_specs,
+    rwkv_init_state,
+    rwkv_time_apply,
+    rwkv_time_decode,
+    rwkv_time_specs,
+)
+
+
+def build_specs(cfg: ModelConfig) -> dict[str, PSpec]:
+    d, v, L = cfg.d_model, cfg.vocab_padded, cfg.n_layers
+    lead = ((L, "layer"),)
+    specs: dict[str, PSpec] = {
+        "embed/tok": PSpec((v, d), ("vocab", "embed"), init="embed"),
+        "final_norm": PSpec((d,), ("embed",), init="zeros"),
+        "lm_head": PSpec((d, v), ("embed", "vocab")),
+    }
+    specs.update(rwkv_time_specs("layers/time", d, cfg.d_head, lead))
+    specs.update(rwkv_channel_specs("layers/chan", d, cfg.d_ff, lead))
+    specs["layers/ln1"] = PSpec((L, d), ("layer", "embed"), init="zeros")
+    specs["layers/ln2"] = PSpec((L, d), ("layer", "embed"), init="zeros")
+    return specs
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVLM:
+    cfg: ModelConfig
+    parallel: ParallelConfig
+
+    @property
+    def _cdtype(self):
+        return jnp.dtype(self.parallel.compute_dtype)
+
+    def forward(self, params, tokens, **_):
+        cfg = self.cfg
+        x = params["embed"]["tok"].astype(self._cdtype)[tokens]
+        x = constrain(x, "act_batch", "act_seq", "act_embed")
+
+        def layer(x, lp):
+            xn = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            x = x + rwkv_time_apply(lp["time"], xn, cfg.d_head)
+            xn = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            x = x + rwkv_channel_apply(lp["chan"], xn)
+            return constrain(x, "act_batch", "act_seq", "act_embed"), None
+
+        body = jax.checkpoint(layer) if self.parallel.remat != "none" else layer
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("btd,dv->btv", h, params["lm_head"].astype(h.dtype))
+        logits = mask_padded_logits(logits, cfg.vocab_size)
+        return constrain(logits, "act_batch", "act_none", "act_vocab"), jnp.float32(0.0)
+
+    # --------------------------------------------------------------- decode
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        state = rwkv_init_state(batch, cfg.d_model, cfg.d_head, dtype)
+        return jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), state
+        )
+
+    def cache_axes(self):
+        return {
+            "wkv": ("layer", "act_batch", "act_heads", "act_none", "act_none"),
+            "shift_t": ("layer", "act_batch", "act_none", "act_embed"),
+            "shift_c": ("layer", "act_batch", "act_none", "act_embed"),
+        }
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x = params["embed"]["tok"].astype(self._cdtype)[tokens]
+
+        def layer(x, inp):
+            lp, st = inp
+            xn = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            y, wkv, shift_t = rwkv_time_decode(
+                lp["time"], xn, {"wkv": st["wkv"], "shift_t": st["shift_t"]}, cfg.d_head
+            )
+            x = x + y
+            xn2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            y2, shift_c = rwkv_channel_decode(lp["chan"], xn2, {"shift_c": st["shift_c"]})
+            x = x + y2
+            new_state = {
+                "wkv": wkv,
+                "shift_t": shift_t.astype(st["shift_t"].dtype),
+                "shift_c": shift_c.astype(st["shift_c"].dtype),
+            }
+            return x, new_state
+
+        x, new_cache = jax.lax.scan(layer, x, (params["layers"], cache))
+        h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("btd,dv->btv", h, params["lm_head"].astype(h.dtype))
+        logits = mask_padded_logits(logits, cfg.vocab_size)
+        return logits, new_cache

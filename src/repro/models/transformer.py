@@ -1,0 +1,315 @@
+"""Decoder-only transformer LM — granite / gemma3 / mistral-large /
+stablelm / internvl2(backbone) / arctic / grok, all from one ModelConfig.
+
+Structure:
+
+* **Segments** — the per-layer window pattern is compiled into layer
+  *segments*: a segment scans ``n_cycles`` cycles, each cycle an unrolled
+  run of ``len(pattern)`` layers with *static* windows.  Static windows
+  let windowed layers use the banded flash path (FLOPs ~ T*window) and
+  window-sized ring KV caches, while params stay scan-stacked
+  (n_cycles, pattern_len, ...) so compile time is O(pattern), not O(L).
+* **MoE** — segment blocks call into repro.models.moe when cfg.moe is
+  set; the aux load-balance loss threads through the scan carry.
+* **Decode** — ``decode_step`` updates (ring) KV caches in place
+  functionally; window layers cache only ``window`` positions.
+* **VLM** — internvl2's vision frontend is a stub per the assignment:
+  ``vision_embeds`` (B, vision_tokens, d) are prepended to the token
+  embeddings; everything downstream is this same decoder.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_mod
+from repro.models.common import PSpec, apply_rope, mask_padded_logits, rms_norm
+from repro.models.ffn import ffn_apply, ffn_specs
+from repro.models.moe import moe_apply, moe_specs
+
+
+def segments_of(cfg: ModelConfig) -> list[tuple[int, tuple[int, ...]]]:
+    """[(n_cycles, pattern), ...] covering all layers in order.
+
+    Remainder layers continue the cycle; they become ``rem`` cycles of a
+    1-layer pattern when homogeneous (cheap scan), else one unrolled
+    cycle of length ``rem``.
+    """
+    plen = len(cfg.window_pattern)
+    n_cycles, rem = divmod(cfg.n_layers, plen)
+    segs: list[tuple[int, tuple[int, ...]]] = []
+    if n_cycles:
+        segs.append((n_cycles, tuple(cfg.window_pattern)))
+    if rem:
+        tail = tuple(cfg.window_pattern[:rem])
+        segs.append((rem, (tail[0],)) if len(set(tail)) == 1 else (1, tail))
+    return segs
+
+
+def _attn_specs(
+    prefix: str, cfg: ModelConfig, lead: tuple[tuple[int, str], ...]
+) -> dict[str, PSpec]:
+    ls = tuple(n for n, _ in lead)
+    la = tuple(a for _, a in lead)
+    d, dh = cfg.d_model, cfg.d_head
+    return {
+        f"{prefix}/wq": PSpec(ls + (d, cfg.n_heads * dh), la + ("embed", "q_dim")),
+        f"{prefix}/wk": PSpec(ls + (d, cfg.n_kv_heads * dh), la + ("embed", "kv_dim")),
+        f"{prefix}/wv": PSpec(ls + (d, cfg.n_kv_heads * dh), la + ("embed", "kv_dim")),
+        f"{prefix}/wo": PSpec(ls + (cfg.n_heads * dh, d), la + ("q_dim", "embed")),
+    }
+
+
+def build_specs(cfg: ModelConfig) -> dict[str, PSpec]:
+    d, v = cfg.d_model, cfg.vocab_padded
+    specs: dict[str, PSpec] = {
+        "embed/tok": PSpec((v, d), ("vocab", "embed"), init="embed"),
+        "final_norm": PSpec((d,), ("embed",), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = PSpec((d, v), ("embed", "vocab"))
+    for si, (n_cycles, pattern) in enumerate(segments_of(cfg)):
+        lead = ((n_cycles, "layer"), (len(pattern), "cycle"))
+        pre = f"seg{si}"
+        specs.update(_attn_specs(f"{pre}/attn", cfg, lead))
+        ls = (n_cycles, len(pattern))
+        la = ("layer", "cycle")
+        specs[f"{pre}/attn_norm"] = PSpec(ls + (d,), la + ("embed",), init="zeros")
+        specs[f"{pre}/ffn_norm"] = PSpec(ls + (d,), la + ("embed",), init="zeros")
+        if cfg.moe is not None:
+            specs.update(moe_specs(f"{pre}/moe", d, cfg.moe, cfg.ffn_gated, lead))
+        else:
+            specs.update(ffn_specs(f"{pre}/ffn", d, cfg.d_ff, cfg.ffn_gated, lead))
+    return specs
+
+
+def _tree_at(tree, idx):
+    return jax.tree.map(lambda a: a[idx], tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerLM:
+    cfg: ModelConfig
+    parallel: ParallelConfig
+
+    # --------------------------------------------------------------- layers
+
+    def _attention_block(
+        self,
+        params: dict,
+        x: jax.Array,
+        window: int,
+        *,
+        decode: bool = False,
+        cache: dict | None = None,
+        pos: jax.Array | None = None,
+    ):
+        cfg = self.cfg
+        b, t, d = x.shape
+        dh = cfg.d_head
+        xn = rms_norm(x, params["attn_norm"], cfg.norm_eps)
+        q = jnp.einsum("btd,dq->btq", xn, params["attn"]["wq"].astype(x.dtype))
+        k = jnp.einsum("btd,dq->btq", xn, params["attn"]["wk"].astype(x.dtype))
+        v = jnp.einsum("btd,dq->btq", xn, params["attn"]["wv"].astype(x.dtype))
+        q = q.reshape(b, t, cfg.n_heads, dh)
+        k = k.reshape(b, t, cfg.n_kv_heads, dh)
+        v = v.reshape(b, t, cfg.n_kv_heads, dh)
+
+        if not decode:
+            positions = jnp.arange(t)[None, :]
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            q = constrain(q, "act_batch", "act_none", "act_heads", "act_none")
+            out = attn_mod.attention(q, k, v, causal=True, window=window)
+            new_cache = (k, v)
+        else:
+            assert cache is not None and pos is not None
+            positions = jnp.full((b, 1), pos)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            lc = cache["k"].shape[1]
+            slot = pos % lc if window > 0 else pos
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+            kv_pos = attn_mod.ring_kv_pos(pos, lc) if window > 0 else None
+            out = attn_mod.decode_attention(
+                q, ck, cv, pos, window=window, kv_pos=kv_pos
+            )
+            new_cache = {"k": ck, "v": cv}
+
+        out = out.reshape(b, t, cfg.n_heads * dh)
+        proj = jnp.einsum("btq,qd->btd", out, params["attn"]["wo"].astype(x.dtype))
+        return proj, new_cache
+
+    def _ffn_block(self, params: dict, x: jax.Array):
+        cfg = self.cfg
+        xn = rms_norm(x, params["ffn_norm"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y, aux = moe_apply(params["moe"], xn, cfg.moe, cfg.ffn_act, cfg.ffn_gated)
+            return y, aux
+        return ffn_apply(params["ffn"], xn, cfg.ffn_act, cfg.ffn_gated), jnp.float32(0.0)
+
+    def _layer(self, params, x, window, **kw):
+        a, cache = self._attention_block(params, x, window, **kw)
+        x = x + a
+        x = constrain(x, "act_batch", "act_seq", "act_embed")
+        f, aux = self._ffn_block(params, x)
+        x = x + f
+        x = constrain(x, "act_batch", "act_seq", "act_embed")
+        return x, aux, cache
+
+    # -------------------------------------------------------------- forward
+
+    def _embed(self, params, tokens, vision_embeds=None):
+        cfg = self.cfg
+        x = params["embed"]["tok"].astype(self._cdtype)[tokens]
+        if cfg.scale_embed:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        if cfg.vision_tokens and vision_embeds is not None:
+            x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+        return constrain(x, "act_batch", "act_seq", "act_embed")
+
+    @property
+    def _cdtype(self):
+        return jnp.dtype(self.parallel.compute_dtype)
+
+    def _remat(self, fn: Callable) -> Callable:
+        mode = self.parallel.remat
+        if mode == "none":
+            return fn
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if mode == "dots"
+            else jax.checkpoint_policies.nothing_saveable
+        )
+        return jax.checkpoint(fn, policy=policy)
+
+    def hidden(
+        self, params, tokens, vision_embeds=None, collect_cache: int = 0
+    ) -> tuple[jax.Array, jax.Array, dict | None]:
+        """(B,T) tokens -> (h (B,T,d), aux losses, optional KV caches).
+
+        ``collect_cache > 0`` makes this a prefill: per-layer (ring-
+        truncated and ring-aligned) KV caches of max length
+        ``collect_cache`` are gathered from the scan outputs.
+        """
+        cfg = self.cfg
+        x = self._embed(params, tokens, vision_embeds)
+        t_total = x.shape[1]
+
+        total_aux = jnp.float32(0.0)
+        caches: dict[str, Any] | None = {} if collect_cache else None
+        for si, (n_cycles, pattern) in enumerate(segments_of(cfg)):
+            seg = params[f"seg{si}"]
+
+            def cycle(carry, cyc_params, pattern=pattern):
+                x, aux = carry
+                kvs = []
+                for pi, win in enumerate(pattern):
+                    lp = _tree_at(cyc_params, pi)
+                    x, a, kv = self._layer(lp, x, win)
+                    aux = aux + a
+                    if collect_cache:
+                        k, v = kv
+                        lc = self.cache_len(win, collect_cache)
+                        # ring alignment: slot j must hold position p,
+                        # p % lc == j; last lc positions rolled by T % lc
+                        k = jnp.roll(k[:, -lc:], t_total % lc, axis=1)
+                        v = jnp.roll(v[:, -lc:], t_total % lc, axis=1)
+                        kvs.append(
+                            {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+                        )
+                return (x, aux), tuple(kvs)
+
+            body = self._remat(lambda c, xs, _cycle=cycle: _cycle(c, xs))
+            (x, total_aux), kv_stacks = jax.lax.scan(body, (x, total_aux), seg)
+            if collect_cache:
+                for pi in range(len(pattern)):
+                    caches[f"seg{si}/pos{pi}"] = kv_stacks[pi]
+        h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return h, total_aux, caches
+
+    def logits(self, params, h: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        head = (
+            params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
+        )
+        out = jnp.einsum("btd,dv->btv", h, head.astype(h.dtype))
+        if cfg.logit_softcap:
+            out = cfg.logit_softcap * jnp.tanh(out / cfg.logit_softcap)
+        out = mask_padded_logits(out, cfg.vocab_size)
+        return constrain(out, "act_batch", "act_none", "act_vocab")
+
+    def forward(self, params, tokens, vision_embeds=None):
+        h, aux, _ = self.hidden(params, tokens, vision_embeds)
+        return self.logits(params, h), aux
+
+    def prefill_step(self, params, tokens, vision_embeds=None):
+        """Prefill: last-position logits + ring-aligned KV caches."""
+        t = tokens.shape[1] + (self.cfg.vision_tokens if vision_embeds is not None else 0)
+        h, _, cache = self.hidden(params, tokens, vision_embeds, collect_cache=t)
+        return self.logits(params, h[:, -1:, :]), cache
+
+    # --------------------------------------------------------------- decode
+
+    def cache_len(self, window: int, max_len: int) -> int:
+        return min(window, max_len) if window > 0 else max_len
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        cache: dict[str, Any] = {}
+        for si, (n_cycles, pattern) in enumerate(segments_of(cfg)):
+            for pi, win in enumerate(pattern):
+                lc = self.cache_len(win, max_len)
+                shape = (n_cycles, batch, lc, cfg.n_kv_heads, cfg.d_head)
+                cache[f"seg{si}/pos{pi}"] = {
+                    "k": jnp.zeros(shape, dtype),
+                    "v": jnp.zeros(shape, dtype),
+                }
+        return cache
+
+    def cache_axes(self):
+        """Logical axes tree matching init_cache output."""
+        cfg = self.cfg
+        axes = ("layer", "act_batch", "act_cache_seq", "act_kv", "act_none")
+        out = {}
+        for si, (n_cycles, pattern) in enumerate(segments_of(cfg)):
+            for pi, _ in enumerate(pattern):
+                out[f"seg{si}/pos{pi}"] = {"k": axes, "v": axes}
+        return out
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens (B,1) + caches at absolute position ``pos`` -> logits."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        new_cache = dict(cache)
+        for si, (n_cycles, pattern) in enumerate(segments_of(cfg)):
+            seg = params[f"seg{si}"]
+
+            def cycle(x, inp, pattern=pattern, si=si):
+                cyc_params, caches = inp
+                new_caches = []
+                for pi, win in enumerate(pattern):
+                    lp = _tree_at(cyc_params, pi)
+                    x, _, nc = self._layer(
+                        lp, x, win, decode=True, cache=caches[pi], pos=pos
+                    )
+                    new_caches.append(nc)
+                return x, tuple(new_caches)
+
+            seg_caches = tuple(
+                cache[f"seg{si}/pos{pi}"] for pi in range(len(pattern))
+            )
+            x, upd = jax.lax.scan(cycle, x, (seg, seg_caches))
+            for pi in range(len(pattern)):
+                new_cache[f"seg{si}/pos{pi}"] = upd[pi]
+        h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return self.logits(params, h), new_cache

@@ -1,0 +1,3 @@
+from repro.monitor.curves import find_similar_runs, load_metric_curve, normalize_curve
+
+__all__ = ["find_similar_runs", "load_metric_curve", "normalize_curve"]

@@ -1,0 +1,51 @@
+"""DTW-based run monitoring — the paper's technique as a framework feature.
+
+Training emits metric curves (loss, grad-norm, step-time) to JSONL.
+``find_similar_runs`` treats a historical-run archive as the candidate
+database and the current run's curve as the query, and answers "which
+previous run does this one most resemble?" with the two-pass LB_Improved
+cascade — useful for spotting repeats of past divergence/straggler
+patterns.  Curves are z-normalised and resampled to a common length so
+DTW compares shape, not scale.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core.cascade import SearchResult, nn_search_scan
+
+
+def load_metric_curve(path: str, key: str = "loss") -> np.ndarray:
+    vals = []
+    with open(path) as f:
+        for line in f:
+            rec = json.loads(line)
+            if key in rec:
+                vals.append(float(rec[key]))
+    return np.asarray(vals, np.float32)
+
+
+def normalize_curve(curve: np.ndarray, length: int = 128) -> np.ndarray:
+    if len(curve) < 2:
+        return np.zeros(length, np.float32)
+    x = np.interp(
+        np.linspace(0, len(curve) - 1, length), np.arange(len(curve)), curve
+    )
+    std = x.std()
+    return ((x - x.mean()) / (std if std > 1e-9 else 1.0)).astype(np.float32)
+
+
+def find_similar_runs(
+    query_curve: np.ndarray,
+    archive: np.ndarray,
+    k: int = 3,
+    w: int = 0,
+    length: int = 128,
+) -> SearchResult:
+    """archive: (n_runs, length) pre-normalised curves."""
+    q = normalize_curve(query_curve, length)
+    w = w or length // 10
+    return nn_search_scan(q, archive, w=w, k=k, method="lb_improved")

@@ -1,0 +1,20 @@
+from repro.optim.adamw import (
+    OptimizerConfig,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+    optimizer_apply,
+    optimizer_init,
+)
+from repro.optim.schedules import constant, warmup_cosine
+
+__all__ = [
+    "OptimizerConfig",
+    "apply_updates",
+    "clip_by_global_norm",
+    "global_norm",
+    "optimizer_apply",
+    "optimizer_init",
+    "constant",
+    "warmup_cosine",
+]

@@ -1,0 +1,12 @@
+from repro.train.loss import chunked_softmax_xent, full_softmax_xent
+from repro.train.train_step import make_train_step, model_loss
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = [
+    "chunked_softmax_xent",
+    "full_softmax_xent",
+    "make_train_step",
+    "model_loss",
+    "Trainer",
+    "TrainerConfig",
+]

@@ -1,0 +1,115 @@
+"""The jitted training step: loss -> grads -> clip -> optimizer update.
+
+Features (all ParallelConfig knobs, exercised by §Perf):
+
+* microbatch gradient accumulation via ``lax.scan`` (bounds activation
+  memory independently of global batch);
+* chunked vocab-parallel cross-entropy (repro.train.loss);
+* global-norm clipping; optimizer from repro.optim (AdamW low-precision
+  moments / Adafactor);
+* MoE aux-loss folded in with weight ``aux_weight``.
+
+The returned function is pure: (params, opt_state, batch, step) ->
+(params, opt_state, metrics); callers jit it with the mesh shardings
+(see repro.launch.dryrun / repro.launch.train).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ParallelConfig
+from repro.models.model_zoo import Model
+from repro.optim import (
+    OptimizerConfig,
+    apply_updates,
+    clip_by_global_norm,
+    optimizer_apply,
+)
+from repro.train.loss import chunked_softmax_xent, full_softmax_xent
+
+AUX_WEIGHT = 0.01
+MAX_GRAD_NORM = 1.0
+
+
+def model_loss(model: Model, params, batch: dict, parallel: ParallelConfig):
+    """-> (total loss, metrics dict).
+
+    Params are cast to the compute dtype *here*, on the local shard,
+    before any use — so FSDP all-gathers move bf16, not fp32 masters
+    (classic mixed-precision FSDP; §Perf iteration S1).  The convert's
+    vjp returns fp32 grads after the bf16 reduce-scatter.
+    """
+    cfg = model.cfg
+    cdtype = jnp.dtype(parallel.compute_dtype)
+    params = jax.tree.map(lambda p: p.astype(cdtype), params)
+    labels = batch["labels"]
+    if hasattr(model.impl, "hidden"):
+        ve = batch.get("vision_embeds") if cfg.family == "vlm" else None
+        h, aux, _ = model.impl.hidden(params, batch["tokens"], ve)
+        head = (
+            params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
+        )
+        ce, ntok = chunked_softmax_xent(
+            h, head, labels, parallel.loss_chunk, cfg.logit_softcap, cfg.vocab_size
+        )
+    else:
+        logits, aux = model.forward(params, batch)
+        ce, ntok = full_softmax_xent(logits, labels)
+    total = ce + AUX_WEIGHT * aux
+    return total, {"loss": ce, "aux": aux, "n_tokens": ntok}
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: OptimizerConfig,
+    parallel: ParallelConfig,
+    schedule: Callable | None = None,
+):
+    def single_loss(params, mb):
+        return model_loss(model, params, mb, parallel)
+
+    grad_fn = jax.value_and_grad(single_loss, has_aux=True)
+
+    def train_step(params, opt_state, batch, step):
+        n_micro = parallel.microbatch
+        if n_micro and n_micro > 1:
+            b = batch["tokens"].shape[0]
+            assert b % n_micro == 0, (b, n_micro)
+
+            def micro_slices(x):
+                return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+
+            micro = jax.tree.map(micro_slices, batch)
+
+            def acc(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                (loss, metrics), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + metrics["loss"], a_acc + metrics["aux"]), None
+
+            g0 = jax.tree.map(jnp.zeros_like, params)
+            (grads, loss_sum, aux_sum), _ = jax.lax.scan(
+                acc, (g0, jnp.float32(0.0), jnp.float32(0.0)), micro
+            )
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            metrics = {"loss": loss_sum / n_micro, "aux": aux_sum / n_micro}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+            metrics = {"loss": metrics["loss"], "aux": metrics["aux"]}
+
+        grads, gnorm = clip_by_global_norm(grads, MAX_GRAD_NORM)
+        updates, opt_state = optimizer_apply(
+            opt_cfg, grads, opt_state, params, step, schedule
+        )
+        params = apply_updates(params, updates)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = (
+            schedule(step) if schedule is not None else jnp.float32(opt_cfg.lr)
+        )
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,108 @@
+"""Training loop with fault tolerance: checkpoint/auto-resume/monitoring.
+
+Fault model (documented for the 1000+-node deployment; the mechanisms
+below are the single-controller pieces, exercised end-to-end in tests):
+
+* **Node failure** — all state (params, optimizer, data cursor, RNG,
+  step) lives in atomic checkpoints; the launcher re-execs the job and
+  ``Trainer.run`` resumes from ``latest_step`` with zero manual input.
+  Lost work is bounded by ``ckpt_every``.
+* **Stragglers** — steps are synchronous (pjit collectives barrier every
+  step); per-step wall time is tracked and logged so persistent
+  stragglers surface in the step-time histogram; the deterministic data
+  pipeline means a replacement host regenerates its shard exactly.
+* **Loss-curve monitoring** — step metrics are appended to a JSONL log;
+  ``repro.monitor`` runs the paper's DTW cascade over these curves to
+  find the most similar historical run (framework integration of the
+  paper's technique).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.data.pipeline import SyntheticTokenPipeline
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    log_every: int = 10
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    metrics_path: str = ""  # defaults to <ckpt_dir>/metrics.jsonl
+
+
+class Trainer:
+    def __init__(
+        self,
+        train_step: Callable,
+        pipeline: SyntheticTokenPipeline,
+        cfg: TrainerConfig,
+        init_params: Callable[[], Any],
+        init_opt_state: Callable[[Any], Any],
+    ):
+        self.train_step = train_step
+        self.pipeline = pipeline
+        self.cfg = cfg
+        self.ckpt = Checkpointer(cfg.ckpt_dir)
+        self.metrics_path = cfg.metrics_path or os.path.join(
+            cfg.ckpt_dir, "metrics.jsonl"
+        )
+        self._init_params = init_params
+        self._init_opt_state = init_opt_state
+
+    def _resume_or_init(self):
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            step, tree, extra = self.ckpt.restore(latest)
+            self.pipeline.restore(extra["pipeline"])
+            return step, tree["params"], tree["opt_state"]
+        params = self._init_params()
+        return 0, params, self._init_opt_state(params)
+
+    def run(self) -> dict:
+        step, params, opt_state = self._resume_or_init()
+        losses, times = [], []
+        mfile = open(self.metrics_path, "a")
+        while step < self.cfg.total_steps:
+            batch = self.pipeline.next_batch()
+            t0 = time.perf_counter()
+            params, opt_state, metrics = self.train_step(
+                params, opt_state, batch, step
+            )
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            step += 1
+            losses.append(metrics["loss"])
+            times.append(dt)
+            if step % self.cfg.log_every == 0 or step == self.cfg.total_steps:
+                rec = {"step": step, "sec": dt, **metrics}
+                mfile.write(json.dumps(rec) + "\n")
+                mfile.flush()
+            if step % self.cfg.ckpt_every == 0 or step == self.cfg.total_steps:
+                self.ckpt.save(
+                    step,
+                    params,
+                    opt_state,
+                    extra={"pipeline": self.pipeline.state().to_dict()},
+                    blocking=False,
+                )
+        self.ckpt.wait()
+        mfile.close()
+        return {
+            "final_step": step,
+            "final_loss": losses[-1] if losses else float("nan"),
+            "loss_curve": losses,
+            "mean_step_time": float(np.mean(times[1:])) if len(times) > 1 else 0.0,
+            "params": params,
+            "opt_state": opt_state,
+        }

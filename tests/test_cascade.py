@@ -1,0 +1,85 @@
+"""Cascade search == brute force; pruning statistics semantics."""
+
+import numpy as np
+import pytest
+
+from repro.core.cascade import nn_search_host, nn_search_scan
+from repro.core.dtw import dtw_reference
+
+RNG = np.random.default_rng(11)
+
+
+def make_db(n_db=120, n=80):
+    db = RNG.normal(size=(n_db, n)).astype(np.float32).cumsum(axis=1)
+    q = RNG.normal(size=n).astype(np.float32).cumsum()
+    return q, db
+
+
+@pytest.fixture(scope="module")
+def problem():
+    q, db = make_db()
+    w = 8
+    ref = np.array([dtw_reference(q, c, w, 1) for c in db])
+    return q, db, w, ref
+
+
+@pytest.mark.parametrize("method", ["full", "lb_keogh", "lb_improved"])
+@pytest.mark.parametrize("block", [8, 32, 64])
+def test_scan_matches_bruteforce(problem, method, block):
+    q, db, w, ref = problem
+    res = nn_search_scan(q, db, w=w, p=1, block=block, method=method)
+    assert res.index == int(np.argmin(ref))
+    np.testing.assert_allclose(res.distance, ref.min(), rtol=1e-3)
+
+
+@pytest.mark.parametrize("method", ["lb_keogh", "lb_improved"])
+def test_host_matches_bruteforce(problem, method):
+    q, db, w, ref = problem
+    res = nn_search_host(q, db, w=w, p=1, method=method, block=40, dtw_chunk=8)
+    assert res.index == int(np.argmin(ref))
+    np.testing.assert_allclose(res.distance, ref.min(), rtol=1e-3)
+
+
+@pytest.mark.parametrize("k", [1, 3, 7])
+def test_knn(problem, k):
+    q, db, w, ref = problem
+    res = nn_search_scan(q, db, w=w, p=1, k=k, method="lb_improved")
+    want = set(np.argsort(ref, kind="stable")[:k].tolist())
+    assert set(res.indices.tolist()) == want
+    np.testing.assert_allclose(np.sort(ref)[:k], res.distances, rtol=1e-3)
+
+
+def test_p2_search(problem):
+    q, db, w, _ = problem
+    ref = np.array([dtw_reference(q, c, w, 2) for c in db])
+    res = nn_search_scan(q, db, w=w, p=2, method="lb_improved")
+    assert res.index == int(np.argmin(ref))
+    np.testing.assert_allclose(res.distance, ref.min(), rtol=1e-3)
+
+
+def test_stats_accounting(problem):
+    q, db, w, _ = problem
+    res = nn_search_scan(q, db, w=w, p=1, method="lb_improved")
+    s = res.stats
+    assert s.n_candidates == db.shape[0]
+    assert s.lb1_pruned + s.lb2_pruned + s.full_dtw == s.n_candidates
+    assert s.full_dtw >= 1  # the true NN always reaches the DP
+
+
+def test_lb_improved_prunes_at_least_lb_keogh(problem):
+    q, db, w, _ = problem
+    r1 = nn_search_scan(q, db, w=w, p=1, method="lb_keogh")
+    r2 = nn_search_scan(q, db, w=w, p=1, method="lb_improved")
+    assert r2.stats.full_dtw <= r1.stats.full_dtw
+    assert r2.stats.pruning_ratio >= r1.stats.pruning_ratio
+
+
+def test_non_first_block_winner():
+    """Best candidate deep in the scan: bound tightening must not skip it."""
+    q, db = make_db(200, 60)
+    w = 6
+    db2 = db.copy()
+    near = q + RNG.normal(size=60).astype(np.float32) * 0.05
+    db2[187] = near
+    res = nn_search_scan(q, db2, w=w, p=1, method="lb_improved")
+    assert res.index == 187

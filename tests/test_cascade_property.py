@@ -1,0 +1,40 @@
+"""Property test: the cascade is EXACT for arbitrary databases (hypothesis)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cascade import nn_search_scan
+from repro.core.dtw import dtw_reference
+
+floats = st.floats(-30, 30, allow_nan=False, width=32)
+
+
+@st.composite
+def problems(draw):
+    n = draw(st.integers(6, 24))
+    n_db = draw(st.integers(2, 20))
+    w = draw(st.integers(1, max(1, n // 2)))
+    q = draw(st.lists(floats, min_size=n, max_size=n))
+    db = [
+        draw(st.lists(floats, min_size=n, max_size=n)) for _ in range(n_db)
+    ]
+    k = draw(st.integers(1, min(3, n_db)))
+    block = draw(st.sampled_from([4, 8, 32]))
+    return q, db, w, k, block
+
+
+@settings(max_examples=25, deadline=None)
+@given(problems())
+def test_cascade_exactness(problem):
+    q, db, w, k, block = problem
+    qa = np.asarray(q, np.float32)
+    dba = np.asarray(db, np.float32)
+    ref = np.array([dtw_reference(qa, c, w, 1) for c in dba])
+    res = nn_search_scan(qa, dba, w=w, p=1, k=k, block=block)
+    want = np.sort(ref)[:k]
+    np.testing.assert_allclose(res.distances, want, rtol=1e-3, atol=1e-3)
+    # indices give the same distances (ties may permute indices)
+    got_d = np.sort(ref[res.indices])
+    np.testing.assert_allclose(got_d, want, rtol=1e-3, atol=1e-3)

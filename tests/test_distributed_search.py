@@ -1,0 +1,47 @@
+"""Sharded DTW search == local search (8 virtual devices, subprocess)."""
+
+import pytest
+
+from helpers import run_in_subprocess
+
+CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core.cascade import nn_search_scan
+from repro.core.distributed import pad_database, sharded_nn_search
+from repro.core.dtw import dtw_reference
+
+rng = np.random.default_rng(0)
+n, w = 64, 6
+db = rng.normal(size=(250, n)).astype(np.float32).cumsum(axis=1)
+q = np.asarray(rng.normal(size=n).astype(np.float32).cumsum())
+ref = np.array([dtw_reference(q, c, w, 1) for c in db])
+
+devs = np.array(jax.devices())
+assert devs.size == 8, devs
+for mesh_shape, names in (((8,), ("data",)), ((2, 4), ("pod", "data")), ((2, 2, 2), ("pod", "data", "model"))):
+    mesh = Mesh(devs.reshape(mesh_shape), names)
+    dbp, n_real = pad_database(db, mesh, block=8)
+    for sync_every in (1, 4):
+        for k in (1, 3):
+            res = sharded_nn_search(q, dbp, mesh, w=w, k=k, block=8,
+                                    sync_every=sync_every)
+            want = np.argsort(ref, kind="stable")[:k]
+            assert set(res.indices.tolist()) == set(want.tolist()), (
+                mesh_shape, sync_every, k, res.indices, want)
+            np.testing.assert_allclose(res.distances, np.sort(ref)[:k], rtol=1e-3)
+            s = res.stats
+            assert s.lb1_pruned + s.lb2_pruned + s.full_dtw == dbp.shape[0]
+# pruning still effective across shards (bound exchange works)
+mesh = Mesh(devs.reshape(8,), ("data",))
+dbp, _ = pad_database(db, mesh, block=8)
+r_sync = sharded_nn_search(q, dbp, mesh, w=w, block=8, sync_every=1)
+assert r_sync.stats.pruning_ratio > 0.3, r_sync.stats
+print("DIST SEARCH OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_search_matches_local():
+    out = run_in_subprocess(CODE, n_devices=8)
+    assert "DIST SEARCH OK" in out

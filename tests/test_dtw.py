@@ -1,0 +1,82 @@
+"""Banded DTW vs the O(n^2) numpy oracle, all execution paths."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dtw import (
+    dtw_banded,
+    dtw_banded_diag,
+    dtw_batch,
+    dtw_reference,
+)
+
+RNG = np.random.default_rng(42)
+
+
+def _pair(n):
+    x = RNG.normal(size=n).astype(np.float32).cumsum()
+    y = RNG.normal(size=n).astype(np.float32).cumsum()
+    return x, y
+
+
+@pytest.mark.parametrize("n", [4, 17, 64, 101])
+@pytest.mark.parametrize("w", [1, 3, 10])
+@pytest.mark.parametrize("p", [1, 2])
+def test_row_scan_matches_oracle(n, w, p):
+    x, y = _pair(n)
+    ref = dtw_reference(x, y, w, p)
+    got = float(dtw_banded(jnp.asarray(x), jnp.asarray(y), w, p))
+    assert abs(got - ref) <= 1e-3 * max(1.0, abs(ref))
+
+
+@pytest.mark.parametrize("n", [4, 33, 80])
+@pytest.mark.parametrize("w", [1, 7])
+@pytest.mark.parametrize("p", [1, 2, jnp.inf])
+def test_diag_scan_matches_oracle(n, w, p):
+    x, y = _pair(n)
+    ref = dtw_reference(x, y, w, np.inf if p == jnp.inf else p)
+    got = float(dtw_banded_diag(jnp.asarray(x), jnp.asarray(y), w, p))
+    assert abs(got - ref) <= 1e-3 * max(1.0, abs(ref))
+
+
+def test_unconstrained_band_equals_full_dtw():
+    x, y = _pair(24)
+    ref = dtw_reference(x, y, 24, 1)  # w >= n: unconstrained
+    got = float(dtw_banded(jnp.asarray(x), jnp.asarray(y), 50, 1))
+    assert abs(got - ref) <= 1e-3 * max(1.0, abs(ref))
+
+
+def test_w0_is_lp_distance():
+    x, y = _pair(31)
+    got = float(dtw_banded(jnp.asarray(x), jnp.asarray(y), 0, 1))
+    assert abs(got - np.abs(x - y).sum()) < 1e-2
+
+
+def test_identity_is_zero():
+    x, _ = _pair(50)
+    assert float(dtw_banded(jnp.asarray(x), jnp.asarray(x), 5, 1)) < 1e-4
+
+
+def test_symmetry():
+    x, y = _pair(40)
+    a = float(dtw_banded(jnp.asarray(x), jnp.asarray(y), 4, 1))
+    b = float(dtw_banded(jnp.asarray(y), jnp.asarray(x), 4, 1))
+    assert abs(a - b) < 1e-3 * max(1.0, a)
+
+
+def test_batch_matches_single():
+    q, _ = _pair(60)
+    cands = np.stack([_pair(60)[1] for _ in range(7)])
+    batch = np.asarray(dtw_batch(jnp.asarray(q), jnp.asarray(cands), 6, 1))
+    for i in range(7):
+        single = float(dtw_banded(jnp.asarray(q), jnp.asarray(cands[i]), 6, 1))
+        assert abs(batch[i] - single) < 1e-3 * max(1.0, abs(single))
+
+
+def test_row_and_diag_agree():
+    for n, w in [(16, 2), (55, 11), (90, 30)]:
+        x, y = _pair(n)
+        a = float(dtw_banded(jnp.asarray(x), jnp.asarray(y), w, 2))
+        b = float(dtw_banded_diag(jnp.asarray(x), jnp.asarray(y), w, 2))
+        assert abs(a - b) <= 1e-3 * max(1.0, abs(a))

@@ -1,0 +1,52 @@
+"""Early-abandoning DTW (paper §3 optimisation): exactness below the
+bound, validity of abandonment, end-to-end search equivalence + speed."""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cascade import nn_search_host
+from repro.core.dtw import BIG, dtw_banded, dtw_banded_early, dtw_reference
+
+RNG = np.random.default_rng(31)
+
+
+def test_no_bound_matches_plain():
+    for n, w in [(20, 3), (64, 6), (101, 10)]:
+        x = RNG.normal(size=n).astype(np.float32).cumsum()
+        y = RNG.normal(size=n).astype(np.float32).cumsum()
+        for p in (1, 2):
+            a = float(dtw_banded(jnp.asarray(x), jnp.asarray(y), w, p, powered=True))
+            b = float(
+                dtw_banded_early(jnp.asarray(x), jnp.asarray(y), w, jnp.asarray(BIG), p)
+            )
+            np.testing.assert_allclose(a, b, rtol=1e-5)
+
+
+def test_abandon_is_sound():
+    """If the result >= bound, the true DTW is also >= bound; below the
+    bound the exact value is returned."""
+    n, w = 80, 8
+    for _ in range(20):
+        x = RNG.normal(size=n).astype(np.float32).cumsum()
+        y = RNG.normal(size=n).astype(np.float32).cumsum()
+        true = dtw_reference(x, y, w, 1)
+        for frac in (0.25, 0.9, 1.5):
+            bound = np.float32(true * frac)
+            got = float(
+                dtw_banded_early(jnp.asarray(x), jnp.asarray(y), w, jnp.asarray(bound), 1)
+            )
+            if got < bound:
+                np.testing.assert_allclose(got, true, rtol=1e-4)
+            else:
+                assert true >= bound - 1e-3 * max(1.0, abs(true))
+
+
+def test_host_search_with_early_abandon_is_exact():
+    db = RNG.normal(size=(200, 96)).astype(np.float32).cumsum(axis=1)
+    q = RNG.normal(size=96).astype(np.float32).cumsum()
+    ref = nn_search_host(q, db, w=9, method="lb_improved", early_abandon=False)
+    got = nn_search_host(q, db, w=9, method="lb_improved", early_abandon=True)
+    assert got.index == ref.index
+    np.testing.assert_allclose(got.distance, ref.distance, rtol=1e-4)

@@ -1,0 +1,40 @@
+"""Elastic restore: a checkpoint written on one topology restores onto
+another mesh's shardings (the node-failure / rescale path)."""
+
+import numpy as np
+import pytest
+
+from helpers import run_in_subprocess
+
+CODE = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.checkpoint import Checkpointer
+import tempfile, os
+
+tmp = tempfile.mkdtemp()
+params = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+          "b": jnp.ones((8,), jnp.bfloat16)}
+ck = Checkpointer(tmp)
+ck.save(7, params, extra={"pipeline": {"step": 7, "seed": 0}})
+
+# restore onto a 2x4 mesh with explicit shardings ("elastic rescale")
+mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+shardings = {"params": {
+    "w": NamedSharding(mesh, P("data", "model")),
+    "b": NamedSharding(mesh, P(None,)),
+}}
+step, tree, extra = ck.restore(shardings=shardings)
+assert step == 7 and extra["pipeline"]["step"] == 7
+w = tree["params"]["w"]
+assert w.sharding.spec == P("data", "model"), w.sharding
+np.testing.assert_array_equal(np.asarray(w), np.arange(64).reshape(8, 8))
+np.testing.assert_array_equal(np.asarray(tree["params"]["b"], np.float32), 1.0)
+print("ELASTIC OK")
+"""
+
+
+@pytest.mark.slow
+def test_elastic_restore_onto_mesh():
+    out = run_in_subprocess(CODE, n_devices=8)
+    assert "ELASTIC OK" in out

@@ -1,0 +1,70 @@
+"""Warping envelopes: vHGW vs naive oracle + the paper's envelope lemmas."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.envelope import envelope, envelope_batch, envelope_naive
+
+series = st.lists(
+    st.floats(-100, 100, allow_nan=False, width=32), min_size=2, max_size=80
+)
+windows = st.integers(0, 20)
+
+
+@settings(max_examples=40, deadline=None)
+@given(series, windows)
+def test_envelope_matches_naive(xs, w):
+    x = np.asarray(xs, np.float32)
+    u, l = envelope(jnp.asarray(x), w)
+    un, ln = envelope_naive(x, w)
+    # atol floor: XLA CPU flushes float32 subnormals to zero (FTZ)
+    np.testing.assert_allclose(np.asarray(u), un, rtol=1e-6, atol=1e-30)
+    np.testing.assert_allclose(np.asarray(l), ln, rtol=1e-6, atol=1e-30)
+
+
+@settings(max_examples=25, deadline=None)
+@given(series, st.integers(1, 10))
+def test_envelope_brackets_series(xs, w):
+    x = jnp.asarray(xs, jnp.float32)
+    u, l = envelope(x, w)
+    assert bool(jnp.all(u >= x)) and bool(jnp.all(l <= x))
+
+
+@settings(max_examples=25, deadline=None)
+@given(series, st.integers(1, 8))
+def test_lemma5_and_corollary2(xs, w):
+    """U(L(h)) <= h <= L(U(h)); U(L(U(h))) == U(h) (paper Lemma 5, Cor 2)."""
+    h = jnp.asarray(xs, jnp.float32)
+    u, _ = envelope(h, w)
+    _, l = envelope(h, w)
+    u_of_l = envelope(l, w)[0]
+    l_of_u = envelope(u, w)[1]
+    assert bool(jnp.all(u_of_l <= h + 1e-5))
+    assert bool(jnp.all(l_of_u >= h - 1e-5))
+    # Corollary 2
+    u_l_u = envelope(l_of_u, w)[0]
+    np.testing.assert_allclose(np.asarray(u_l_u), np.asarray(u), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(series, series, st.integers(1, 8))
+def test_lemma4_duality(xs, ys, w):
+    """L(x) >= y  <=>  x >= U(y) (paper Lemma 4)."""
+    n = min(len(xs), len(ys))
+    x = jnp.asarray(xs[:n], jnp.float32)
+    y = jnp.asarray(ys[:n], jnp.float32)
+    _, lx = envelope(x, w)
+    uy, _ = envelope(y, w)
+    assert bool(jnp.all(lx >= y)) == bool(jnp.all(x >= uy))
+
+
+def test_batch_matches_single():
+    rng = np.random.default_rng(0)
+    xs = rng.normal(size=(9, 57)).astype(np.float32)
+    ub, lb = envelope_batch(jnp.asarray(xs), 6)
+    for i in range(9):
+        u, l = envelope(jnp.asarray(xs[i]), 6)
+        np.testing.assert_allclose(np.asarray(ub[i]), np.asarray(u))
+        np.testing.assert_allclose(np.asarray(lb[i]), np.asarray(l))

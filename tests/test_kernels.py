@@ -1,0 +1,92 @@
+"""Pallas kernels vs their ref.py oracles: shape/dtype sweeps (interpret)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dtw import dtw_reference
+from repro.core.envelope import envelope, envelope_naive
+from repro.kernels import (
+    dtw_op,
+    dtw_ref,
+    envelope_op,
+    envelope_ref,
+    lb_improved_op,
+    lb_improved_ref,
+    lb_keogh_op,
+    lb_keogh_ref,
+)
+
+RNG = np.random.default_rng(5)
+
+SHAPES = [(4, 32, 3), (8, 100, 10), (3, 65, 16), (16, 128, 12), (5, 47, 46)]
+
+
+@pytest.mark.parametrize("b,n,w", SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_envelope_kernel(b, n, w, dtype):
+    xs = RNG.normal(size=(b, n)).astype(np.float32).cumsum(axis=1)
+    xs = jnp.asarray(xs, dtype)
+    u, l = envelope_op(xs, w, interpret=True)
+    ur, lr = envelope_ref(xs, w)
+    rtol = 1e-6 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(u, np.float32), np.asarray(ur, np.float32), rtol=rtol
+    )
+    np.testing.assert_allclose(
+        np.asarray(l, np.float32), np.asarray(lr, np.float32), rtol=rtol
+    )
+
+
+@pytest.mark.parametrize("b,n,w", SHAPES)
+@pytest.mark.parametrize("p", [1, 2])
+def test_lb_keogh_kernel(b, n, w, p):
+    xs = RNG.normal(size=(b, n)).astype(np.float32).cumsum(axis=1)
+    q = RNG.normal(size=n).astype(np.float32).cumsum()
+    u, l = envelope(jnp.asarray(q), w)
+    lb, h = lb_keogh_op(jnp.asarray(xs), u, l, p, interpret=True)
+    lbr, hr = lb_keogh_ref(jnp.asarray(xs), u, l, p)
+    np.testing.assert_allclose(np.asarray(lb), np.asarray(lbr), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("b,n,w", SHAPES)
+@pytest.mark.parametrize("p", [1, 2])
+def test_lb_improved_kernel(b, n, w, p):
+    """Full two-pass kernel chain vs the pure-jnp Corollary 4 oracle."""
+    xs = RNG.normal(size=(b, n)).astype(np.float32).cumsum(axis=1)
+    q = jnp.asarray(RNG.normal(size=n).astype(np.float32).cumsum())
+    u, l = envelope(q, w)
+    got = lb_improved_op(jnp.asarray(xs), q, u, l, w, p, interpret=True)
+    want = lb_improved_ref(jnp.asarray(xs), q, u, l, w, p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4)
+
+
+@pytest.mark.parametrize("b,n,w", SHAPES)
+@pytest.mark.parametrize("p", [1, 2])
+def test_dtw_kernel(b, n, w, p):
+    xs = RNG.normal(size=(b, n)).astype(np.float32).cumsum(axis=1)
+    q = RNG.normal(size=n).astype(np.float32).cumsum()
+    d = dtw_op(jnp.asarray(q), jnp.asarray(xs), w, p, interpret=True)
+    dr = dtw_ref(jnp.asarray(q), jnp.asarray(xs), w, p)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(dr), rtol=3e-4)
+    # spot-check one lane against the numpy DP oracle
+    ref0 = dtw_reference(q, xs[0], w, p)
+    assert abs(float(d[0]) - ref0) <= 1e-3 * max(1.0, abs(ref0))
+
+
+def test_dtw_kernel_powered():
+    xs = RNG.normal(size=(4, 64)).astype(np.float32).cumsum(axis=1)
+    q = RNG.normal(size=64).astype(np.float32).cumsum()
+    d2 = dtw_op(jnp.asarray(q), jnp.asarray(xs), 6, 2, powered=True, interpret=True)
+    d = dtw_op(jnp.asarray(q), jnp.asarray(xs), 6, 2, powered=False, interpret=True)
+    np.testing.assert_allclose(np.asarray(d) ** 2, np.asarray(d2), rtol=1e-3)
+
+
+def test_envelope_kernel_odd_batch_padding():
+    xs = RNG.normal(size=(3, 33)).astype(np.float32)
+    u, l = envelope_op(jnp.asarray(xs), 4, tile_b=8, interpret=True)
+    for i in range(3):
+        un, ln = envelope_naive(xs[i], 4)
+        np.testing.assert_allclose(np.asarray(u[i]), un, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(l[i]), ln, rtol=1e-6)

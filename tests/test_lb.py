@@ -1,0 +1,87 @@
+"""LB_Keogh / LB_Improved: lower-bound + tightness properties (paper §10-11)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.dtw import dtw_reference
+from repro.core.envelope import envelope
+from repro.core.lb import (
+    lb_improved,
+    lb_improved_powered_batch,
+    lb_keogh,
+    lb_keogh_powered_batch,
+    project,
+)
+
+floats = st.floats(-50, 50, allow_nan=False, width=32)
+
+
+def pairs(min_n=4, max_n=48):
+    return st.integers(min_n, max_n).flatmap(
+        lambda n: st.tuples(
+            st.lists(floats, min_size=n, max_size=n),
+            st.lists(floats, min_size=n, max_size=n),
+            st.integers(1, max(1, n // 2)),
+        )
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(pairs())
+def test_lower_bound_chain(data):
+    """LB_Keogh <= LB_Improved <= DTW (Corollaries 3, 4)."""
+    xs, ys, w = data
+    c = jnp.asarray(xs, jnp.float32)
+    q = jnp.asarray(ys, jnp.float32)
+    u, l = envelope(q, w)
+    for p in (1, 2):
+        lbk = float(lb_keogh(c, u, l, p))
+        lbi = float(lb_improved(c, q, w, p))
+        d = dtw_reference(np.asarray(ys), np.asarray(xs), w, p)
+        tol = 1e-3 * max(1.0, abs(d))
+        assert lbk <= lbi + tol
+        assert lbi <= d + tol
+
+
+@settings(max_examples=30, deadline=None)
+@given(pairs())
+def test_projection_in_envelope(data):
+    """H(c, q) lies inside the envelope of q (Eq. 1)."""
+    xs, ys, w = data
+    c = jnp.asarray(xs, jnp.float32)
+    q = jnp.asarray(ys, jnp.float32)
+    u, l = envelope(q, w)
+    h = project(c, u, l)
+    assert bool(jnp.all(h <= u + 1e-6)) and bool(jnp.all(h >= l - 1e-6))
+
+
+@settings(max_examples=30, deadline=None)
+@given(pairs())
+def test_corollary3_accuracy_bound(data):
+    """DTW - LB_Keogh <= || max(U-y, y-L) ||_p (Corollary 3, 2nd part)."""
+    xs, ys, w = data
+    c = jnp.asarray(xs, jnp.float32)
+    q = jnp.asarray(ys, jnp.float32)
+    u, l = envelope(q, w)
+    d = dtw_reference(np.asarray(ys), np.asarray(xs), w, 1)
+    lbk = float(lb_keogh(c, u, l, 1))
+    env_width = float(jnp.sum(jnp.maximum(u - q, q - l)))
+    assert d - lbk <= env_width + 1e-2 * max(1.0, env_width)
+
+
+def test_batched_match_single():
+    rng = np.random.default_rng(3)
+    n, w = 64, 6
+    q = jnp.asarray(rng.normal(size=n).cumsum(), jnp.float32)
+    cs = jnp.asarray(rng.normal(size=(11, n)).cumsum(axis=1), jnp.float32)
+    u, l = envelope(q, w)
+    for p in (1, 2):
+        batch1 = np.asarray(lb_keogh_powered_batch(cs, u, l, p))
+        batch2 = np.asarray(lb_improved_powered_batch(cs, q, u, l, w, p))
+        for i in range(11):
+            s1 = float(lb_keogh(cs[i], u, l, p)) ** (1 if p == 1 else p)
+            s2 = float(lb_improved(cs[i], q, w, p)) ** (1 if p == 1 else p)
+            np.testing.assert_allclose(batch1[i], s1, rtol=2e-4)
+            np.testing.assert_allclose(batch2[i], s2, rtol=2e-4)

@@ -1,0 +1,34 @@
+"""DTW run-monitoring integration (paper technique as framework feature)."""
+
+import json
+
+import numpy as np
+
+from repro.monitor import find_similar_runs, load_metric_curve, normalize_curve
+
+
+def test_find_similar_runs_identifies_shape_match():
+    rng = np.random.default_rng(3)
+    t = np.linspace(0, 1, 128)
+    # archive: decaying runs, one diverging run, one oscillating run
+    archive = np.stack(
+        [
+            normalize_curve(np.exp(-3 * t) + 0.01 * rng.standard_normal(128)),
+            normalize_curve(np.exp(-3 * t) * (1 + 0.1 * np.sin(20 * t))),
+            normalize_curve(np.exp(2 * t)),  # divergence
+            normalize_curve(np.sin(8 * t)),
+        ]
+    ).astype(np.float32)
+    query = np.exp(2.2 * t) + 0.02 * rng.standard_normal(128)  # diverging run
+    res = find_similar_runs(query, archive, k=2)
+    assert res.index == 2
+
+
+def test_load_metric_curve(tmp_path):
+    path = tmp_path / "metrics.jsonl"
+    with open(path, "w") as f:
+        for i in range(10):
+            f.write(json.dumps({"step": i, "loss": 1.0 / (i + 1)}) + "\n")
+    curve = load_metric_curve(str(path))
+    assert curve.shape == (10,)
+    assert curve[0] == 1.0

@@ -1,0 +1,124 @@
+"""The paper's mathematical properties, checked with hypothesis.
+
+Theorem 1 (tight weak triangle inequality), Corollary 1 (DTW_inf metric),
+Lemma 1 (constant series), Proposition 2 (value-separated => l1),
+Proposition 3 (norm ordering), translation invariance, and the Section 6
+triangle-violation experiment.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.dtw import dtw_banded, dtw_banded_diag, dtw_reference
+from repro.core.metrics import theorem1_bound, triangle_ratio, violation_fraction
+
+floats = st.floats(-20, 20, allow_nan=False, width=32)
+
+
+def triples(n_max=24):
+    return st.integers(4, n_max).flatmap(
+        lambda n: st.tuples(
+            *(st.lists(floats, min_size=n, max_size=n) for _ in range(3)),
+            st.integers(1, max(1, n // 2)),
+        )
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(triples())
+def test_theorem1_weak_triangle(data):
+    xs, ys, zs, w = data
+    n = len(xs)
+    for p in (1, 2):
+        dxy = dtw_reference(xs, ys, w, p)
+        dyz = dtw_reference(ys, zs, w, p)
+        dxz = dtw_reference(xs, zs, w, p)
+        c = theorem1_bound(n, w, p)
+        assert dxy + dyz >= dxz / c - 1e-3 * max(1.0, dxz)
+
+
+@settings(max_examples=25, deadline=None)
+@given(triples())
+def test_corollary1_dtw_inf_triangle(data):
+    xs, ys, zs, w = data
+    dxy = dtw_reference(xs, ys, w, np.inf)
+    dyz = dtw_reference(ys, zs, w, np.inf)
+    dxz = dtw_reference(xs, zs, w, np.inf)
+    assert dxy + dyz >= dxz - 1e-4
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(floats, min_size=3, max_size=40), st.floats(-5, 5), st.integers(1, 8))
+def test_lemma1_constant_series(xs, c, w):
+    """y = const -> DTW_p = l_p distance."""
+    x = np.asarray(xs, np.float32)
+    y = np.full_like(x, np.float32(c))
+    got = dtw_reference(x, y, w, 1)
+    assert abs(got - np.abs(x - y).sum()) <= 1e-3 * max(1.0, got)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(0.125, 20, width=32), min_size=3, max_size=30), st.integers(1, 6))
+def test_proposition2_value_separated(xs, w):
+    """x >= 0 >= y -> DTW_1(x,y) = ||x-y||_1."""
+    x = np.asarray(xs, np.float32)
+    y = -x[::-1].copy()
+    got = dtw_reference(x, y, max(w, len(x)), 1)  # unconstrained
+    assert abs(got - np.abs(x - y).sum()) <= 1e-3 * max(1.0, got)
+
+
+@settings(max_examples=20, deadline=None)
+@given(triples(18))
+def test_proposition3_norm_ordering(data):
+    """(2n)^(1/p-1/q) DTW_q >= DTW_p for p < q."""
+    xs, ys, _, w = data
+    n = len(xs)
+    d1 = dtw_reference(xs, ys, w, 1)
+    d2 = dtw_reference(xs, ys, w, 2)
+    assert (2 * n) ** (1 - 0.5) * d2 >= d1 - 1e-3 * max(1.0, d1)
+    # monotone decrease in p
+    dinf = dtw_reference(xs, ys, w, np.inf)
+    assert d1 >= d2 - 1e-4 and d2 >= dinf - 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(floats, min_size=4, max_size=30), st.floats(-10, 10), st.integers(1, 5))
+def test_translation_invariance(xs, b, w):
+    x = jnp.asarray(xs, jnp.float32)
+    y = jnp.asarray(xs[::-1], jnp.float32)
+    a = float(dtw_banded(x, y, w, 1))
+    bshift = float(dtw_banded(x + np.float32(b), y + np.float32(b), w, 1))
+    assert abs(a - bshift) <= 1e-2 * max(1.0, abs(a))
+
+
+def test_section6_violation_rates():
+    """White noise ~ 0 violations; random walk has a substantial rate."""
+    rng = np.random.default_rng(7)
+    wn = jnp.asarray(rng.standard_normal((60, 50)), jnp.float32)
+    rw = jnp.asarray(
+        rng.standard_normal((60, 50)).cumsum(axis=1), jnp.float32
+    )
+    frac_wn, _ = violation_fraction(wn, rng, 150, w=50, p=1)
+    frac_rw, _ = violation_fraction(rw, rng, 150, w=50, p=1)
+    assert frac_wn <= 0.02
+    assert frac_rw >= 0.05  # paper reports ~20% for DTW_1
+
+
+def test_paper_counterexample_lemma2():
+    """The X, Y, Z construction before Lemma 2, exactly."""
+    m, eps = 5, 0.25
+    w = m - 1
+    X = np.zeros(2 * m + 1, np.float32)
+    Y = np.concatenate([np.zeros(m), [eps], np.zeros(m)]).astype(np.float32)
+    Z = np.concatenate([[0.0], np.full(2 * m - 1, eps), [0.0]]).astype(np.float32)
+    dxy = dtw_reference(X, Y, w, 1)
+    dyz = dtw_reference(Y, Z, w, 1)
+    dxz = dtw_reference(X, Z, w, 1)
+    assert abs(dxy - eps) < 1e-6
+    assert abs(dyz - 0.0) < 1e-6
+    assert abs(dxz - (2 * m - 1) * eps) < 1e-5
+    # the tight constant of Theorem 1 is achieved
+    c = theorem1_bound(len(X), w, 1)
+    np.testing.assert_allclose(dxy + dyz, dxz / c, rtol=1e-5)

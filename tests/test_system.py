@@ -1,0 +1,53 @@
+"""End-to-end behaviour of the paper's system: retrieval quality, the
+paper's headline claims at test scale, and the serving path."""
+
+import numpy as np
+
+from repro.core.cascade import nn_search_host, nn_search_scan
+from repro.data.synthetic import cylinder_bell_funnel, random_walks
+
+
+def test_paper_claim_pruning_hierarchy():
+    """Paper §12: LB_Improved prunes 2-4x more candidates than LB_Keogh
+    (exact ratio is data/scale dependent; the *direction* must hold and
+    be substantial on random walks)."""
+    rng = np.random.default_rng(2)
+    db = random_walks(rng, 600, 256)
+    hits = []
+    for qi in range(5):
+        q = random_walks(rng, 1, 256)[0]
+        rk = nn_search_scan(q, db, w=25, method="lb_keogh")
+        ri = nn_search_scan(q, db, w=25, method="lb_improved")
+        assert ri.index == rk.index
+        hits.append((rk.stats.full_dtw, ri.stats.full_dtw))
+    dtw_k = sum(h[0] for h in hits)
+    dtw_i = sum(h[1] for h in hits)
+    assert dtw_i < dtw_k, (dtw_k, dtw_i)
+    # paper reports 2-4x at 10k x 1000-sample scale; at this reduced size
+    # the gap narrows — require a substantial (>=1.2x) reduction
+    assert dtw_k / max(dtw_i, 1) >= 1.2, (dtw_k, dtw_i)
+
+
+def test_retrieval_finds_planted_neighbor():
+    rng = np.random.default_rng(4)
+    x, _ = cylinder_bell_funnel(rng, 40)
+    q = x[17] + 0.05 * rng.standard_normal(x.shape[1]).astype(np.float32)
+    res = nn_search_host(q, x, w=12, method="lb_improved")
+    assert res.index == 17
+
+
+def test_serving_generates():
+    import jax
+    from repro.configs.base import ParallelConfig
+    from repro.configs.registry import get_config
+    from repro.models.model_zoo import build_model
+    from repro.serve import ServeEngine
+
+    cfg = get_config("granite-3-2b", reduced=True)
+    model = build_model(cfg, ParallelConfig(remat="none", compute_dtype="float32"))
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, max_len=24)
+    prompts = np.ones((2, 4), np.int32)
+    out = engine.generate(prompts, 8)
+    assert out.shape == (2, 8)
+    assert (out >= 0).all() and (out < cfg.vocab_size).all()
