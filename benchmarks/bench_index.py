@@ -1,0 +1,84 @@
+"""Stage-0 triangle-index pruning vs the LB_Keogh-only cascade.
+
+For each series family (random walk / CBF / white noise) we build a
+reference index and answer the same queries twice: through the 4-stage
+``nn_search_indexed`` and through the plain LB_Keogh scan.  Reported
+per row: query latency, the stage-0 pruning ratio (candidates killed
+with O(R) arithmetic before any envelope work), and the end-to-end DP
+ratio of both paths.  Neighbours are asserted identical — stage 0 is
+exact, never approximate.
+
+p = inf is where Theorem 1 bites hardest (c = 1: DTW_inf is a metric,
+LB_tri is the exact reverse triangle inequality); the p = 1 rows show
+the weak-constant regime honestly (c = min(2w+1, n), bounds rarely
+fire for wide bands).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cascade import nn_search_indexed, nn_search_scan
+from repro.data.synthetic import cylinder_bell_funnel, random_walks, white_noise
+from repro.index import build_index
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
+
+
+def _families(rng, n_db, length):
+    return {
+        "random_walk": random_walks(rng, n_db, length),
+        "cbf": cylinder_bell_funnel(rng, -(-n_db // 3))[0][:, :length][:n_db],
+        "white_noise": white_noise(rng, n_db, length),
+    }
+
+
+def run(report):
+    rng = np.random.default_rng(5)
+    n_db = 256 if FAST else 2048
+    length = 128 if FAST else 512
+    n_queries = 4 if FAST else 16
+    n_refs = 12 if FAST else 32
+    w = length // 10
+
+    for fam, db in _families(rng, n_db, length).items():
+        for p_name, p in (("inf", jnp.inf), ("1", 1)):
+            t0 = time.perf_counter()
+            index = build_index(db, w=w, p=p, n_refs=n_refs, seed=0)
+            build_s = time.perf_counter() - t0
+            report(f"index/{fam}/p{p_name}/build", build_s * 1e6, f"R={n_refs}")
+
+            qs = np.asarray(
+                db[rng.integers(0, n_db, n_queries)]
+                + rng.normal(scale=0.5, size=(n_queries, length)).astype(np.float32)
+            )
+            stage0 = dtw_idx = dtw_base = 0
+            t_idx = t_base = 0.0
+            for q in qs:
+                t0 = time.perf_counter()
+                r_idx = nn_search_indexed(q, db, index)
+                t_idx += time.perf_counter() - t0
+                t0 = time.perf_counter()
+                r_base = nn_search_scan(q, db, w=w, p=p, method="lb_keogh")
+                t_base += time.perf_counter() - t0
+                assert r_idx.index == r_base.index or np.isclose(
+                    r_idx.distance, r_base.distance, rtol=1e-3
+                ), f"{fam} p={p_name}: {r_idx.index} != {r_base.index}"
+                stage0 += r_idx.stats.lb0_pruned
+                dtw_idx += r_idx.stats.full_dtw
+                dtw_base += r_base.stats.full_dtw
+            total = n_queries * n_db
+            report(
+                f"index/{fam}/p{p_name}/indexed",
+                t_idx / n_queries * 1e6,
+                f"stage0_pct={100*stage0/total:.1f} dp_pct={100*dtw_idx/total:.1f}",
+            )
+            report(
+                f"index/{fam}/p{p_name}/lb_keogh_only",
+                t_base / n_queries * 1e6,
+                f"dp_pct={100*dtw_base/total:.1f}",
+            )

@@ -13,6 +13,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         bench_classify,
+        bench_index,
         bench_kernels,
         bench_lb,
         bench_triangle,
@@ -31,6 +32,7 @@ def main() -> None:
     for mod in (
         bench_kernels,
         bench_triangle,
+        bench_index,
         bench_lb,
         bench_classify,
         perf_search,

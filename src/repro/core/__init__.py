@@ -21,10 +21,16 @@ from repro.core.cascade import (
     SearchResult,
     SearchStats,
     nn_search_host,
+    nn_search_indexed,
     nn_search_scan,
 )
 from repro.core.classify import classification_accuracy, nn_classify
-from repro.core.metrics import theorem1_bound, triangle_ratio, violation_fraction
+from repro.core.metrics import (
+    theorem1_bound,
+    triangle_lower_bound,
+    triangle_ratio,
+    violation_fraction,
+)
 
 __all__ = [
     "BIG",
@@ -46,9 +52,11 @@ __all__ = [
     "SearchStats",
     "nn_search_scan",
     "nn_search_host",
+    "nn_search_indexed",
     "nn_classify",
     "classification_accuracy",
     "triangle_ratio",
     "theorem1_bound",
+    "triangle_lower_bound",
     "violation_fraction",
 ]

@@ -51,12 +51,25 @@ class SearchStats:
     blocks_total: int = 0
     blocks_lb2: int = 0  # blocks where pass 2 actually executed
     blocks_dtw: int = 0  # blocks where the DP actually executed
+    # stage-0 triangle-index counters (nn_search_indexed only)
+    lb0_pruned: int = 0  # discarded by LB_tri before any envelope work
+    ref_dtw: int = 0  # exact DPs spent on references at query time (2R:
+    #                   one band-w and one band-2w sweep per reference)
+    clusters_total: int = 0
+    clusters_pruned: int = 0  # clusters discarded wholesale at stage 0
 
     @property
     def pruning_ratio(self) -> float:
         if self.n_candidates == 0:
             return 0.0
         return 1.0 - self.full_dtw / self.n_candidates
+
+    @property
+    def stage0_ratio(self) -> float:
+        """Fraction of candidates killed before any per-candidate LB work."""
+        if self.n_candidates == 0:
+            return 0.0
+        return self.lb0_pruned / self.n_candidates
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,10 +107,13 @@ def make_block_step(
     block: int,
     method: Method,
 ):
-    """Build the scan body shared by local and sharded (shard_map) search.
+    """Build the scan body shared by local, sharded and indexed search.
 
     carry = (top_v, top_i, gbound, lb1_pruned, lb2_pruned, dtw_count,
-             lb2_blocks, dtw_blocks);  input = (block_array, base_index).
+             lb2_blocks, dtw_blocks);  input = (block_array, lane_indices)
+    where ``lane_indices`` is the (block,) vector of candidate ids — a
+    contiguous range for the plain scan, a compacted survivor gather for
+    ``nn_search_indexed``.
     ``gbound`` is an externally-supplied pruning bound (the sharded search
     pmin-exchanges it between rounds; local search leaves it at BIG).
     All values powered (no l_p root).
@@ -105,7 +121,7 @@ def make_block_step(
 
     def body(carry, inp):
         top_v, top_i, gbound, c_lb1, c_lb2, c_dtw, b_lb2, b_dtw = carry
-        blk, start = inp
+        blk, cand_i = inp
         bound = jnp.minimum(top_v[-1], gbound)  # k-th best (powered)
 
         if method == "full":
@@ -143,7 +159,6 @@ def make_block_step(
         d = jnp.where(alive2, d, BIG)
 
         # merge block results into the running top-k
-        cand_i = start + jnp.arange(block)
         all_v = jnp.concatenate([top_v, d])
         all_i = jnp.concatenate([top_i, cand_i])
         neg_v, sel = jax.lax.top_k(-all_v, k)
@@ -159,10 +174,12 @@ def make_block_step(
     return body
 
 
-def init_carry(k: int):
+def init_carry(k: int, top_v: jax.Array | None = None, top_i: jax.Array | None = None):
+    """Fresh scan carry; optionally seeded with an already-known top-k
+    (the indexed search seeds it with the exact reference distances)."""
     return (
-        jnp.full((k,), BIG),
-        jnp.full((k,), -1, jnp.int32),
+        jnp.full((k,), BIG) if top_v is None else jnp.asarray(top_v),
+        jnp.full((k,), -1, jnp.int32) if top_i is None else jnp.asarray(top_i, jnp.int32),
         jnp.asarray(BIG),
         jnp.int32(0),
         jnp.int32(0),
@@ -189,9 +206,9 @@ def _scan_search(
     upper, lower = envelope(q, w)
     nb = db.shape[0] // block
     blocks = db.reshape(nb, block, n)
-    base = jnp.arange(nb) * block
+    idx = (jnp.arange(nb) * block)[:, None] + jnp.arange(block)[None, :]
     body = make_block_step(q, upper, lower, w, p, k, block, method)
-    carry, _ = jax.lax.scan(body, init_carry(k), (blocks, base))
+    carry, _ = jax.lax.scan(body, init_carry(k), (blocks, idx))
     top_v, top_i, _gbound, c1, c2, c3, b2, b3 = carry
     return top_v, top_i, c1, c2, c3, b2, b3
 
@@ -214,11 +231,13 @@ def nn_search_scan(
         q, dbp, int(w), p, int(k), int(block), method
     )
     n_pad = dbp.shape[0] - n_db
+    # padded lanes are lb1-pruned when an LB pass ran; with method="full"
+    # no LB pass exists and the pads reach the DP instead
     stats = SearchStats(
         n_candidates=n_db,
-        lb1_pruned=int(c1) - n_pad,  # padded lanes are always lb1-pruned
+        lb1_pruned=int(c1) - (0 if method == "full" else n_pad),
         lb2_pruned=int(c2),
-        full_dtw=int(c3),
+        full_dtw=int(c3) - (n_pad if method == "full" else 0),
         blocks_total=dbp.shape[0] // block,
         blocks_lb2=int(b2),
         blocks_dtw=int(b3),
@@ -346,5 +365,190 @@ def nn_search_host(
     return SearchResult(
         distances=np.asarray(finish_cost(jnp.asarray(top_v), p)),
         indices=top_i,
+        stats=stats,
+    )
+
+
+# --------------------------------------------------------------- indexed
+
+
+@functools.partial(jax.jit, static_argnames=("w", "p", "k", "block", "method"))
+def _scan_search_compact(
+    q: jax.Array,
+    sub: jax.Array,
+    idx: jax.Array,
+    top_v0: jax.Array,
+    top_i0: jax.Array,
+    w: int,
+    p: PNorm,
+    k: int,
+    block: int,
+    method: Method,
+):
+    """Seeded block scan over a compacted survivor set (DESIGN.md §3.3).
+
+    Same ``make_block_step`` body as ``_scan_search``, but candidate ids
+    arrive as an explicit gather (``idx``) and the top-k starts from the
+    exact reference distances instead of BIG.
+    """
+    n = q.shape[0]
+    w = int(min(w, n - 1))
+    upper, lower = envelope(q, w)
+    nb = sub.shape[0] // block
+    blocks = sub.reshape(nb, block, n)
+    idxb = idx.reshape(nb, block)
+    body = make_block_step(q, upper, lower, w, p, k, block, method)
+    carry, _ = jax.lax.scan(body, init_carry(k, top_v0, top_i0), (blocks, idxb))
+    top_v, top_i, _gbound, c1, c2, c3, b2, b3 = carry
+    return top_v, top_i, c1, c2, c3, b2, b3
+
+
+def nn_search_indexed(
+    q: jax.Array,
+    db: jax.Array,
+    index,
+    k: int = 1,
+    block: int = 32,
+    method: Method = "lb_improved",
+) -> SearchResult:
+    """Four-stage search: LB_tri -> LB_Keogh -> LB_Improved -> DTW.
+
+    ``index`` is a prebuilt ``repro.index.TriangleIndex`` over ``db``;
+    ``w`` and ``p`` come from the index (Theorem 1's constant depends on
+    both, so they are baked in at build time).
+
+    Stage 0 spends 2R exact DTWs on the reference series (band w and the
+    composed band 2w — the two sides of the banded triangle inequality
+    consume different bands, see repro.index.triangle_lb).  References
+    are database members, so the band-w distances seed the top-k with
+    *true* distances; then whole clusters and individual candidates die
+    with O(R) arithmetic per candidate before any envelope work.
+    Survivors are compacted and swept by the usual block cascade
+    (``make_block_step``), padded to a power-of-two number of blocks so
+    jit specialisations stay logarithmic in database size.
+    """
+    from repro.index.triangle_lb import (
+        lb_triangle_batch,
+        lb_triangle_clusters,
+        powered,
+    )
+
+    q = jnp.asarray(q)
+    db_j = jnp.asarray(db)
+    n_db, n = db_j.shape
+    w, p = index.w, (jnp.inf if np.isinf(index.p) else index.p)
+    if p != jnp.inf and float(p) == int(p):
+        p = int(p)
+    index.validate(n_db, n, w, p)
+    cl = index.clustering
+    c_w = index.constant
+    n_refs = index.n_refs
+    dev = index.device_arrays  # build-time constants, uploaded once
+
+    # cheap guard against serving a different database of the same shape
+    # (stale indexes would silently prune true neighbours): O(R*n)
+    ref_rows = np.asarray(db_j[jnp.asarray(index.ref_idx)], np.float32)
+    if not np.array_equal(ref_rows, np.asarray(index.ref_series, np.float32)):
+        raise ValueError(
+            "database rows at ref_idx do not match the index's reference "
+            "series — the index belongs to a different database"
+        )
+
+    # ---- stage 0a: exact DTW to the references at both bands (2R DPs)
+    refs_j = dev["ref_series"]
+    d_q_refs = np.asarray(dtw_batch(q, refs_j, w, p, powered=False))
+    d_q_refs_wide = np.asarray(
+        dtw_batch(q, refs_j, index.w_wide, p, powered=False)
+    )
+    # ``powered`` is elementwise python arithmetic — it works on numpy
+    # arrays directly, no device round-trip needed for stage-0 scalars
+    ref_pow = powered(d_q_refs, p)
+    order = np.argsort(ref_pow, kind="stable")
+    top_v = np.full((k,), BIG)
+    top_i = np.full((k,), -1, np.int64)
+    m = min(k, n_refs)
+    top_v[:m] = ref_pow[order[:m]]
+    top_i[:m] = index.ref_idx[order[:m]]
+    bound = top_v[-1]  # powered k-th best so far
+
+    # ---- stage 0b: cluster-granularity pruning (O(C) work total)
+    cl_lb = np.asarray(
+        lb_triangle_clusters(
+            jnp.asarray(d_q_refs[cl.rep_rows]),
+            jnp.asarray(d_q_refs_wide[cl.rep_rows]),
+            dev["radii"],
+            dev["min_radii_wide"],
+            c_w,
+        )
+    )
+    cl_alive = powered(cl_lb, p) < bound
+    alive = cl_alive[cl.assign]
+
+    # ---- stage 0c: per-candidate LB_tri over all references (O(R) each)
+    lb0 = np.asarray(
+        lb_triangle_batch(
+            jnp.asarray(d_q_refs),
+            jnp.asarray(d_q_refs_wide),
+            dev["d_ref_db"],
+            dev["d_ref_db_wide"],
+            c_w,
+        )
+    )
+    alive &= powered(lb0, p) < bound
+    alive[index.ref_idx] = False  # references were evaluated exactly above
+    survivors = np.nonzero(alive)[0]
+    lb0_pruned = n_db - n_refs - len(survivors)
+
+    stats0 = dict(
+        n_candidates=n_db,
+        lb0_pruned=lb0_pruned,
+        ref_dtw=2 * n_refs,
+        clusters_total=cl.n_clusters,
+        clusters_pruned=int((~cl_alive).sum()),
+    )
+
+    if len(survivors) == 0:
+        stats = SearchStats(lb1_pruned=0, lb2_pruned=0, full_dtw=n_refs, **stats0)
+        return SearchResult(
+            distances=np.asarray(finish_cost(jnp.asarray(top_v), p)),
+            indices=top_i,
+            stats=stats,
+        )
+
+    # ---- stages 1-3: compacted block cascade over the survivors
+    nb = -(-len(survivors) // block)
+    nb_pad = 1 << (nb - 1).bit_length()  # power-of-two block count
+    total = nb_pad * block
+    pad = total - len(survivors)
+    sub = db_j[jnp.asarray(survivors)]
+    if pad:
+        filler = jnp.full((pad, n), 0.5 * BIG ** 0.25, db_j.dtype)
+        sub = jnp.concatenate([sub, filler], axis=0)
+    idx = np.concatenate([survivors, np.full((pad,), -1, np.int64)])
+    top_vj, top_ij, c1, c2, c3, b2, b3 = _scan_search_compact(
+        q,
+        sub,
+        jnp.asarray(idx, jnp.int32),
+        jnp.asarray(top_v),
+        jnp.asarray(top_i, jnp.int32),
+        int(w),
+        p,
+        int(k),
+        int(block),
+        method,
+    )
+    # padded lanes: lb1-pruned under LB methods, DP-reached under "full"
+    stats = SearchStats(
+        lb1_pruned=int(c1) - (0 if method == "full" else pad),
+        lb2_pruned=int(c2),
+        full_dtw=int(c3) + n_refs - (pad if method == "full" else 0),
+        blocks_total=nb_pad,
+        blocks_lb2=int(b2),
+        blocks_dtw=int(b3),
+        **stats0,
+    )
+    return SearchResult(
+        distances=np.asarray(finish_cost(top_vj, p)),
+        indices=np.asarray(top_ij),
         stats=stats,
     )

@@ -64,6 +64,7 @@ def _sharded_search_fn(
             shard_id = shard_id + jax.lax.axis_index(ax) * stride
             stride *= mesh.shape[ax]
         base = shard_id * n_local + jnp.arange(nb) * block
+        idx = base[:, None] + jnp.arange(block)[None, :]
         blocks = db_local.reshape(nb, block, n)
 
         body = make_block_step(q, upper, lower, w, p, k, block, method)
@@ -74,11 +75,11 @@ def _sharded_search_fn(
             # replicate a poison block (top-k ignores BIG) to even rounds
             poison = jnp.full((pad_rounds, block, n), 0.5 * BIG ** 0.25)
             blocks = jnp.concatenate([blocks, poison], axis=0)
-            base = jnp.concatenate(
-                [base, jnp.full((pad_rounds,), n_local * 10**6, jnp.int32)]
+            idx = jnp.concatenate(
+                [idx, jnp.full((pad_rounds, block), n_local * 10**6, jnp.int32)]
             )
         blocks = blocks.reshape(rounds, sync_every, block, n)
-        base = base.reshape(rounds, sync_every)
+        idx = idx.reshape(rounds, sync_every, block)
 
         # The block step prunes against min(local k-th best, gbound); the
         # gbound slot of the carry is pmin-exchanged once per round (one
@@ -90,7 +91,7 @@ def _sharded_search_fn(
             gbound = jax.lax.pmin(gbound, axis_names)
             return (top_v, top_i, gbound, *stats), None
 
-        carry, _ = jax.lax.scan(round_body, init_carry(k), (blocks, base))
+        carry, _ = jax.lax.scan(round_body, init_carry(k), (blocks, idx))
         top_v, top_i, _gbound, c1, c2, c3, b2, b3 = carry
         # gather per-shard top-k and merge
         all_v = jax.lax.all_gather(top_v, axis_names, tiled=True)

@@ -39,6 +39,30 @@ def theorem1_bound(n: int, w: int, p: PNorm) -> float:
     return float(base) ** (1.0 / float(p))
 
 
+def triangle_lower_bound(
+    d_xy_wide, d_yz, n: int, w: int, p: PNorm = 1
+) -> jax.Array:
+    """Per-pair lower bound on the unseen DTW^w(x, z) from Theorem 1.
+
+    The banded form of the theorem composes two band-w warping paths
+    into a band-2w one: DTW^{2w}(x,z) <= c * (DTW^w(x,y) + DTW^w(y,z)).
+    Rearranged around the shared series y:
+
+        DTW^w(x, z) >= DTW^{2w}(x, y) / c - DTW^w(y, z)
+
+    so ``d_xy_wide`` must be measured at band min(2w, n-1) and ``d_yz``
+    at band w.  (Same-band substitution is unsound: banded DTW_inf
+    violates the plain triangle inequality.)  For unconstrained DTW the
+    bands coincide, and p = inf recovers the reverse triangle inequality
+    of the DTW_inf metric.  Inputs/outputs are rooted distances;
+    broadcasts.  This is the scalar form of the vectorised stage-0 bound
+    in ``repro.index.triangle_lb``.
+    """
+    c = theorem1_bound(n, w, p)
+    lo = jnp.asarray(d_xy_wide) / c - jnp.asarray(d_yz)
+    return jnp.maximum(lo, 0.0)
+
+
 def violation_fraction(
     series: jax.Array, rng, n_triples: int, w: int, p: PNorm = 1
 ) -> tuple[float, jax.Array]:

@@ -1,0 +1,46 @@
+"""Stage-0 pruning subsystem: triangle-inequality reference index.
+
+The paper's Theorem 1 gives the tight weak triangle inequality
+
+    DTW_p(x, z) <= c * (DTW_p(x, y) + DTW_p(y, z)),   c = min(2w+1, n)^(1/p)
+
+(c = 1 for p = inf, where DTW_inf is a true metric).  This package turns
+the theorem from a measured curiosity (core/metrics.py) into a pruning
+stage that runs *before* the LB_Keogh/LB_Improved cascade:
+
+* ``references``  — maxmin (farthest-first) reference selection under DTW;
+* ``cluster``     — BrainEx-style cluster assignments with per-cluster
+  representatives and radii;
+* ``triangle_lb`` — the vectorised stage-0 bound LB_tri and its
+  cluster-granularity variant;
+* ``build``       — the index build pipeline (``TriangleIndex``);
+* ``store``       — save/load of prebuilt indexes.
+
+Query-time entry point: ``repro.core.cascade.nn_search_indexed``.
+See DESIGN.md section 3.3.
+"""
+
+from repro.index.build import TriangleIndex, build_index
+from repro.index.cluster import Clustering, cluster_from_distances
+from repro.index.references import select_references
+from repro.index.store import load_index, save_index
+from repro.index.triangle_lb import (
+    lb_triangle_batch,
+    lb_triangle_clusters,
+    lb_triangle_pair,
+    wide_band,
+)
+
+__all__ = [
+    "TriangleIndex",
+    "build_index",
+    "Clustering",
+    "cluster_from_distances",
+    "select_references",
+    "save_index",
+    "load_index",
+    "lb_triangle_pair",
+    "lb_triangle_batch",
+    "lb_triangle_clusters",
+    "wide_band",
+]

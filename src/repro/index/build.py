@@ -1,0 +1,162 @@
+"""Index build pipeline: references + distances + clusters -> TriangleIndex.
+
+Build cost is 2R vmapped banded-DTW sweeps over the database (the same
+device kernels the cascade uses): one at band w and one at the composed
+band 2w, because the two sides of the banded triangle inequality consume
+different bands (triangle_lb).  Everything downstream of the distance
+matrices is numpy bookkeeping.  The index is tied to the (w, p) it was
+built with — Theorem 1's constant depends on both — and ``validate``
+refuses to serve queries under different parameters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dtw import PNorm, dtw_batch
+from repro.core.metrics import theorem1_bound
+from repro.index.cluster import Clustering, cluster_from_distances
+from repro.index.references import select_references
+from repro.index.triangle_lb import wide_band
+
+
+def db_digest(db: np.ndarray) -> str:
+    """Stable fingerprint of the database contents (not just its shape)."""
+    arr = np.ascontiguousarray(np.asarray(db, np.float32))
+    return hashlib.sha1(arr.tobytes()).hexdigest()[:16]
+
+
+@dataclasses.dataclass(frozen=True)
+class TriangleIndex:
+    """Prebuilt stage-0 pruning structure for one database.
+
+    All distances are rooted DTW_p values (the triangle inequality lives
+    in distance space); the cascade converts bounds to its powered
+    threshold domain at query time.
+    """
+
+    ref_idx: np.ndarray  # (R,) database indices of the references
+    ref_series: np.ndarray  # (R, n) the reference series themselves
+    d_ref_db: np.ndarray  # (R, N) DTW^w(reference, series)
+    d_ref_db_wide: np.ndarray  # (R, N) DTW^{2w}(reference, series)
+    clustering: Clustering  # reps are the first C references
+    w: int
+    p: float  # np.inf for p = inf
+    n: int  # series length
+    n_db: int
+    digest: str = ""  # db_digest of the database the index was built on
+
+    @property
+    def n_refs(self) -> int:
+        return int(self.ref_idx.shape[0])
+
+    @property
+    def n_clusters(self) -> int:
+        return self.clustering.n_clusters
+
+    @property
+    def constant(self) -> float:
+        """Theorem 1's c = min(2w+1, n)^(1/p)."""
+        return theorem1_bound(self.n, self.w, self.p)
+
+    @property
+    def w_wide(self) -> int:
+        """Band of the composed warping path: min(2w, n-1)."""
+        return wide_band(self.w, self.n)
+
+    @property
+    def rep_idx(self) -> np.ndarray:
+        """Database indices of the cluster representatives (FFT prefix)."""
+        return self.ref_idx[self.clustering.rep_rows]
+
+    def validate(self, n_db: int, n: int, w: int, p: PNorm) -> None:
+        got = (n_db, n, int(w), float(p))
+        want = (self.n_db, self.n, self.w, float(self.p))
+        if got != want:
+            raise ValueError(
+                f"index built for (n_db, n, w, p)={want}, query asks {got}"
+            )
+
+    def validate_data(self, db) -> None:
+        """Check the index belongs to *this* database, not just its shape.
+
+        A stale index over a different database would produce invalid
+        LB_tri bounds and silently prune true neighbours — fail loudly
+        instead.  O(N*n) hash; call once per load, not per query.
+        """
+        got = db_digest(db)
+        if self.digest and got != self.digest:
+            raise ValueError(
+                f"index was built on a different database "
+                f"(digest {self.digest}, got {got})"
+            )
+
+    @functools.cached_property
+    def device_arrays(self) -> dict:
+        """jnp views of the build-time-constant arrays, uploaded once.
+
+        nn_search_indexed consumes these on every query; without the
+        cache each call would re-transfer the (R, N) matrices to device.
+        """
+        cl = self.clustering
+        return {
+            "ref_series": jnp.asarray(self.ref_series),
+            "d_ref_db": jnp.asarray(self.d_ref_db),
+            "d_ref_db_wide": jnp.asarray(self.d_ref_db_wide),
+            "radii": jnp.asarray(cl.radii),
+            "min_radii_wide": jnp.asarray(cl.min_radii_wide),
+        }
+
+
+def build_index(
+    db,
+    w: int,
+    p: PNorm = 1,
+    n_refs: int = 8,
+    n_clusters: int | None = None,
+    strategy: str = "maxmin",
+    seed: int = 0,
+) -> TriangleIndex:
+    """Build a triangle-inequality reference index over ``db`` (N, n)."""
+    db = np.asarray(db)
+    if db.ndim != 2:
+        raise ValueError(f"db must be (N, n), got {db.shape}")
+    n_db, n = db.shape
+    w = int(min(int(w), n - 1))
+    rng = np.random.default_rng(seed)
+    ref_idx, d_ref_db = select_references(
+        db, n_refs, w, p, strategy=strategy, rng=rng
+    )
+    # second sweep at the composed band 2w (side A/B of the bound)
+    db_j = jnp.asarray(db)
+    w2 = wide_band(w, n)
+    d_ref_db_wide = np.stack(
+        [
+            np.asarray(dtw_batch(db_j[int(i)], db_j, w2, p, powered=False))
+            for i in ref_idx
+        ]
+    )
+    # references are force-excluded from the stage-0 scan (they are
+    # evaluated exactly), so the cluster side-B minimum may skip them —
+    # without the exclusion every representative's self-distance of 0
+    # would pin min_radii_wide to 0 and kill that bound
+    clustering = cluster_from_distances(
+        d_ref_db, n_clusters, d_ref_db_wide, exclude_cols=ref_idx
+    )
+    return TriangleIndex(
+        ref_idx=ref_idx,
+        ref_series=np.asarray(db[ref_idx]),
+        d_ref_db=np.asarray(d_ref_db, np.float32),
+        d_ref_db_wide=np.asarray(d_ref_db_wide, np.float32),
+        clustering=clustering,
+        w=w,
+        p=float(p),
+        n=n,
+        n_db=n_db,
+        digest=db_digest(db),
+    )

@@ -1,0 +1,77 @@
+"""Persistence for prebuilt triangle indexes.
+
+One ``.npz`` file per index: arrays stored natively, scalars in a small
+metadata vector.  A format version is embedded so later PRs can migrate
+layouts; loading an unknown version fails loudly instead of serving a
+corrupt pruning structure (a wrong bound silently breaks exactness).
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.index.build import TriangleIndex
+from repro.index.cluster import Clustering
+
+FORMAT_VERSION = 1
+
+
+def npz_path(path: str) -> str:
+    """Canonical on-disk name: ``.npz`` appended when missing."""
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def save_index(index: TriangleIndex, path: str) -> str:
+    """Write the index to ``path`` (``.npz`` appended if missing)."""
+    path = npz_path(path)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez_compressed(
+        path,
+        format_version=np.int64(FORMAT_VERSION),
+        meta=np.asarray(
+            [index.w, index.p, index.n, index.n_db], np.float64
+        ),
+        digest=np.str_(index.digest),
+        ref_idx=index.ref_idx,
+        ref_series=index.ref_series,
+        d_ref_db=index.d_ref_db,
+        d_ref_db_wide=index.d_ref_db_wide,
+        rep_rows=index.clustering.rep_rows,
+        assign=index.clustering.assign,
+        radii=index.clustering.radii,
+        min_radii_wide=index.clustering.min_radii_wide,
+        d_rep_member=index.clustering.d_rep_member,
+    )
+    return path
+
+
+def load_index(path: str) -> TriangleIndex:
+    path = npz_path(path)
+    with np.load(path) as z:
+        version = int(z["format_version"])
+        if version != FORMAT_VERSION:
+            raise ValueError(
+                f"index format v{version} unsupported (expected v{FORMAT_VERSION})"
+            )
+        w, p, n, n_db = z["meta"]
+        clustering = Clustering(
+            rep_rows=z["rep_rows"],
+            assign=z["assign"],
+            radii=z["radii"],
+            min_radii_wide=z["min_radii_wide"],
+            d_rep_member=z["d_rep_member"],
+        )
+        return TriangleIndex(
+            ref_idx=z["ref_idx"],
+            ref_series=z["ref_series"],
+            d_ref_db=z["d_ref_db"],
+            d_ref_db_wide=z["d_ref_db_wide"],
+            clustering=clustering,
+            w=int(w),
+            p=float(p),
+            n=int(n),
+            n_db=int(n_db),
+            digest=str(z["digest"]) if "digest" in z else "",
+        )

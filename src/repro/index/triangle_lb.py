@@ -1,0 +1,122 @@
+"""LB_tri: the stage-0 lower bound from the tight weak triangle inequality.
+
+Theorem 1's proof composes a w-banded warping path x<->y with a
+w-banded path y<->z; the composition is a *2w*-banded alignment of
+(x, z) in which every aligned pair is reused at most min(2w+1, n)
+times, giving the banded form of the inequality
+
+    DTW_p^{2w}(x, z) <= c_w * (DTW_p^w(x, y) + DTW_p^w(y, z)),
+    c_w = min(2w+1, n)^(1/p).
+
+The band doubling on the left matters: plain banded DTW_inf does NOT
+satisfy the triangle inequality (a random-walk triple with w=1 violates
+it — see tests/test_index.py), so a bound built from same-band
+distances would silently prune true neighbours.  Rearranged around a
+reference r, two *sound* lower bounds on the unseen DTW^w(q, c) emerge,
+each mixing bands:
+
+    DTW^w(q, c) >= DTW^{2w}(q, r) / c_w - DTW^w(r, c)        (side A)
+    DTW^w(q, c) >= DTW^{2w}(r, c) / c_w - DTW^w(q, r)        (side B)
+
+Side A uses a query-to-reference distance at band 2w (computed once per
+query) against the stored band-w reference matrix; side B uses the
+stored band-2w matrix against the query's band-w distances.  For
+unconstrained DTW (w >= n-1) the bands coincide and p = inf recovers
+the exact reverse triangle inequality of the DTW_inf metric
+(Corollary 1).
+
+``LB_tri(q, c) = max_r max(A, B, 0)`` costs O(R) arithmetic per
+candidate — no envelope, no O(nw) DP — because the reference matrices
+are precomputed at index-build time.
+
+Everything works on *rooted* distances (the inequality lives in distance
+space); ``powered`` maps a rooted bound back to the cascade's powered
+threshold domain (sum |.|^p without the root; plain max for p = inf).
+
+A relative slack ``SLACK`` guards against fp32 rounding promoting the
+bound above the true distance on near-tie candidates: pruning stays
+conservative, exactness of the search is preserved.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dtw import PNorm
+
+# multiplicative safety margin on the rooted bound (fp32 DTW noise)
+SLACK: float = 1.0 - 1e-6
+
+
+def wide_band(w: int, n: int) -> int:
+    """The composed-path band: min(2w, n-1)."""
+    return int(min(2 * int(w), int(n) - 1))
+
+
+def powered(x: jax.Array, p: PNorm) -> jax.Array:
+    """Inverse of ``finish_cost``: rooted l_p value -> powered value."""
+    if p == jnp.inf or p == 1:
+        return x
+    if p == 2:
+        return x * x
+    return x ** p
+
+
+def lb_triangle_pair(d_qr_wide, d_rc, c: float):
+    """Side-A pair bound on DTW^w(q, c): DTW^{2w}(q, r)/c - DTW^w(r, c).
+
+    ``d_qr_wide`` must be the band-2w distance, ``d_rc`` the band-w one
+    (any same-band substitution is unsound — see module docstring).
+    Broadcasts; clamped at 0.
+    """
+    d_qr_wide = jnp.asarray(d_qr_wide)
+    d_rc = jnp.asarray(d_rc)
+    return jnp.maximum(d_qr_wide / c - d_rc, 0.0) * SLACK
+
+
+@functools.partial(jax.jit, static_argnames=("c",))
+def lb_triangle_batch(
+    d_q_refs_w: jax.Array,
+    d_q_refs_wide: jax.Array,
+    d_ref_db_w: jax.Array,
+    d_ref_db_wide: jax.Array,
+    c: float,
+) -> jax.Array:
+    """max over references of both pair-bound sides.
+
+    d_q_refs_w / d_q_refs_wide: (R,) rooted DTW(q, r) at band w / 2w.
+    d_ref_db_w / d_ref_db_wide: (R, N) rooted DTW(r, s) at band w / 2w.
+    Returns (N,) rooted lower bounds on DTW^w(q, s).
+    """
+    side_a = d_q_refs_wide[:, None] / c - d_ref_db_w
+    side_b = d_ref_db_wide / c - d_q_refs_w[:, None]
+    lo = jnp.maximum(jnp.maximum(side_a, side_b), 0.0) * SLACK
+    return jnp.max(lo, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("c",))
+def lb_triangle_clusters(
+    d_q_reps_w: jax.Array,
+    d_q_reps_wide: jax.Array,
+    radii_w: jax.Array,
+    min_radii_wide: jax.Array,
+    c: float,
+) -> jax.Array:
+    """Cluster-granularity bound: holds for *every* member of the cluster.
+
+    For a member s of a cluster with representative m we know
+    DTW^w(m, s) <= radii_w and DTW^{2w}(m, s) >= min_radii_wide, so the
+    two pair-bound sides relax to
+
+        DTW^w(q, s) >= DTW^{2w}(q, m) / c - radii_w
+        DTW^w(q, s) >= min_radii_wide / c - DTW^w(q, m)
+
+    If the max of those already beats the running k-th best, the whole
+    cluster dies in O(1) without touching its members.
+    """
+    side_a = d_q_reps_wide / c - radii_w
+    side_b = min_radii_wide / c - d_q_reps_w
+    return jnp.maximum(jnp.maximum(side_a, side_b), 0.0) * SLACK

@@ -231,6 +231,8 @@ def run_cell(
     compile_sec = time.perf_counter() - t0
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax wraps the dict in a list
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         memory = {

@@ -4,13 +4,21 @@ Shards a time-series database across every device of the mesh and
 serves nearest-neighbour queries through the two-pass LB_Improved
 cascade with best-bound exchange (repro.core.distributed).
 
+With ``--index`` the launcher instead builds (or loads) a
+triangle-inequality reference index (repro.index) and serves queries
+through the four-stage ``nn_search_indexed`` cascade, printing stage-0
+pruning statistics next to the usual LB counters.
+
 Usage:
   python -m repro.launch.search --db-size 4096 --length 512 --queries 4
+  python -m repro.launch.search --index --p inf --n-refs 16 \
+      --index-path /tmp/rw.idx.npz
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -21,22 +29,52 @@ from repro.data.synthetic import random_walks
 from repro.launch.mesh import make_host_mesh
 
 
+def _parse_p(s: str):
+    import jax.numpy as jnp
+
+    if s.strip().lower() in ("inf", "infinity"):
+        return jnp.inf
+    v = float(s)
+    if not np.isfinite(v) or v <= 0:
+        raise ValueError(f"p must be a positive norm order or 'inf', got {s!r}")
+    return int(v) if v == int(v) else v
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--db-size", type=int, default=4096)
     ap.add_argument("--length", type=int, default=512)
     ap.add_argument("--queries", type=int, default=4)
     ap.add_argument("--w", type=int, default=0, help="0 = n/10")
+    ap.add_argument("--p", type=_parse_p, default=1, help="1, 2, ... or inf")
     ap.add_argument("--k", type=int, default=1)
     ap.add_argument("--block", type=int, default=32)
     ap.add_argument("--sync-every", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--index",
+        action="store_true",
+        help="serve through the stage-0 triangle index instead of the mesh scan",
+    )
+    ap.add_argument("--n-refs", type=int, default=16)
+    ap.add_argument("--n-clusters", type=int, default=0, help="0 = n_refs")
+    ap.add_argument(
+        "--index-path",
+        type=str,
+        default="",
+        help="load the index from this .npz if present, else build and save it",
+    )
     args = ap.parse_args()
 
     rng = np.random.default_rng(args.seed)
-    mesh = make_host_mesh()
     w = args.w or args.length // 10
     db = random_walks(rng, args.db_size, args.length)
+
+    if args.index:
+        _serve_indexed(args, rng, db, w)
+        return
+
+    mesh = make_host_mesh()
     dbp, n_real = pad_database(db, mesh, block=args.block)
     print(
         f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
@@ -46,7 +84,7 @@ def main():
         q = random_walks(rng, 1, args.length)[0]
         t0 = time.perf_counter()
         res = sharded_nn_search(
-            q, dbp, mesh, w=w, k=args.k, block=args.block,
+            q, dbp, mesh, w=w, p=args.p, k=args.k, block=args.block,
             sync_every=args.sync_every,
         )
         dt = time.perf_counter() - t0
@@ -55,6 +93,51 @@ def main():
             f"query {qi}: nn={res.index} dist={res.distance:.3f} "
             f"{dt*1e3:.1f} ms  pruned_lb1={s.lb1_pruned} pruned_lb2={s.lb2_pruned} "
             f"dtw={s.full_dtw} ({100*s.pruning_ratio:.1f}% pruned)"
+        )
+
+
+def _serve_indexed(args, rng, db, w):
+    from repro.core.cascade import nn_search_indexed
+    from repro.index import build_index, load_index, save_index
+    from repro.index.store import npz_path
+
+    index = None
+    if args.index_path and os.path.exists(npz_path(args.index_path)):
+        index = load_index(args.index_path)
+        index.validate(db.shape[0], db.shape[1], w, args.p)
+        index.validate_data(db)  # refuse a stale index over different data
+        print(f"loaded index from {args.index_path} (R={index.n_refs})")
+    if index is None:
+        t0 = time.perf_counter()
+        index = build_index(
+            db,
+            w=w,
+            p=args.p,
+            n_refs=args.n_refs,
+            n_clusters=args.n_clusters or None,
+            seed=args.seed,
+        )
+        dt = time.perf_counter() - t0
+        print(
+            f"built index: R={index.n_refs} C={index.n_clusters} "
+            f"c_w={index.constant:.3g} in {dt:.2f}s"
+        )
+        if args.index_path:
+            print(f"saved index to {save_index(index, args.index_path)}")
+
+    print(f"db={db.shape[0]} series x {db.shape[1]} w={w} p={args.p}")
+    for qi in range(args.queries):
+        q = random_walks(rng, 1, args.length)[0]
+        t0 = time.perf_counter()
+        res = nn_search_indexed(q, db, index, k=args.k, block=args.block)
+        dt = time.perf_counter() - t0
+        s = res.stats
+        print(
+            f"query {qi}: nn={res.index} dist={res.distance:.3f} "
+            f"{dt*1e3:.1f} ms  stage0={s.lb0_pruned} ({100*s.stage0_ratio:.1f}%) "
+            f"clusters={s.clusters_pruned}/{s.clusters_total} "
+            f"lb1={s.lb1_pruned} lb2={s.lb2_pruned} dtw={s.full_dtw} "
+            f"({100*s.pruning_ratio:.1f}% pruned)"
         )
 
 

@@ -1,0 +1,319 @@
+"""Triangle-inequality reference index: bound validity, clustering,
+persistence, and exactness of the 4-stage nn_search_indexed."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.cascade import nn_search_indexed, nn_search_scan
+from repro.core.dtw import dtw_reference
+from repro.core.metrics import theorem1_bound, triangle_lower_bound
+from repro.index import (
+    build_index,
+    cluster_from_distances,
+    lb_triangle_batch,
+    lb_triangle_clusters,
+    lb_triangle_pair,
+    load_index,
+    save_index,
+    select_references,
+    wide_band,
+)
+
+RNG = np.random.default_rng(3)
+
+
+def make_db(n_db=120, n=48):
+    db = RNG.normal(size=(n_db, n)).astype(np.float32).cumsum(axis=1)
+    q = RNG.normal(size=n).astype(np.float32).cumsum()
+    return q, db
+
+
+# --------------------------------------------------------- bound validity
+
+
+@pytest.mark.parametrize("p", [1, 2, np.inf])
+@pytest.mark.parametrize("w", [1, 4, 16])
+def test_lb_triangle_is_lower_bound(p, w):
+    """LB_tri(q, c) <= DTW^w(q, c) over random triples (banded Theorem 1).
+
+    Both sides of the bound mix bands: the distance through the shared
+    series is measured at band min(2w, n-1), the stored one at band w.
+    """
+    rng = np.random.default_rng(17 * w + int(p if np.isfinite(p) else 99))
+    n = 24
+    w2 = wide_band(w, n)
+    c_w = theorem1_bound(n, w, p)
+    for _ in range(25):
+        x, y, z = rng.normal(size=(3, n)).cumsum(axis=1)
+        d_xz = dtw_reference(x, z, w, p)
+        # side A: through y, query side wide
+        lb_a = float(lb_triangle_pair(
+            dtw_reference(x, y, w2, p), dtw_reference(y, z, w, p), c_w
+        ))
+        # side B: stored side wide
+        lb_b = float(lb_triangle_pair(
+            dtw_reference(y, z, w2, p), dtw_reference(x, y, w, p), c_w
+        ))
+        assert max(lb_a, lb_b) <= d_xz + 1e-4 * max(1.0, d_xz)
+        # the un-slacked metrics helper obeys the same inequality
+        lb_m = float(triangle_lower_bound(
+            dtw_reference(x, y, w2, p), dtw_reference(y, z, w, p), n, w, p
+        ))
+        assert lb_m <= d_xz + 1e-4 * max(1.0, d_xz)
+
+
+def test_same_band_triangle_is_unsound_for_pinf():
+    """Regression: banded DTW_inf violates the plain triangle inequality,
+    which is exactly why LB_tri must mix bands (w and 2w)."""
+    rng = np.random.default_rng(116)
+    n, w = 24, 1
+    found = False
+    for _ in range(50):
+        x, y, z = rng.normal(size=(3, n)).cumsum(axis=1)
+        d_xy = dtw_reference(x, y, w, np.inf)
+        d_yz = dtw_reference(y, z, w, np.inf)
+        d_xz = dtw_reference(x, z, w, np.inf)
+        if max(d_xy, d_yz, d_xz) > min(d_xy + d_yz, d_xy + d_xz, d_yz + d_xz) + 1e-6:
+            found = True
+            break
+    assert found, "expected a same-band triangle violation on random walks"
+
+
+def test_lb_triangle_pinf_unconstrained_is_reverse_triangle():
+    """Unconstrained p = inf (c = 1): side A is exactly d(q,r) - d(r,c)."""
+    assert float(lb_triangle_pair(5.0, 3.0, 1.0)) == pytest.approx(2.0, rel=1e-5)
+    assert float(lb_triangle_pair(3.0, 5.0, 1.0)) == 0.0  # one-sided, clamped
+
+
+def test_lb_triangle_batch_matches_pair():
+    rng = np.random.default_rng(0)
+    d_q_w = rng.uniform(1, 10, size=4)
+    d_q_wide = d_q_w * rng.uniform(0.8, 1.0, size=4)  # wider band => smaller
+    d_db_w = rng.uniform(1, 10, size=(4, 9))
+    d_db_wide = d_db_w * rng.uniform(0.8, 1.0, size=(4, 9))
+    c_w = 2.0
+    got = np.asarray(
+        lb_triangle_batch(
+            jnp.asarray(d_q_w), jnp.asarray(d_q_wide),
+            jnp.asarray(d_db_w), jnp.asarray(d_db_wide), c_w,
+        )
+    )
+    want = np.max(
+        [
+            np.maximum(
+                np.asarray(lb_triangle_pair(d_q_wide[r], d_db_w[r], c_w)),
+                np.asarray(lb_triangle_pair(d_db_wide[r], d_q_w[r], c_w)),
+            )
+            for r in range(4)
+        ],
+        axis=0,
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_cluster_bound_is_valid_for_every_member():
+    """The cluster-level bound never exceeds any member's true distance."""
+    q, db = make_db(80, 40)
+    w, p = 4, np.inf
+    index = build_index(db, w=w, p=p, n_refs=6)
+    cl = index.clustering
+    from repro.core.dtw import dtw_batch
+
+    refs_j = jnp.asarray(index.ref_series)
+    d_q_reps = np.asarray(dtw_batch(jnp.asarray(q), refs_j, w, jnp.inf))
+    d_q_reps_wide = np.asarray(
+        dtw_batch(jnp.asarray(q), refs_j, index.w_wide, jnp.inf)
+    )
+    cl_lb = np.asarray(
+        lb_triangle_clusters(
+            jnp.asarray(d_q_reps[cl.rep_rows]),
+            jnp.asarray(d_q_reps_wide[cl.rep_rows]),
+            jnp.asarray(cl.radii),
+            jnp.asarray(cl.min_radii_wide),
+            index.constant,
+        )
+    )
+    d_true = np.array([dtw_reference(q, s, w, np.inf) for s in db])
+    for cid in range(cl.n_clusters):
+        mem = np.nonzero(cl.assign == cid)[0]
+        assert (cl_lb[cid] <= d_true[mem] + 1e-4).all()
+
+
+# ------------------------------------------------------------- structure
+
+
+def test_select_references_maxmin_spreads():
+    _, db = make_db(60, 32)
+    idx, d = select_references(db, 5, w=4, p=1)
+    assert len(set(idx.tolist())) == 5
+    assert d.shape == (5, 60)
+    # each reference row has zero self-distance
+    for r, i in enumerate(idx):
+        assert d[r, i] == pytest.approx(0.0, abs=1e-4)
+
+
+def test_select_references_validates():
+    _, db = make_db(10, 16)
+    with pytest.raises(ValueError):
+        select_references(db, 0, w=2)
+    with pytest.raises(ValueError):
+        select_references(db, 11, w=2)
+    with pytest.raises(ValueError):
+        select_references(db, 3, w=2, strategy="bogus")
+
+
+def test_cluster_radii_cover_members():
+    _, db = make_db(90, 32)
+    _, d = select_references(db, 6, w=3, p=1)
+    cl = cluster_from_distances(d)
+    assert cl.assign.shape == (90,)
+    # without a wide matrix the side-B radii stay 0 (conservative)
+    assert (cl.min_radii_wide == 0).all()
+    for cid in range(cl.n_clusters):
+        mem = cl.members(cid)
+        if mem.size:
+            assert (cl.d_rep_member[mem] <= cl.radii[cid] + 1e-6).all()
+
+
+def test_cluster_min_radii_wide_cover_members():
+    """Side-B radii: a live minimum over the *scanned* members (references
+    are excluded — stage 0 evaluates them exactly, and their self-distance
+    of 0 would otherwise pin the bound dead at 0)."""
+    _, db = make_db(70, 32)
+    index = build_index(db, w=3, p=1, n_refs=5)
+    cl = index.clustering
+    wide = index.d_ref_db_wide
+    scanned = np.ones(70, bool)
+    scanned[index.ref_idx] = False
+    live = 0
+    for cid in range(cl.n_clusters):
+        mem = cl.members(cid)
+        mem = mem[scanned[mem]]
+        if mem.size:
+            assert (wide[cid, mem] >= cl.min_radii_wide[cid] - 1e-5).all()
+            if cl.min_radii_wide[cid] > 0:
+                live += 1
+    assert live > 0  # the side-B cluster bound is not dead code
+
+
+def test_indexed_rejects_foreign_database():
+    """Same-shape different-content database must be refused loudly."""
+    q, db = make_db(60, 32)
+    index = build_index(db, w=3, p=1, n_refs=4)
+    other = db + 1.0
+    with pytest.raises(ValueError, match="different database"):
+        nn_search_indexed(q, other, index)
+    with pytest.raises(ValueError, match="different database"):
+        index.validate_data(other)
+    index.validate_data(db)  # the right database passes
+
+
+def test_cluster_prefix_and_validation():
+    _, db = make_db(40, 24)
+    _, d = select_references(db, 6, w=3)
+    cl = cluster_from_distances(d, n_clusters=3)
+    assert cl.n_clusters == 3
+    with pytest.raises(ValueError):
+        cluster_from_distances(d, n_clusters=7)
+
+
+# ------------------------------------------------------------ persistence
+
+
+def test_store_roundtrip(tmp_path):
+    _, db = make_db(50, 32)
+    index = build_index(db, w=4, p=2, n_refs=5)
+    path = save_index(index, str(tmp_path / "idx"))
+    loaded = load_index(path)
+    np.testing.assert_array_equal(index.ref_idx, loaded.ref_idx)
+    np.testing.assert_allclose(index.d_ref_db, loaded.d_ref_db, rtol=1e-6)
+    np.testing.assert_array_equal(index.clustering.assign, loaded.clustering.assign)
+    assert (loaded.w, loaded.p, loaded.n, loaded.n_db) == (4, 2.0, 32, 50)
+    q, _ = make_db(1, 32)
+    r1 = nn_search_indexed(q, db, index, k=3)
+    r2 = nn_search_indexed(q, db, loaded, k=3)
+    np.testing.assert_array_equal(r1.indices, r2.indices)
+
+
+def test_index_validate_rejects_mismatch():
+    _, db = make_db(30, 24)
+    index = build_index(db, w=3, p=1, n_refs=4)
+    with pytest.raises(ValueError):
+        index.validate(30, 24, 5, 1)  # wrong w
+    with pytest.raises(ValueError):
+        index.validate(31, 24, 3, 1)  # wrong db size
+
+
+# ----------------------------------------------------- end-to-end search
+
+
+@pytest.mark.parametrize("p", [1, 2, np.inf])
+@pytest.mark.parametrize("k", [1, 3])
+def test_indexed_matches_scan(p, k):
+    q, db = make_db(130, 48)
+    w = 5
+    p_j = jnp.inf if np.isinf(p) else p
+    index = build_index(db, w=w, p=p, n_refs=9)
+    r_scan = nn_search_scan(q, db, w=w, p=p_j, k=k)
+    r_idx = nn_search_indexed(q, db, index, k=k)
+    assert set(r_idx.indices.tolist()) == set(r_scan.indices.tolist())
+    np.testing.assert_allclose(
+        np.sort(r_idx.distances), np.sort(r_scan.distances), rtol=1e-3
+    )
+
+
+def test_indexed_stats_accounting():
+    q, db = make_db(140, 40)
+    index = build_index(db, w=4, p=np.inf, n_refs=8)
+    res = nn_search_indexed(q, db, index)
+    s = res.stats
+    assert s.n_candidates == 140
+    assert s.ref_dtw == 16  # band-w + band-2w sweep per reference
+    assert s.clusters_total == 8
+    assert s.lb0_pruned + s.lb1_pruned + s.lb2_pruned + s.full_dtw == s.n_candidates
+    assert s.full_dtw >= 8  # references always pay the DP
+    assert 0.0 <= s.stage0_ratio <= 1.0
+
+
+def test_stage0_prunes_on_random_walks():
+    """p = inf, c = 1: the exact metric bound must fire on random walks."""
+    q, db = make_db(200, 64)
+    index = build_index(db, w=6, p=np.inf, n_refs=12)
+    res = nn_search_indexed(q, db, index)
+    assert res.stats.lb0_pruned > 0
+    # and the result is still exact
+    ref = np.array([dtw_reference(q, c, 6, np.inf) for c in db])
+    assert res.index == int(np.argmin(ref))
+
+
+def test_indexed_query_is_reference():
+    """Querying with a database member: its own reference seeds bound 0."""
+    _, db = make_db(60, 32)
+    index = build_index(db, w=3, p=np.inf, n_refs=6)
+    q = db[int(index.ref_idx[0])]
+    res = nn_search_indexed(q, db, index)
+    assert res.index == int(index.ref_idx[0])
+    assert res.distance == pytest.approx(0.0, abs=1e-5)
+
+
+def test_indexed_k_larger_than_refs():
+    q, db = make_db(70, 32)
+    w = 4
+    index = build_index(db, w=w, p=1, n_refs=3)
+    r_scan = nn_search_scan(q, db, w=w, p=1, k=6)
+    r_idx = nn_search_indexed(q, db, index, k=6)
+    assert set(r_idx.indices.tolist()) == set(r_scan.indices.tolist())
+
+
+# ----------------------------------------------- satellite: stats fixes
+
+
+def test_scan_full_method_stats_nonnegative():
+    """method='full' with a padded tail block must not go negative."""
+    q, db = make_db(100, 32)  # 100 % 32 != 0 -> padding
+    res = nn_search_scan(q, db, w=4, p=1, block=32, method="full")
+    s = res.stats
+    assert s.lb1_pruned == 0
+    assert s.lb2_pruned == 0
+    assert s.full_dtw == s.n_candidates
