@@ -12,6 +12,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        bench_batched,
         bench_classify,
         bench_index,
         bench_kernels,
@@ -33,6 +34,7 @@ def main() -> None:
         bench_kernels,
         bench_triangle,
         bench_index,
+        bench_batched,
         bench_lb,
         bench_classify,
         perf_search,

@@ -5,6 +5,7 @@ from repro.core.dtw import (
     dtw_banded,
     dtw_banded_diag,
     dtw_batch,
+    dtw_qbatch,
     dtw_reference,
 )
 from repro.core.envelope import envelope, envelope_batch, envelope_naive
@@ -12,12 +13,15 @@ from repro.core.lb import (
     lb_improved,
     lb_improved_powered,
     lb_improved_powered_batch,
+    lb_improved_powered_qbatch,
     lb_keogh,
     lb_keogh_powered,
     lb_keogh_powered_batch,
+    lb_keogh_powered_qbatch,
     project,
 )
 from repro.core.cascade import (
+    BatchSearchResult,
     SearchResult,
     SearchStats,
     nn_search_host,
@@ -25,6 +29,7 @@ from repro.core.cascade import (
     nn_search_scan,
 )
 from repro.core.classify import classification_accuracy, nn_classify
+from repro.core.microbatch import drain_queries, iter_query_batches
 from repro.core.metrics import (
     theorem1_bound,
     triangle_lower_bound,
@@ -37,6 +42,7 @@ __all__ = [
     "dtw_banded",
     "dtw_banded_diag",
     "dtw_batch",
+    "dtw_qbatch",
     "dtw_reference",
     "envelope",
     "envelope_batch",
@@ -44,15 +50,20 @@ __all__ = [
     "lb_keogh",
     "lb_keogh_powered",
     "lb_keogh_powered_batch",
+    "lb_keogh_powered_qbatch",
     "lb_improved",
     "lb_improved_powered",
     "lb_improved_powered_batch",
+    "lb_improved_powered_qbatch",
     "project",
+    "BatchSearchResult",
     "SearchResult",
     "SearchStats",
     "nn_search_scan",
     "nn_search_host",
     "nn_search_indexed",
+    "drain_queries",
+    "iter_query_batches",
     "nn_classify",
     "classification_accuracy",
     "triangle_ratio",

@@ -5,14 +5,20 @@ The paper scans candidates one at a time, tightening a scalar best-so-far
 
     LB_Keogh  --prune?-->  LB_Improved pass 2  --prune?-->  full DTW
 
-On a vector machine we process candidates in *blocks* (DESIGN.md §3.2):
+On a vector machine we process candidates in *blocks* (DESIGN.md §3.2)
+and queries in *batches* (DESIGN.md §3.4): the scan carry is query-major,
+holding one top-k per query lane, so a single sweep over the database
+serves a whole `(Q, n)` query batch while every lane prunes against its
+own tightening bound.
 
 * ``nn_search_scan`` — fully jittable ``lax.scan`` over blocks.  Stage 2
   and stage 3 of a block execute under ``lax.cond`` only when at least one
-  lane survived, so a fully-pruned block costs exactly one LB_Keogh pass,
-  like the paper.  The carry threads the top-k bound so later blocks see
-  the tightened threshold, preserving the sequential algorithm's pruning
-  behaviour.
+  (query, candidate) lane survived, so a fully-pruned block costs exactly
+  one LB_Keogh pass, like the paper.  The carry threads the per-query
+  top-k so later blocks see the tightened thresholds, preserving the
+  sequential algorithm's pruning behaviour for every query independently.
+  A 1-D query returns a ``SearchResult``; a ``(Q, n)`` batch returns a
+  ``BatchSearchResult``.
 * ``nn_search_host`` — host-orchestrated variant with true survivor
   compaction: LB survivors are gathered into fixed-size chunks before the
   banded DTW runs, so wall-clock time tracks pruned work even when single
@@ -20,21 +26,22 @@ On a vector machine we process candidates in *blocks* (DESIGN.md §3.2):
   paper's Figures 6-10.
 
 Both return identical results (modulo distance ties) and per-stage
-pruning statistics with the paper's per-candidate semantics.
+pruning statistics with the paper's per-candidate semantics; batched
+search bit-matches the per-query loop (tests/test_batched_search.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Literal
+from typing import Iterator, Literal
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dtw import BIG, PNorm, dtw_batch, finish_cost
-from repro.core.envelope import envelope
+from repro.core.dtw import BIG, PNorm, dtw_qbatch, finish_cost
+from repro.core.envelope import envelope_batch
 from repro.core import lb as lb_mod
 
 Method = Literal["full", "lb_keogh", "lb_improved"]
@@ -42,7 +49,15 @@ Method = Literal["full", "lb_keogh", "lb_improved"]
 
 @dataclasses.dataclass(frozen=True)
 class SearchStats:
-    """Per-candidate stage counts (paper semantics: Figs 6-10 'pruning')."""
+    """Per-candidate stage counts (paper semantics: Figs 6-10 'pruning').
+
+    ``lb1_pruned + lb2_pruned + full_dtw (+ lb0_pruned) == n_candidates``
+    holds on every search path.  In a query batch the per-candidate
+    counters stay per-query (each query lane decides prune/keep against
+    its own bound — DESIGN.md §3.4) while the ``blocks_*`` counters are
+    execution counts of the shared batched sweep, so a per-query stats
+    object inside a batch reports the batch-level block counts.
+    """
 
     n_candidates: int
     lb1_pruned: int  # discarded by LB_Keogh
@@ -87,6 +102,35 @@ class SearchResult:
         return int(self.indices[0])
 
 
+@dataclasses.dataclass(frozen=True)
+class BatchSearchResult:
+    """Results for a ``(Q, n)`` query batch (DESIGN.md §3.4).
+
+    ``stats`` aggregates the per-candidate counters over the whole batch
+    (``n_candidates = Q * n_db``); ``per_query[i]`` keeps the paper's
+    per-candidate semantics for query ``i`` alone.  Indexing returns the
+    per-query ``SearchResult``, so ``result[i]`` is interchangeable with
+    what a per-query search call would have returned.
+    """
+
+    distances: np.ndarray  # (Q, k) ascending per row
+    indices: np.ndarray  # (Q, k)
+    stats: SearchStats  # aggregated over the batch
+    per_query: tuple[SearchStats, ...] = ()
+
+    def __len__(self) -> int:
+        return int(self.distances.shape[0])
+
+    def __getitem__(self, i: int) -> SearchResult:
+        stats = self.per_query[i] if self.per_query else self.stats
+        return SearchResult(
+            distances=self.distances[i], indices=self.indices[i], stats=stats
+        )
+
+    def __iter__(self) -> Iterator[SearchResult]:
+        return (self[i] for i in range(len(self)))
+
+
 def _pad_db(db: jax.Array, block: int) -> tuple[jax.Array, int]:
     n_db = db.shape[0]
     n_pad = (-n_db) % block
@@ -98,7 +142,7 @@ def _pad_db(db: jax.Array, block: int) -> tuple[jax.Array, int]:
 
 
 def make_block_step(
-    q: jax.Array,
+    qs: jax.Array,
     upper: jax.Array,
     lower: jax.Array,
     w: int,
@@ -106,67 +150,98 @@ def make_block_step(
     k: int,
     block: int,
     method: Method,
+    masked: bool = False,
+    n_real: jax.Array | None = None,
 ):
-    """Build the scan body shared by local, sharded and indexed search.
+    """Build the query-major scan body shared by local, sharded and
+    indexed search (DESIGN.md §3.4).
 
-    carry = (top_v, top_i, gbound, lb1_pruned, lb2_pruned, dtw_count,
-             lb2_blocks, dtw_blocks);  input = (block_array, lane_indices)
+    ``qs``, ``upper``, ``lower`` are ``(Q, n)`` — a query batch with its
+    envelopes; a single query is the ``Q = 1`` special case.
+
+    carry = (top_v (Q, k), top_i (Q, k), gbound (Q,),
+             lb1_pruned (Q,), lb2_pruned (Q,), dtw_count (Q,),
+             lb2_blocks, dtw_blocks)
+    input = (block_array, lane_indices[, entry_mask])
     where ``lane_indices`` is the (block,) vector of candidate ids — a
     contiguous range for the plain scan, a compacted survivor gather for
-    ``nn_search_indexed``.
-    ``gbound`` is an externally-supplied pruning bound (the sharded search
-    pmin-exchanges it between rounds; local search leaves it at BIG).
-    All values powered (no l_p root).
+    ``nn_search_indexed`` — shared by every query lane, and ``entry_mask``
+    (only when ``masked=True``) is a (Q, block) bool marking which lanes
+    are still alive on entry (stage-0 survivors per query; masked-off
+    lanes are neither evaluated nor counted).  When ``n_real`` is given
+    instead, lanes with ``cand_i >= n_real`` (database pad rows) are
+    masked off the same way without materializing a mask per step —
+    pads' filler rows pass LB while a bound is still BIG, so they must
+    never be counted.
+    ``gbound`` is an externally-supplied per-query pruning bound (the
+    sharded search pmin-exchanges it between rounds; local search leaves
+    it at BIG).  All values powered (no l_p root).
     """
+    nq = qs.shape[0]
 
     def body(carry, inp):
         top_v, top_i, gbound, c_lb1, c_lb2, c_dtw, b_lb2, b_dtw = carry
-        blk, cand_i = inp
-        bound = jnp.minimum(top_v[-1], gbound)  # k-th best (powered)
+        if masked:
+            blk, cand_i, mask0 = inp
+        else:
+            blk, cand_i = inp
+            if n_real is None:
+                mask0 = jnp.ones((nq, block), bool)
+            else:
+                mask0 = jnp.broadcast_to(
+                    (cand_i < n_real)[None, :], (nq, block)
+                )
+        bound = jnp.minimum(top_v[:, -1], gbound)  # per-query k-th best
 
         if method == "full":
-            alive1 = jnp.ones((block,), bool)
+            alive1 = mask0
             alive2 = alive1
-            lb1 = jnp.zeros((block,))
+            lb1 = jnp.zeros((nq, block))
         else:
-            lb1 = lb_mod.lb_keogh_powered_batch(blk, upper, lower, p)
-            alive1 = lb1 < bound
+            lb1 = lb_mod.lb_keogh_powered_qbatch(blk, upper, lower, p)
+            alive1 = mask0 & (lb1 < bound[:, None])
 
         if method == "full":
             pass
         elif method == "lb_keogh":
             alive2 = alive1
             lb = lb1
-        else:  # lb_improved: pass 2 only if some lane survived pass 1
+        else:  # lb_improved: pass 2 only if some lane of some query survived
 
             def pass2(_):
-                return lb_mod.lb_improved_powered_batch(
-                    blk, q, upper, lower, w, p
+                return lb_mod.lb_improved_powered_qbatch(
+                    blk, qs, upper, lower, w, p
                 )
 
             lb = jax.lax.cond(
                 jnp.any(alive1), pass2, lambda _: lb1, operand=None
             )
-            alive2 = alive1 & (lb < bound)
+            alive2 = alive1 & (lb < bound[:, None])
 
         def run_dtw(_):
-            return dtw_batch(q, blk, w, p, powered=True)
+            return dtw_qbatch(qs, blk, w, p, powered=True)
 
         need_dtw = jnp.any(alive2)
         d = jax.lax.cond(
-            need_dtw, run_dtw, lambda _: jnp.full((block,), BIG), operand=None
+            need_dtw,
+            run_dtw,
+            lambda _: jnp.full((nq, block), BIG),
+            operand=None,
         )
         d = jnp.where(alive2, d, BIG)
 
-        # merge block results into the running top-k
-        all_v = jnp.concatenate([top_v, d])
-        all_i = jnp.concatenate([top_i, cand_i])
+        # merge block results into each query's running top-k
+        all_v = jnp.concatenate([top_v, d], axis=1)
+        all_i = jnp.concatenate(
+            [top_i, jnp.broadcast_to(cand_i[None, :], (nq, block))], axis=1
+        )
         neg_v, sel = jax.lax.top_k(-all_v, k)
-        top_v, top_i = -neg_v, all_i[sel]
+        top_v = -neg_v
+        top_i = jnp.take_along_axis(all_i, sel, axis=1)
 
-        c_lb1 += jnp.sum(~alive1)
-        c_lb2 += jnp.sum(alive1 & ~alive2)
-        c_dtw += jnp.sum(alive2)
+        c_lb1 += jnp.sum(mask0 & ~alive1, axis=1)
+        c_lb2 += jnp.sum(alive1 & ~alive2, axis=1)
+        c_dtw += jnp.sum(alive2, axis=1)
         b_lb2 += jnp.int32(jnp.any(alive1) & (method == "lb_improved"))
         b_dtw += jnp.int32(need_dtw)
         return (top_v, top_i, gbound, c_lb1, c_lb2, c_dtw, b_lb2, b_dtw), None
@@ -174,16 +249,24 @@ def make_block_step(
     return body
 
 
-def init_carry(k: int, top_v: jax.Array | None = None, top_i: jax.Array | None = None):
-    """Fresh scan carry; optionally seeded with an already-known top-k
-    (the indexed search seeds it with the exact reference distances)."""
+def init_carry(
+    k: int,
+    top_v: jax.Array | None = None,
+    top_i: jax.Array | None = None,
+    nq: int = 1,
+):
+    """Fresh query-major scan carry for ``nq`` query lanes; optionally
+    seeded with an already-known (Q, k) top-k (the indexed search seeds
+    it with the exact reference distances)."""
     return (
-        jnp.full((k,), BIG) if top_v is None else jnp.asarray(top_v),
-        jnp.full((k,), -1, jnp.int32) if top_i is None else jnp.asarray(top_i, jnp.int32),
-        jnp.asarray(BIG),
-        jnp.int32(0),
-        jnp.int32(0),
-        jnp.int32(0),
+        jnp.full((nq, k), BIG) if top_v is None else jnp.asarray(top_v),
+        jnp.full((nq, k), -1, jnp.int32)
+        if top_i is None
+        else jnp.asarray(top_i, jnp.int32),
+        jnp.full((nq,), BIG),
+        jnp.zeros((nq,), jnp.int32),
+        jnp.zeros((nq,), jnp.int32),
+        jnp.zeros((nq,), jnp.int32),
         jnp.int32(0),
         jnp.int32(0),
     )
@@ -193,24 +276,77 @@ def init_carry(k: int, top_v: jax.Array | None = None, top_i: jax.Array | None =
     jax.jit, static_argnames=("w", "p", "k", "block", "method")
 )
 def _scan_search(
-    q: jax.Array,
+    qs: jax.Array,
     db: jax.Array,
+    n_real: jax.Array,
     w: int,
     p: PNorm,
     k: int,
     block: int,
     method: Method,
 ):
-    n = q.shape[0]
+    nq, n = qs.shape
     w = int(min(w, n - 1))
-    upper, lower = envelope(q, w)
+    upper, lower = envelope_batch(qs, w)
     nb = db.shape[0] // block
     blocks = db.reshape(nb, block, n)
     idx = (jnp.arange(nb) * block)[:, None] + jnp.arange(block)[None, :]
-    body = make_block_step(q, upper, lower, w, p, k, block, method)
-    carry, _ = jax.lax.scan(body, init_carry(k), (blocks, idx))
+    # pad lanes (cand_i >= n_real) are masked inside the body, never
+    # evaluated or counted — see make_block_step(n_real=...)
+    body = make_block_step(
+        qs, upper, lower, w, p, k, block, method, n_real=n_real
+    )
+    carry, _ = jax.lax.scan(body, init_carry(k, nq=nq), (blocks, idx))
     top_v, top_i, _gbound, c1, c2, c3, b2, b3 = carry
     return top_v, top_i, c1, c2, c3, b2, b3
+
+
+def _batch_stats(
+    n_db: int,
+    c1: np.ndarray,
+    c2: np.ndarray,
+    c3: np.ndarray,
+    b2: int,
+    b3: int,
+    blocks_total: int,
+    per_query_stage0: list[dict] | None = None,
+) -> tuple[SearchStats, tuple[SearchStats, ...]]:
+    """Per-query + aggregated stats from the (Q,) counter vectors.
+
+    Every driver masks or slices padded lanes out of its counters, so no
+    pad corrections are needed here.  ``per_query_stage0`` optionally
+    carries each query's stage-0 counter dict (lb0_pruned / ref_dtw /
+    clusters_*) from the indexed path.
+    """
+    nq = len(c1)
+    s0_per = per_query_stage0 if per_query_stage0 is not None else [{}] * nq
+    per_query = tuple(
+        SearchStats(
+            n_candidates=n_db,
+            lb1_pruned=int(c1[i]),
+            lb2_pruned=int(c2[i]),
+            full_dtw=int(c3[i]),
+            blocks_total=blocks_total,
+            blocks_lb2=int(b2),
+            blocks_dtw=int(b3),
+            **s0_per[i],
+        )
+        for i in range(nq)
+    )
+    agg = SearchStats(
+        n_candidates=nq * n_db,
+        lb1_pruned=sum(s.lb1_pruned for s in per_query),
+        lb2_pruned=sum(s.lb2_pruned for s in per_query),
+        full_dtw=sum(s.full_dtw for s in per_query),
+        blocks_total=blocks_total,
+        blocks_lb2=int(b2),
+        blocks_dtw=int(b3),
+        lb0_pruned=sum(s.lb0_pruned for s in per_query),
+        ref_dtw=sum(s.ref_dtw for s in per_query),
+        clusters_total=sum(s.clusters_total for s in per_query),
+        clusters_pruned=sum(s.clusters_pruned for s in per_query),
+    )
+    return agg, per_query
 
 
 def nn_search_scan(
@@ -221,31 +357,40 @@ def nn_search_scan(
     k: int = 1,
     block: int = 32,
     method: Method = "lb_improved",
-) -> SearchResult:
-    """Jit-compiled block-scan cascade (device-resident end to end)."""
+) -> SearchResult | BatchSearchResult:
+    """Jit-compiled block-scan cascade (device-resident end to end).
+
+    ``q`` may be a single series (n,) -> ``SearchResult`` or a query
+    batch (Q, n) -> ``BatchSearchResult``; the batch shares one sweep
+    over the database (DESIGN.md §3.4) and bit-matches the per-query
+    loop.
+    """
     q = jnp.asarray(q)
+    single = q.ndim == 1
+    qs = q[None, :] if single else q
     db = jnp.asarray(db)
     n_db = db.shape[0]
     dbp, _ = _pad_db(db, block)
     top_v, top_i, c1, c2, c3, b2, b3 = _scan_search(
-        q, dbp, int(w), p, int(k), int(block), method
+        qs, dbp, jnp.int32(n_db), int(w), p, int(k), int(block), method
     )
-    n_pad = dbp.shape[0] - n_db
-    # padded lanes are lb1-pruned when an LB pass ran; with method="full"
-    # no LB pass exists and the pads reach the DP instead
-    stats = SearchStats(
-        n_candidates=n_db,
-        lb1_pruned=int(c1) - (0 if method == "full" else n_pad),
-        lb2_pruned=int(c2),
-        full_dtw=int(c3) - (n_pad if method == "full" else 0),
+    agg, per_query = _batch_stats(
+        n_db,
+        np.asarray(c1),
+        np.asarray(c2),
+        np.asarray(c3),
+        int(b2),
+        int(b3),
         blocks_total=dbp.shape[0] // block,
-        blocks_lb2=int(b2),
-        blocks_dtw=int(b3),
     )
-    return SearchResult(
-        distances=np.asarray(finish_cost(top_v, p)),
-        indices=np.asarray(top_i),
-        stats=stats,
+    distances = np.asarray(finish_cost(top_v, p))
+    indices = np.asarray(top_i)
+    if single:
+        return SearchResult(
+            distances=distances[0], indices=indices[0], stats=per_query[0]
+        )
+    return BatchSearchResult(
+        distances=distances, indices=indices, stats=agg, per_query=per_query
     )
 
 
@@ -253,25 +398,32 @@ def nn_search_scan(
 
 
 @functools.partial(jax.jit, static_argnames=("p",))
-def _lb1_block(blk, upper, lower, p):
-    return lb_mod.lb_keogh_powered_batch(blk, upper, lower, p)
+def _lb1_qblock(blk, upper, lower, p):
+    return lb_mod.lb_keogh_powered_qbatch(blk, upper, lower, p)
 
 
 @functools.partial(jax.jit, static_argnames=("w", "p"))
-def _lb2_block(blk, q, upper, lower, w, p):
-    return lb_mod.lb_improved_powered_batch(blk, q, upper, lower, w, p)
+def _lb2_qblock(blk, qs, upper, lower, w, p):
+    return lb_mod.lb_improved_powered_qbatch(blk, qs, upper, lower, w, p)
 
 
 @functools.partial(jax.jit, static_argnames=("w", "p"))
-def _dtw_block(q, blk, w, p):
-    return dtw_batch(q, blk, w, p, powered=True)
+def _dtw_pairs_block(qrows, crows, w, p):
+    """Banded DP over explicit (query, candidate) row pairs — the pooled
+    survivor chunks of the batched host cascade (DESIGN.md §3.4)."""
+    from repro.core.dtw import dtw_banded, dtw_banded_diag
+
+    fn = dtw_banded if p != jnp.inf else dtw_banded_diag
+    return jax.vmap(lambda a, b: fn(a, b, w, p, powered=True))(qrows, crows)
 
 
 @functools.partial(jax.jit, static_argnames=("w", "p"))
-def _dtw_block_early(q, blk, w, bound, p):
+def _dtw_pairs_block_early(qrows, crows, w, bounds, p):
     from repro.core.dtw import dtw_banded_early
 
-    return jax.vmap(lambda c: dtw_banded_early(q, c, w, bound, p))(blk)
+    return jax.vmap(lambda a, b, bd: dtw_banded_early(a, b, w, bd, p))(
+        qrows, crows, bounds
+    )
 
 
 def nn_search_host(
@@ -284,7 +436,7 @@ def nn_search_host(
     dtw_chunk: int = 16,
     method: Method = "lb_improved",
     early_abandon: bool = False,
-) -> SearchResult:
+) -> SearchResult | BatchSearchResult:
     """Host-orchestrated cascade with survivor compaction.
 
     Device work: vectorised LB passes per block; banded DTW only on
@@ -293,25 +445,37 @@ def nn_search_host(
     with (2N+3)n + 5(1-alpha)Nn + DTW(survivors).  ``early_abandon``
     additionally stops each DP once every band cell exceeds the running
     bound (paper §3 / the author's lbimproved library).
+
+    ``q`` may be a single series (n,) -> ``SearchResult`` or a query
+    batch (Q, n) -> ``BatchSearchResult``.  Batched, the LB passes serve
+    every query lane per block in one dispatch and — the decisive part
+    (DESIGN.md §3.4) — the per-(query, candidate) survivor pairs of the
+    *whole batch* are pooled into shared ``dtw_chunk``-sized DP
+    dispatches, so nearly-empty per-query chunks disappear and DP lanes
+    track total surviving work, not query count.
     """
     q = jnp.asarray(q)
+    single = q.ndim == 1
+    qs = q[None, :] if single else q
+    nq = qs.shape[0]
     db_j = jnp.asarray(db)
     n_db, n = db_j.shape
     w = int(min(w, n - 1))
-    upper, lower = envelope(q, w)
+    upper, lower = envelope_batch(qs, w)
 
-    top_v = np.full((k,), BIG)
-    top_i = np.full((k,), -1, np.int64)
-    c1 = c2 = c3 = 0
+    top_v = np.full((nq, k), BIG)
+    top_i = np.full((nq, k), -1, np.int64)
+    c1 = np.zeros(nq, np.int64)
+    c2 = np.zeros(nq, np.int64)
+    c3 = np.zeros(nq, np.int64)
     blocks_lb2 = blocks_dtw = 0
     nb = -(-n_db // block)
 
-    def merge(vals: np.ndarray, idxs: np.ndarray):
-        nonlocal top_v, top_i
-        av = np.concatenate([top_v, vals])
-        ai = np.concatenate([top_i, idxs])
+    def merge(qi: int, vals: np.ndarray, idxs: np.ndarray):
+        av = np.concatenate([top_v[qi], vals])
+        ai = np.concatenate([top_i[qi], idxs])
         order = np.argsort(av, kind="stable")[:k]
-        top_v, top_i = av[order], ai[order]
+        top_v[qi], top_i[qi] = av[order], ai[order]
 
     for t in range(nb):
         lo, hi = t * block, min((t + 1) * block, n_db)
@@ -319,53 +483,69 @@ def nn_search_host(
         if blk.shape[0] < block:  # pad the tail block once
             pad = jnp.broadcast_to(blk[-1:], (block - blk.shape[0], n))
             blk = jnp.concatenate([blk, pad], axis=0)
-        bound = top_v[-1]
+        bound = top_v[:, -1]  # (Q,)
 
         if method == "full":
-            survivors = np.arange(lo, hi)
+            alive = np.ones((nq, hi - lo), bool)
         else:
-            lb1 = np.asarray(_lb1_block(blk, upper, lower, p))[: hi - lo]
-            alive = lb1 < bound
-            c1 += int((~alive).sum())
+            lb1 = np.asarray(_lb1_qblock(blk, upper, lower, p))[:, : hi - lo]
+            alive = lb1 < bound[:, None]
+            c1 += (~alive).sum(axis=1)
             if method == "lb_improved" and alive.any():
                 blocks_lb2 += 1
-                lb2 = np.asarray(_lb2_block(blk, q, upper, lower, w, p))[
-                    : hi - lo
+                lb2 = np.asarray(_lb2_qblock(blk, qs, upper, lower, w, p))[
+                    :, : hi - lo
                 ]
-                alive2 = alive & (lb2 < bound)
-                c2 += int((alive & ~alive2).sum())
+                alive2 = alive & (lb2 < bound[:, None])
+                c2 += (alive & ~alive2).sum(axis=1)
                 alive = alive2
-            survivors = lo + np.nonzero(alive)[0]
 
-        c3 += len(survivors)
-        for s0 in range(0, len(survivors), dtw_chunk):
-            sel = survivors[s0 : s0 + dtw_chunk]
-            pad_n = dtw_chunk - len(sel)
-            sel_p = np.concatenate([sel, np.repeat(sel[-1:], pad_n)])
+        # pooled survivor pairs: all queries' survivors of this block,
+        # query-major order so each chunk touches few top-k rows
+        pair_q, pair_c = np.nonzero(alive)
+        pair_c = pair_c + lo
+        c3 += alive.sum(axis=1)
+        for s0 in range(0, len(pair_q), dtw_chunk):
+            sel_q = pair_q[s0 : s0 + dtw_chunk]
+            sel_c = pair_c[s0 : s0 + dtw_chunk]
+            pad_n = dtw_chunk - len(sel_q)
+            sel_qp = np.concatenate([sel_q, np.repeat(sel_q[-1:], pad_n)])
+            sel_cp = np.concatenate([sel_c, np.repeat(sel_c[-1:], pad_n)])
             blocks_dtw += 1
             if early_abandon:
                 d = np.array(
-                    _dtw_block_early(q, db_j[sel_p], w, jnp.asarray(top_v[-1]), p)
+                    _dtw_pairs_block_early(
+                        qs[sel_qp],
+                        db_j[sel_cp],
+                        w,
+                        jnp.asarray(top_v[sel_qp, -1]),
+                        p,
+                    )
                 )
             else:
-                d = np.array(_dtw_block(q, db_j[sel_p], w, p))
+                d = np.array(_dtw_pairs_block(qs[sel_qp], db_j[sel_cp], w, p))
             if pad_n:
                 d[dtw_chunk - pad_n :] = BIG
-            merge(d, sel_p)
+            for qi in np.unique(sel_qp):
+                sel = sel_qp == qi
+                merge(int(qi), d[sel], sel_cp[sel])
 
-    stats = SearchStats(
-        n_candidates=n_db,
-        lb1_pruned=c1,
-        lb2_pruned=c2,
-        full_dtw=c3,
+    agg, per_query = _batch_stats(
+        n_db,
+        c1,
+        c2,
+        c3,
+        blocks_lb2,
+        blocks_dtw,
         blocks_total=nb,
-        blocks_lb2=blocks_lb2,
-        blocks_dtw=blocks_dtw,
     )
-    return SearchResult(
-        distances=np.asarray(finish_cost(jnp.asarray(top_v), p)),
-        indices=top_i,
-        stats=stats,
+    distances = np.asarray(finish_cost(jnp.asarray(top_v), p))
+    if single:
+        return SearchResult(
+            distances=distances[0], indices=top_i[0], stats=per_query[0]
+        )
+    return BatchSearchResult(
+        distances=distances, indices=top_i, stats=agg, per_query=per_query
     )
 
 
@@ -374,9 +554,10 @@ def nn_search_host(
 
 @functools.partial(jax.jit, static_argnames=("w", "p", "k", "block", "method"))
 def _scan_search_compact(
-    q: jax.Array,
+    qs: jax.Array,
     sub: jax.Array,
     idx: jax.Array,
+    mask: jax.Array,
     top_v0: jax.Array,
     top_i0: jax.Array,
     w: int,
@@ -388,17 +569,26 @@ def _scan_search_compact(
     """Seeded block scan over a compacted survivor set (DESIGN.md §3.3).
 
     Same ``make_block_step`` body as ``_scan_search``, but candidate ids
-    arrive as an explicit gather (``idx``) and the top-k starts from the
-    exact reference distances instead of BIG.
+    arrive as an explicit gather (``idx``), the top-k starts from the
+    exact reference distances instead of BIG, and a (Q, total) entry
+    ``mask`` keeps each query lane to its *own* stage-0 survivors — the
+    compacted set is the union over the batch (§3.4), so a candidate
+    another query still needs is swept once but never evaluated or
+    counted for queries that already killed it.
     """
-    n = q.shape[0]
+    nq, n = qs.shape
     w = int(min(w, n - 1))
-    upper, lower = envelope(q, w)
+    upper, lower = envelope_batch(qs, w)
     nb = sub.shape[0] // block
     blocks = sub.reshape(nb, block, n)
     idxb = idx.reshape(nb, block)
-    body = make_block_step(q, upper, lower, w, p, k, block, method)
-    carry, _ = jax.lax.scan(body, init_carry(k, top_v0, top_i0), (blocks, idxb))
+    maskb = jnp.transpose(mask.reshape(nq, nb, block), (1, 0, 2))
+    body = make_block_step(
+        qs, upper, lower, w, p, k, block, method, masked=True
+    )
+    carry, _ = jax.lax.scan(
+        body, init_carry(k, top_v0, top_i0, nq=nq), (blocks, idxb, maskb)
+    )
     top_v, top_i, _gbound, c1, c2, c3, b2, b3 = carry
     return top_v, top_i, c1, c2, c3, b2, b3
 
@@ -410,22 +600,39 @@ def nn_search_indexed(
     k: int = 1,
     block: int = 32,
     method: Method = "lb_improved",
-) -> SearchResult:
+) -> SearchResult | BatchSearchResult:
     """Four-stage search: LB_tri -> LB_Keogh -> LB_Improved -> DTW.
 
     ``index`` is a prebuilt ``repro.index.TriangleIndex`` over ``db``;
     ``w`` and ``p`` come from the index (Theorem 1's constant depends on
-    both, so they are baked in at build time).
+    both, so they are baked in at build time).  ``q`` may be a single
+    series (n,) -> ``SearchResult`` or a query batch (Q, n) ->
+    ``BatchSearchResult``: stage 0 runs once for the whole batch (2R DPs
+    *per query*, batched into two dispatches) and stages 1-3 sweep the
+    union of the per-query survivor sets with per-lane entry masks
+    (DESIGN.md §3.4).
 
-    Stage 0 spends 2R exact DTWs on the reference series (band w and the
-    composed band 2w — the two sides of the banded triangle inequality
-    consume different bands, see repro.index.triangle_lb).  References
-    are database members, so the band-w distances seed the top-k with
-    *true* distances; then whole clusters and individual candidates die
-    with O(R) arithmetic per candidate before any envelope work.
-    Survivors are compacted and swept by the usual block cascade
+    Stage 0 spends 2R exact DTWs per query on the reference series (band
+    w and the composed band 2w — the two sides of the banded triangle
+    inequality consume different bands, see repro.index.triangle_lb).
+    References are database members, so the band-w distances seed the
+    top-k with *true* distances; then whole clusters and individual
+    candidates die with O(R) arithmetic per candidate before any envelope
+    work.  Survivors are compacted and swept by the usual block cascade
     (``make_block_step``), padded to a power-of-two number of blocks so
     jit specialisations stay logarithmic in database size.
+
+    Stats fields (``SearchStats``) specific to this path:
+
+    * ``lb0_pruned`` — candidates killed by LB_tri / cluster bounds at
+      stage 0, before any envelope work;
+    * ``ref_dtw`` — 2R: the exact reference DPs spent at query time (the
+      band-w sweep and the band-2w sweep);
+    * ``clusters_total`` / ``clusters_pruned`` — cluster-granularity
+      prune counts (a pruned cluster kills all its members in O(1));
+    * ``full_dtw`` *includes* the R band-w reference DPs, since those are
+      true candidate distances (they seed the top-k), so the invariant
+      ``lb0 + lb1 + lb2 + full_dtw == n_candidates`` holds per query.
     """
     from repro.index.triangle_lb import (
         lb_triangle_batch,
@@ -434,6 +641,9 @@ def nn_search_indexed(
     )
 
     q = jnp.asarray(q)
+    single = q.ndim == 1
+    qs = q[None, :] if single else q
+    nq = qs.shape[0]
     db_j = jnp.asarray(db)
     n_db, n = db_j.shape
     w, p = index.w, (jnp.inf if np.isinf(index.p) else index.p)
@@ -454,35 +664,36 @@ def nn_search_indexed(
             "series — the index belongs to a different database"
         )
 
-    # ---- stage 0a: exact DTW to the references at both bands (2R DPs)
+    # ---- stage 0a: exact DTW to the references at both bands (2R DPs
+    #      per query, batched over the whole query block)
     refs_j = dev["ref_series"]
-    d_q_refs = np.asarray(dtw_batch(q, refs_j, w, p, powered=False))
+    d_q_refs = np.asarray(dtw_qbatch(qs, refs_j, w, p, powered=False))
     d_q_refs_wide = np.asarray(
-        dtw_batch(q, refs_j, index.w_wide, p, powered=False)
+        dtw_qbatch(qs, refs_j, index.w_wide, p, powered=False)
     )
     # ``powered`` is elementwise python arithmetic — it works on numpy
     # arrays directly, no device round-trip needed for stage-0 scalars
-    ref_pow = powered(d_q_refs, p)
-    order = np.argsort(ref_pow, kind="stable")
-    top_v = np.full((k,), BIG)
-    top_i = np.full((k,), -1, np.int64)
+    ref_pow = powered(d_q_refs, p)  # (Q, R)
+    order = np.argsort(ref_pow, axis=1, kind="stable")
+    top_v = np.full((nq, k), BIG)
+    top_i = np.full((nq, k), -1, np.int64)
     m = min(k, n_refs)
-    top_v[:m] = ref_pow[order[:m]]
-    top_i[:m] = index.ref_idx[order[:m]]
-    bound = top_v[-1]  # powered k-th best so far
+    top_v[:, :m] = np.take_along_axis(ref_pow, order[:, :m], axis=1)
+    top_i[:, :m] = np.asarray(index.ref_idx)[order[:, :m]]
+    bound = top_v[:, -1]  # (Q,) powered k-th best so far
 
-    # ---- stage 0b: cluster-granularity pruning (O(C) work total)
+    # ---- stage 0b: cluster-granularity pruning (O(C) work per query)
     cl_lb = np.asarray(
         lb_triangle_clusters(
-            jnp.asarray(d_q_refs[cl.rep_rows]),
-            jnp.asarray(d_q_refs_wide[cl.rep_rows]),
+            jnp.asarray(d_q_refs[:, cl.rep_rows]),
+            jnp.asarray(d_q_refs_wide[:, cl.rep_rows]),
             dev["radii"],
             dev["min_radii_wide"],
             c_w,
         )
     )
-    cl_alive = powered(cl_lb, p) < bound
-    alive = cl_alive[cl.assign]
+    cl_alive = powered(cl_lb, p) < bound[:, None]  # (Q, C)
+    alive = cl_alive[:, cl.assign]  # (Q, N)
 
     # ---- stage 0c: per-candidate LB_tri over all references (O(R) each)
     lb0 = np.asarray(
@@ -494,28 +705,52 @@ def nn_search_indexed(
             c_w,
         )
     )
-    alive &= powered(lb0, p) < bound
-    alive[index.ref_idx] = False  # references were evaluated exactly above
-    survivors = np.nonzero(alive)[0]
-    lb0_pruned = n_db - n_refs - len(survivors)
+    alive &= powered(lb0, p) < bound[:, None]
+    alive[:, index.ref_idx] = False  # references were evaluated exactly above
+    per_q_survivors = alive.sum(axis=1)  # (Q,)
+    lb0_pruned = n_db - n_refs - per_q_survivors
+    # stages 1-3 sweep the union of the per-query survivor sets once;
+    # the per-lane entry mask keeps each query to its own survivors
+    survivors = np.nonzero(alive.any(axis=0))[0]
 
-    stats0 = dict(
-        n_candidates=n_db,
-        lb0_pruned=lb0_pruned,
-        ref_dtw=2 * n_refs,
-        clusters_total=cl.n_clusters,
-        clusters_pruned=int((~cl_alive).sum()),
-    )
+    stage0_per = [
+        dict(
+            lb0_pruned=int(lb0_pruned[i]),
+            ref_dtw=2 * n_refs,
+            clusters_total=cl.n_clusters,
+            clusters_pruned=int((~cl_alive[i]).sum()),
+        )
+        for i in range(nq)
+    ]
 
-    if len(survivors) == 0:
-        stats = SearchStats(lb1_pruned=0, lb2_pruned=0, full_dtw=n_refs, **stats0)
-        return SearchResult(
-            distances=np.asarray(finish_cost(jnp.asarray(top_v), p)),
-            indices=top_i,
-            stats=stats,
+    def finish(top_v_arr, top_i_arr, agg, per_query):
+        distances = np.asarray(finish_cost(jnp.asarray(top_v_arr), p))
+        indices = np.asarray(top_i_arr)
+        if single:
+            return SearchResult(
+                distances=distances[0], indices=indices[0], stats=per_query[0]
+            )
+        return BatchSearchResult(
+            distances=distances,
+            indices=indices,
+            stats=agg,
+            per_query=per_query,
         )
 
-    # ---- stages 1-3: compacted block cascade over the survivors
+    if len(survivors) == 0:
+        agg, per_query = _batch_stats(
+            n_db,
+            np.zeros(nq, np.int64),
+            np.zeros(nq, np.int64),
+            np.full(nq, n_refs, np.int64),
+            0,
+            0,
+            blocks_total=0,
+            per_query_stage0=stage0_per,
+        )
+        return finish(top_v, top_i, agg, per_query)
+
+    # ---- stages 1-3: compacted block cascade over the survivor union
     nb = -(-len(survivors) // block)
     nb_pad = 1 << (nb - 1).bit_length()  # power-of-two block count
     total = nb_pad * block
@@ -525,10 +760,16 @@ def nn_search_indexed(
         filler = jnp.full((pad, n), 0.5 * BIG ** 0.25, db_j.dtype)
         sub = jnp.concatenate([sub, filler], axis=0)
     idx = np.concatenate([survivors, np.full((pad,), -1, np.int64)])
+    # (Q, total) entry mask: each lane alive only for queries that still
+    # need it; padded filler lanes are dead for everyone
+    mask = np.concatenate(
+        [alive[:, survivors], np.zeros((nq, pad), bool)], axis=1
+    )
     top_vj, top_ij, c1, c2, c3, b2, b3 = _scan_search_compact(
-        q,
+        qs,
         sub,
         jnp.asarray(idx, jnp.int32),
+        jnp.asarray(mask),
         jnp.asarray(top_v),
         jnp.asarray(top_i, jnp.int32),
         int(w),
@@ -537,18 +778,17 @@ def nn_search_indexed(
         int(block),
         method,
     )
-    # padded lanes: lb1-pruned under LB methods, DP-reached under "full"
-    stats = SearchStats(
-        lb1_pruned=int(c1) - (0 if method == "full" else pad),
-        lb2_pruned=int(c2),
-        full_dtw=int(c3) + n_refs - (pad if method == "full" else 0),
+    # masked lanes (stage-0 pruned and padded) are neither evaluated nor
+    # counted, so no pad correction is needed; the R band-w reference DPs
+    # count as full_dtw (they seed the top-k with true distances)
+    agg, per_query = _batch_stats(
+        n_db,
+        np.asarray(c1),
+        np.asarray(c2),
+        np.asarray(c3) + n_refs,
+        int(b2),
+        int(b3),
         blocks_total=nb_pad,
-        blocks_lb2=int(b2),
-        blocks_dtw=int(b3),
-        **stats0,
+        per_query_stage0=stage0_per,
     )
-    return SearchResult(
-        distances=np.asarray(finish_cost(top_vj, p)),
-        indices=np.asarray(top_ij),
-        stats=stats,
-    )
+    return finish(top_vj, top_ij, agg, per_query)

@@ -6,12 +6,14 @@ the best candidate."*  This module turns that sentence into a mesh
 program:
 
 * the candidate database shards over (any subset of) the mesh axes;
-* every shard runs the same block cascade on its local stream;
+* every shard runs the same query-major block cascade on its local
+  stream — a whole ``(Q, n)`` query batch shares each sweep
+  (DESIGN.md §3.4);
 * every ``sync_every`` blocks the k-th-best *bound* is exchanged with
   ``lax.pmin`` so all shards prune against the globally tightest
-  threshold (one scalar over the ICI — the paper's "communicate the
-  distance");
-* at the end local top-k lists are all-gathered and merged.
+  threshold — one scalar **per query lane** over the ICI (the paper's
+  "communicate the distance", vectorised over the batch);
+* at the end local per-query top-k lists are all-gathered and merged.
 
 ``sync_every`` trades pruning power against collective latency; it is one
 of the §Perf hillclimb knobs (EXPERIMENTS.md).
@@ -29,14 +31,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.cascade import (
+    BatchSearchResult,
     Method,
     SearchResult,
-    SearchStats,
+    _batch_stats,
     init_carry,
     make_block_step,
 )
 from repro.core.dtw import BIG, PNorm, finish_cost
-from repro.core.envelope import envelope
+from repro.core.envelope import envelope_batch
 
 
 def _sharded_search_fn(
@@ -49,13 +52,17 @@ def _sharded_search_fn(
     sync_every: int,
     method: Method,
 ):
-    """Build the jitted shard_map search: (q, db_sharded) -> (top_v, top_i, stats)."""
+    """Build the jitted shard_map search: (qs, db_sharded) -> (top_v, top_i, stats).
+
+    ``qs`` is the (Q, n) query batch, replicated to every shard; the
+    carry is query-major so all Q lanes share each block sweep.
+    """
 
     db_spec = P(axis_names)  # shard candidate axis over all given mesh axes
 
-    def local_search(q, db_local):
-        n = q.shape[0]
-        upper, lower = envelope(q, w)
+    def local_search(qs, db_local):
+        nq, n = qs.shape
+        upper, lower = envelope_batch(qs, w)
         n_local = db_local.shape[0]
         nb = n_local // block
         shard_id = jnp.int32(0)
@@ -67,7 +74,7 @@ def _sharded_search_fn(
         idx = base[:, None] + jnp.arange(block)[None, :]
         blocks = db_local.reshape(nb, block, n)
 
-        body = make_block_step(q, upper, lower, w, p, k, block, method)
+        body = make_block_step(qs, upper, lower, w, p, k, block, method)
 
         rounds = -(-nb // sync_every)
         pad_rounds = rounds * sync_every - nb
@@ -83,36 +90,42 @@ def _sharded_search_fn(
 
         # The block step prunes against min(local k-th best, gbound); the
         # gbound slot of the carry is pmin-exchanged once per round (one
-        # scalar over the ICI — the paper's "communicate the distance").
+        # scalar per query lane over the ICI — the paper's "communicate
+        # the distance", vectorised over the batch).
         def round_body(carry, inp):
             carry, _ = jax.lax.scan(body, carry, inp)
             top_v, top_i, gbound, *stats = carry
-            gbound = jnp.minimum(gbound, top_v[-1])
+            gbound = jnp.minimum(gbound, top_v[:, -1])
             gbound = jax.lax.pmin(gbound, axis_names)
             return (top_v, top_i, gbound, *stats), None
 
-        carry, _ = jax.lax.scan(round_body, init_carry(k), (blocks, idx))
+        carry, _ = jax.lax.scan(round_body, init_carry(k, nq=nq), (blocks, idx))
         top_v, top_i, _gbound, c1, c2, c3, b2, b3 = carry
-        # gather per-shard top-k and merge
-        all_v = jax.lax.all_gather(top_v, axis_names, tiled=True)
-        all_i = jax.lax.all_gather(top_i, axis_names, tiled=True)
+        # gather per-shard per-query top-k along the k axis and merge
+        all_v = jax.lax.all_gather(top_v, axis_names, axis=1, tiled=True)
+        all_i = jax.lax.all_gather(top_i, axis_names, axis=1, tiled=True)
         neg, sel = jax.lax.top_k(-all_v, k)
-        stats = jnp.stack(
+        merged_i = jnp.take_along_axis(all_i, sel, axis=1)
+        cand_stats = jnp.stack(  # (3, Q) per-query candidate counters
             [
                 jax.lax.psum(c1, axis_names),
                 jax.lax.psum(c2, axis_names),
                 jax.lax.psum(c3, axis_names),
+            ]
+        )
+        block_stats = jnp.stack(  # summed over shards, like blocks_total
+            [
                 jax.lax.psum(b2, axis_names),
                 jax.lax.psum(b3, axis_names),
             ]
         )
-        return -neg, all_i[sel], stats
+        return -neg, merged_i, cand_stats, block_stats
 
     fn = shard_map(
         local_search,
         mesh=mesh,
         in_specs=(P(), db_spec),
-        out_specs=(P(), P(), P()),
+        out_specs=(P(), P(), P(), P()),
         check_rep=False,
     )
     return jax.jit(fn)
@@ -134,36 +147,45 @@ def sharded_nn_search(
     block: int = 32,
     sync_every: int = 4,
     method: Method = "lb_improved",
-) -> SearchResult:
+) -> SearchResult | BatchSearchResult:
     """Search a database sharded over ``mesh`` axes.
 
+    ``q`` may be a single series (n,) -> ``SearchResult`` or a query
+    batch (Q, n) -> ``BatchSearchResult``; the whole batch rides one
+    sharded sweep and one bound-exchange lane per query (DESIGN.md §3.4).
     ``db`` rows must divide evenly by (shards * block); callers pad with
     ``pad_database``.
     """
     axis_names = tuple(axis_names if axis_names is not None else mesh.axis_names)
     q = jnp.asarray(q)
-    n = q.shape[0]
+    single = q.ndim == 1
+    qs = q[None, :] if single else q
+    n = qs.shape[1]
     w = int(min(w, n - 1))
     fn = _cached_fn(mesh, axis_names, w, p, int(k), int(block), int(sync_every), method)
     db = jax.device_put(
         db, NamedSharding(mesh, P(axis_names))
     )
-    top_v, top_i, stats = fn(q, db)
-    c1, c2, c3, b2, b3 = (int(v) for v in np.asarray(stats))
-    n_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
-    res_stats = SearchStats(
-        n_candidates=int(db.shape[0]),
-        lb1_pruned=c1,
-        lb2_pruned=c2,
-        full_dtw=c3,
+    top_v, top_i, cand_stats, block_stats = fn(qs, db)
+    cand_stats = np.asarray(cand_stats)
+    b2, b3 = (int(v) for v in np.asarray(block_stats))
+    agg, per_query = _batch_stats(
+        int(db.shape[0]),
+        cand_stats[0],
+        cand_stats[1],
+        cand_stats[2],
+        b2,
+        b3,
         blocks_total=int(db.shape[0]) // block,
-        blocks_lb2=b2,
-        blocks_dtw=b3,
     )
-    return SearchResult(
-        distances=np.asarray(finish_cost(jnp.asarray(top_v), p)),
-        indices=np.asarray(top_i),
-        stats=res_stats,
+    distances = np.asarray(finish_cost(jnp.asarray(top_v), p))
+    indices = np.asarray(top_i)
+    if single:
+        return SearchResult(
+            distances=distances[0], indices=indices[0], stats=per_query[0]
+        )
+    return BatchSearchResult(
+        distances=distances, indices=indices, stats=agg, per_query=per_query
     )
 
 

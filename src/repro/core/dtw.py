@@ -203,6 +203,23 @@ def dtw_batch(
     return jax.vmap(lambda c: fn(query, c, w, p, powered))(candidates)
 
 
+def dtw_qbatch(
+    queries: jax.Array,
+    candidates: jax.Array,
+    w: int,
+    p: PNorm = 1,
+    powered: bool = False,
+) -> jax.Array:
+    """Doubly vmapped DTW: queries (Q, n) x candidates (B, n) -> (Q, B).
+
+    The query-major cascade (DESIGN.md §3.4) runs the banded DP for every
+    (query, candidate) pair of a block in one dispatch; each lane executes
+    the same op sequence as ``dtw_batch``, so values are bit-identical to
+    the per-query path.
+    """
+    return jax.vmap(lambda q: dtw_batch(q, candidates, w, p, powered))(queries)
+
+
 @functools.partial(jax.jit, static_argnames=("w", "p"))
 def dtw_banded_early(
     x: jax.Array, y: jax.Array, w: int, bound: jax.Array, p: PNorm = 1

@@ -104,3 +104,49 @@ def lb_improved_powered_batch(
     if p == jnp.inf:
         return jnp.maximum(pass1, pass2)
     return pass1 + pass2
+
+
+# ------------------------------------------------------------ query-major
+
+
+def lb_keogh_powered_qbatch(
+    cs: jax.Array, upper: jax.Array, lower: jax.Array, p: PNorm = 1
+) -> jax.Array:
+    """(B, n) candidates vs (Q, n) query envelopes -> (Q, B) powered bounds.
+
+    The query-major layout of DESIGN.md §3.4: one candidate block serves
+    every query lane of the batch in a single sweep.
+    """
+    return lb_keogh_powered(cs[None, :, :], upper[:, None, :], lower[:, None, :], p)
+
+
+def lb_improved_powered_qbatch(
+    cs: jax.Array,
+    qs: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    w: int,
+    p: PNorm = 1,
+) -> jax.Array:
+    """(B, n) candidates vs (Q, n) queries -> (Q, B) powered two-pass bounds.
+
+    The projection H(c, q) depends on the query, so pass 2 computes Q*B
+    envelopes — the same total work as the per-query loop, but in one
+    dense dispatch (DESIGN.md §3.4).
+    """
+    nq, n = qs.shape
+    b = cs.shape[0]
+    pass1 = lb_keogh_powered_qbatch(cs, upper, lower, p)
+    h = project(cs[None, :, :], upper[:, None, :], lower[:, None, :])
+    hu, hl = envelope_batch(h.reshape(nq * b, n), w)
+    hu = hu.reshape(nq, b, n)
+    hl = hl.reshape(nq, b, n)
+    d = elem_cost(
+        jnp.maximum(qs[:, None, :] - hu, 0.0)
+        + jnp.maximum(hl - qs[:, None, :], 0.0),
+        p,
+    )
+    pass2 = jnp.max(d, axis=-1) if p == jnp.inf else jnp.sum(d, axis=-1)
+    if p == jnp.inf:
+        return jnp.maximum(pass1, pass2)
+    return pass1 + pass2

@@ -1,0 +1,72 @@
+"""Query-queue microbatching front end (DESIGN.md §3.4).
+
+Turns any batched search entry point — ``nn_search_scan`` /
+``nn_search_host`` / ``nn_search_indexed`` / ``sharded_nn_search`` with
+a ``(Q, n)`` query — into a queue-drain loop: queries are grouped into
+fixed-size microbatches (one jit specialisation), each batch rides one
+query-major sweep, and per-query results stream back in submission
+order.  The launcher re-exports these (``repro.launch.search``); they
+live here so local consumers (benchmarks, tests) don't import the
+sharded-serving stack as a side effect.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Iterable, Iterator
+
+import numpy as np
+
+from repro.core.cascade import BatchSearchResult, SearchResult
+
+
+def iter_query_batches(
+    queries: Iterable[np.ndarray] | np.ndarray, batch: int
+) -> Iterator[tuple[np.ndarray, int]]:
+    """Group a query stream into (batch, n) microbatches.
+
+    ``queries`` may be a (N, n) array or any iterable of (n,) series —
+    including a live producer: batches are formed as soon as ``batch``
+    queries (or the end of the stream) arrive, nothing is materialized
+    up front.  Yields ``(block, n_valid)``: a ragged batch is padded by
+    repeating its last query so every dispatch sees the same (batch, n)
+    shape (one jit specialisation); ``n_valid`` tells the caller how
+    many leading rows are real.
+    """
+    if batch <= 0:
+        raise ValueError(f"query batch must be positive, got {batch}")
+    if isinstance(queries, np.ndarray) and queries.ndim != 2:
+        raise ValueError(f"expected (N, n) query array, got {queries.shape}")
+    it = iter(queries)
+    while True:
+        block_rows = list(itertools.islice(it, batch))
+        if not block_rows:
+            return
+        block = np.asarray(block_rows)
+        n_valid = block.shape[0]
+        if n_valid < batch:  # ragged tail: pad, results are dropped later
+            pad = np.repeat(block[-1:], batch - n_valid, axis=0)
+            block = np.concatenate([block, pad], axis=0)
+        yield block, n_valid
+
+
+def drain_queries(
+    queries: Iterable[np.ndarray] | np.ndarray,
+    search_batch_fn: Callable[[np.ndarray], BatchSearchResult],
+    batch: int,
+) -> Iterator[SearchResult]:
+    """Queue-drain front end: run queries through a batched search fn.
+
+    ``search_batch_fn`` takes a (batch, n) block and returns a
+    ``BatchSearchResult`` (e.g. ``sharded_nn_search`` / ``nn_search_scan``
+    / ``nn_search_indexed`` with a 2-D query).  Per-query results come
+    back in submission order, so callers can zip them against their
+    queue; pad lanes of the ragged final batch are never yielded.  The
+    queue may be a live iterator: each microbatch is served as soon as
+    it fills (or the stream ends), so an open-ended producer gets
+    results back while it keeps submitting.
+    """
+    for block, n_valid in iter_query_batches(queries, batch):
+        res = search_batch_fn(block)
+        for i in range(n_valid):
+            yield res[i]

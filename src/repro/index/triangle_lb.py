@@ -87,14 +87,16 @@ def lb_triangle_batch(
 ) -> jax.Array:
     """max over references of both pair-bound sides.
 
-    d_q_refs_w / d_q_refs_wide: (R,) rooted DTW(q, r) at band w / 2w.
+    d_q_refs_w / d_q_refs_wide: (..., R) rooted DTW(q, r) at band w / 2w
+    — a single query's (R,) vector or a query batch's (Q, R) matrix
+    (DESIGN.md §3.4: one stage-0 pass serves the whole batch).
     d_ref_db_w / d_ref_db_wide: (R, N) rooted DTW(r, s) at band w / 2w.
-    Returns (N,) rooted lower bounds on DTW^w(q, s).
+    Returns (..., N) rooted lower bounds on DTW^w(q, s).
     """
-    side_a = d_q_refs_wide[:, None] / c - d_ref_db_w
-    side_b = d_ref_db_wide / c - d_q_refs_w[:, None]
+    side_a = d_q_refs_wide[..., :, None] / c - d_ref_db_w
+    side_b = d_ref_db_wide / c - d_q_refs_w[..., :, None]
     lo = jnp.maximum(jnp.maximum(side_a, side_b), 0.0) * SLACK
-    return jnp.max(lo, axis=0)
+    return jnp.max(lo, axis=-2)
 
 
 @functools.partial(jax.jit, static_argnames=("c",))
@@ -116,6 +118,10 @@ def lb_triangle_clusters(
 
     If the max of those already beats the running k-th best, the whole
     cluster dies in O(1) without touching its members.
+
+    ``d_q_reps_w`` / ``d_q_reps_wide`` may be (C,) for one query or
+    (Q, C) for a query batch (the (C,) radii broadcast either way);
+    the result matches the query shape.
     """
     side_a = d_q_reps_wide / c - radii_w
     side_b = min_radii_wide / c - d_q_reps_w

@@ -15,6 +15,11 @@ TPU kernel here, with the layout rethought for VMEM/VPU execution
 * ``dtw``         — banded DP with the loop-carried band row resident in
   VMEM; within-row recurrence solved by cumsum+cummin doubling.
 
+The LB kernels also come in query-major ``*_qbatch_op`` variants
+(DESIGN.md §3.4): the query batch is a second grid dimension, so one
+launch computes bounds for every (query, candidate) pair of a block —
+the kernel-level mirror of the batched cascade.
+
 Kernels are validated in interpret mode against the pure-jnp oracles in
 each ``ref.py`` (which are in turn validated against numpy DPs).
 """
@@ -24,9 +29,17 @@ from repro.kernels.envelope import envelope_op, envelope_ref
 from repro.kernels.lb_improved import (
     lb_improved_op,
     lb_improved_pass2_op,
+    lb_improved_pass2_qbatch_op,
+    lb_improved_qbatch_op,
+    lb_improved_qbatch_ref,
     lb_improved_ref,
 )
-from repro.kernels.lb_keogh import lb_keogh_op, lb_keogh_ref
+from repro.kernels.lb_keogh import (
+    lb_keogh_op,
+    lb_keogh_qbatch_op,
+    lb_keogh_qbatch_ref,
+    lb_keogh_ref,
+)
 
 __all__ = [
     "dtw_op",
@@ -35,7 +48,12 @@ __all__ = [
     "envelope_ref",
     "lb_improved_op",
     "lb_improved_pass2_op",
+    "lb_improved_pass2_qbatch_op",
+    "lb_improved_qbatch_op",
     "lb_improved_ref",
+    "lb_improved_qbatch_ref",
     "lb_keogh_op",
+    "lb_keogh_qbatch_op",
     "lb_keogh_ref",
+    "lb_keogh_qbatch_ref",
 ]

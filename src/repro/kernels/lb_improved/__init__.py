@@ -1,4 +1,16 @@
-from repro.kernels.lb_improved.ops import lb_improved_op, lb_improved_pass2_op
-from repro.kernels.lb_improved.ref import lb_improved_ref
+from repro.kernels.lb_improved.ops import (
+    lb_improved_op,
+    lb_improved_pass2_op,
+    lb_improved_pass2_qbatch_op,
+    lb_improved_qbatch_op,
+)
+from repro.kernels.lb_improved.ref import lb_improved_qbatch_ref, lb_improved_ref
 
-__all__ = ["lb_improved_op", "lb_improved_pass2_op", "lb_improved_ref"]
+__all__ = [
+    "lb_improved_op",
+    "lb_improved_pass2_op",
+    "lb_improved_pass2_qbatch_op",
+    "lb_improved_qbatch_op",
+    "lb_improved_ref",
+    "lb_improved_qbatch_ref",
+]

@@ -6,8 +6,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import BIG, interpret_default, round_up
-from repro.kernels.lb_improved.kernel import lb_improved_pass2_pallas
-from repro.kernels.lb_keogh.ops import lb_keogh_op
+from repro.kernels.lb_improved.kernel import (
+    lb_improved_pass2_pallas,
+    lb_improved_pass2_qbatch_pallas,
+)
+from repro.kernels.lb_keogh.ops import lb_keogh_op, lb_keogh_qbatch_op
 
 
 def lb_improved_pass2_op(
@@ -54,4 +57,58 @@ def lb_improved_op(
     into pass 2 (fused envelope-accumulate)."""
     lb1, h = lb_keogh_op(cands, upper, lower, p, interpret=interpret)
     lb2 = lb_improved_pass2_op(h, q, w, p, interpret=interpret)
+    return lb1 + lb2
+
+
+# ------------------------------------------------------------ query-major
+
+
+def lb_improved_pass2_qbatch_op(
+    h: jax.Array,
+    qs: jax.Array,
+    w: int,
+    p=1,
+    tile_b: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Corollary 4 second term for per-(query, candidate) projections
+    h (Q, B, n) against queries (Q, n) -> (Q, B) (DESIGN.md §3.4)."""
+    if interpret is None:
+        interpret = interpret_default()
+    h = jnp.asarray(h)
+    nq, b, n = h.shape
+    w = int(min(w, n - 1))
+    win = 2 * w + 1
+    total = round_up(n + 2 * w, win)
+    bp = round_up(b, tile_b)
+
+    def padded(fill):
+        lo = jnp.full((nq, bp, w), fill, h.dtype)
+        hi = jnp.full((nq, bp, total - n - w), fill, h.dtype)
+        body = jnp.pad(
+            h, ((0, 0), (0, bp - b), (0, 0)), constant_values=fill
+        )
+        return jnp.concatenate([lo, body, hi], axis=2)
+
+    lb2 = lb_improved_pass2_qbatch_pallas(
+        padded(-BIG), padded(BIG), jnp.asarray(qs), w, n, p, tile_b, interpret
+    )
+    return lb2[:, :b]
+
+
+def lb_improved_qbatch_op(
+    cands: jax.Array,
+    qs: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    w: int,
+    p=1,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Full powered LB_Improved for candidates (B, n) against a query
+    batch (Q, n) -> (Q, B), kernel end to end: the query-major pass 1
+    emits a (Q, B, n) projection stack that feeds straight into the
+    query-major pass 2 — one launch per pass for the whole batch."""
+    lb1, h = lb_keogh_qbatch_op(cands, upper, lower, p, interpret=interpret)
+    lb2 = lb_improved_pass2_qbatch_op(h, qs, w, p, interpret=interpret)
     return lb1 + lb2

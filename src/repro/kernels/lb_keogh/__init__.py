@@ -1,4 +1,9 @@
-from repro.kernels.lb_keogh.ops import lb_keogh_op
-from repro.kernels.lb_keogh.ref import lb_keogh_ref
+from repro.kernels.lb_keogh.ops import lb_keogh_op, lb_keogh_qbatch_op
+from repro.kernels.lb_keogh.ref import lb_keogh_qbatch_ref, lb_keogh_ref
 
-__all__ = ["lb_keogh_op", "lb_keogh_ref"]
+__all__ = [
+    "lb_keogh_op",
+    "lb_keogh_qbatch_op",
+    "lb_keogh_ref",
+    "lb_keogh_qbatch_ref",
+]

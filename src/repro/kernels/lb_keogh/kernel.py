@@ -73,3 +73,64 @@ def lb_keogh_pallas(
         interpret=interpret,
     )(cands, upper[None, :], lower[None, :])
     return lb[:, 0], h
+
+
+def _lb_keogh_qbatch_kernel(c_ref, u_ref, l_ref, lb_ref, h_ref, *, p):
+    c = c_ref[...]  # (tile_b, n) — candidate tile, shared by all queries
+    u = u_ref[...]  # (1, n) — envelope of query lane program_id(0)
+    l = l_ref[...]
+    over = jnp.maximum(c - u, 0.0)
+    under = jnp.maximum(l - c, 0.0)
+    d = over + under  # one side is always 0
+    if p == 1:
+        cost = d
+    elif p == 2:
+        cost = d * d
+    else:
+        cost = d**p
+    lb_ref[...] = jnp.sum(cost, axis=1)[None, :]  # (1, tile_b)
+    h_ref[...] = jnp.clip(c, l, u)[None]  # (1, tile_b, n)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "tile_b", "interpret"))
+def lb_keogh_qbatch_pallas(
+    cands: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    p=1,
+    tile_b: int = 8,
+    interpret: bool = True,
+):
+    """Query-major LB_Keogh (DESIGN.md §3.4): grid (Q, B/tile_b).
+
+    cands (B, n), envelopes (Q, n) -> (lb (Q, B), H (Q, B, n)).
+    The query axis is a second grid dimension: each candidate tile is
+    streamed into VMEM once per query lane while the (1, n) envelope row
+    for that lane is broadcast across the candidate grid axis, so one
+    launch serves the whole query batch.  B % tile_b == 0.
+    """
+    b, n = cands.shape
+    nq = upper.shape[0]
+    if b % tile_b:
+        raise ValueError(f"batch {b} not a multiple of tile_b {tile_b}")
+    grid = (nq, b // tile_b)
+    kern = functools.partial(_lb_keogh_qbatch_kernel, p=p)
+    lb, h = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, n), lambda qi, bi: (bi, 0)),
+            pl.BlockSpec((1, n), lambda qi, bi: (qi, 0)),
+            pl.BlockSpec((1, n), lambda qi, bi: (qi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_b), lambda qi, bi: (qi, bi)),
+            pl.BlockSpec((1, tile_b, n), lambda qi, bi: (qi, bi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, b), cands.dtype),
+            jax.ShapeDtypeStruct((nq, b, n), cands.dtype),
+        ],
+        interpret=interpret,
+    )(cands, upper, lower)
+    return lb, h

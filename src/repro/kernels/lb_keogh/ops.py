@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import interpret_default, round_up
-from repro.kernels.lb_keogh.kernel import lb_keogh_pallas
+from repro.kernels.lb_keogh.kernel import lb_keogh_pallas, lb_keogh_qbatch_pallas
 
 
 def lb_keogh_op(
@@ -27,3 +27,26 @@ def lb_keogh_op(
         cands = jnp.pad(cands, ((0, bp - b), (0, 0)))
     lb, h = lb_keogh_pallas(cands, upper, lower, p, tile_b, interpret)
     return lb[:b], h[:b]
+
+
+def lb_keogh_qbatch_op(
+    cands: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    p=1,
+    tile_b: int = 8,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Query-major LB_Keogh: candidates (B, n) vs envelopes (Q, n) ->
+    (lb (Q, B), H (Q, B, n)) in one launch (DESIGN.md §3.4)."""
+    if interpret is None:
+        interpret = interpret_default()
+    cands = jnp.asarray(cands)
+    upper = jnp.asarray(upper)
+    lower = jnp.asarray(lower)
+    b, n = cands.shape
+    bp = round_up(b, tile_b)
+    if bp != b:
+        cands = jnp.pad(cands, ((0, bp - b), (0, 0)))
+    lb, h = lb_keogh_qbatch_pallas(cands, upper, lower, p, tile_b, interpret)
+    return lb[:, :b], h[:, :b]

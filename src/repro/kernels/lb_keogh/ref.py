@@ -1,11 +1,20 @@
 """Pure-jnp oracle for the fused LB_Keogh kernel."""
 
-import jax.numpy as jnp
-
-from repro.core.lb import lb_keogh_powered_batch, project
+from repro.core.lb import (
+    lb_keogh_powered_batch,
+    lb_keogh_powered_qbatch,
+    project,
+)
 
 
 def lb_keogh_ref(cands, upper, lower, p=1):
     lb = lb_keogh_powered_batch(cands, upper, lower, p)
     h = project(cands, upper[None, :], lower[None, :])
+    return lb, h
+
+
+def lb_keogh_qbatch_ref(cands, upper, lower, p=1):
+    """(B, n) candidates vs (Q, n) envelopes -> (lb (Q, B), H (Q, B, n))."""
+    lb = lb_keogh_powered_qbatch(cands, upper, lower, p)
+    h = project(cands[None, :, :], upper[:, None, :], lower[:, None, :])
     return lb, h

@@ -4,13 +4,21 @@ Shards a time-series database across every device of the mesh and
 serves nearest-neighbour queries through the two-pass LB_Improved
 cascade with best-bound exchange (repro.core.distributed).
 
+Queries are served **query-major** (DESIGN.md §3.4): the launcher drains
+its query queue in microbatches of ``--query-batch`` so one sweep over
+the database (one jit trace, one envelope pass, one bound-exchange lane
+per query) serves a whole block of queries instead of re-tracing the
+scan per query.  The final ragged batch is padded to the batch size and
+the pad results dropped, so nothing recompiles.
+
 With ``--index`` the launcher instead builds (or loads) a
-triangle-inequality reference index (repro.index) and serves queries
-through the four-stage ``nn_search_indexed`` cascade, printing stage-0
-pruning statistics next to the usual LB counters.
+triangle-inequality reference index (repro.index) and serves query
+batches through the four-stage ``nn_search_indexed`` cascade, printing
+stage-0 pruning statistics next to the usual LB counters.
 
 Usage:
-  python -m repro.launch.search --db-size 4096 --length 512 --queries 4
+  python -m repro.launch.search --db-size 4096 --length 512 --queries 16 \
+      --query-batch 8
   python -m repro.launch.search --index --p inf --n-refs 16 \
       --index-path /tmp/rw.idx.npz
 """
@@ -21,12 +29,14 @@ import argparse
 import os
 import time
 
-import jax
 import numpy as np
 
 from repro.core.distributed import pad_database, sharded_nn_search
+from repro.core.microbatch import drain_queries, iter_query_batches
 from repro.data.synthetic import random_walks
 from repro.launch.mesh import make_host_mesh
+
+__all__ = ["drain_queries", "iter_query_batches", "main"]
 
 
 def _parse_p(s: str):
@@ -45,6 +55,12 @@ def main():
     ap.add_argument("--db-size", type=int, default=4096)
     ap.add_argument("--length", type=int, default=512)
     ap.add_argument("--queries", type=int, default=4)
+    ap.add_argument(
+        "--query-batch",
+        type=int,
+        default=8,
+        help="queries served per sweep (query-major microbatching, §3.4)",
+    )
     ap.add_argument("--w", type=int, default=0, help="0 = n/10")
     ap.add_argument("--p", type=_parse_p, default=1, help="1, 2, ... or inf")
     ap.add_argument("--k", type=int, default=1)
@@ -69,34 +85,44 @@ def main():
     rng = np.random.default_rng(args.seed)
     w = args.w or args.length // 10
     db = random_walks(rng, args.db_size, args.length)
+    queries = random_walks(rng, args.queries, args.length)
+    # --queries 0 (config-printout smoke runs) must stay a graceful no-op
+    batch = max(1, min(args.query_batch, args.queries))
 
     if args.index:
-        _serve_indexed(args, rng, db, w)
+        _serve_indexed(args, db, queries, batch, w)
         return
 
     mesh = make_host_mesh()
     dbp, n_real = pad_database(db, mesh, block=args.block)
     print(
         f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
-        f"db={n_real} series x {args.length} (padded {dbp.shape[0]}) w={w}"
+        f"db={n_real} series x {args.length} (padded {dbp.shape[0]}) "
+        f"w={w} query_batch={batch}"
     )
-    for qi in range(args.queries):
-        q = random_walks(rng, 1, args.length)[0]
-        t0 = time.perf_counter()
-        res = sharded_nn_search(
-            q, dbp, mesh, w=w, p=args.p, k=args.k, block=args.block,
+
+    def search_block(block_q):
+        return sharded_nn_search(
+            block_q, dbp, mesh, w=w, p=args.p, k=args.k, block=args.block,
             sync_every=args.sync_every,
         )
-        dt = time.perf_counter() - t0
+
+    t_all = time.perf_counter()
+    for qi, res in enumerate(drain_queries(queries, search_block, batch)):
         s = res.stats
         print(
             f"query {qi}: nn={res.index} dist={res.distance:.3f} "
-            f"{dt*1e3:.1f} ms  pruned_lb1={s.lb1_pruned} pruned_lb2={s.lb2_pruned} "
+            f"pruned_lb1={s.lb1_pruned} pruned_lb2={s.lb2_pruned} "
             f"dtw={s.full_dtw} ({100*s.pruning_ratio:.1f}% pruned)"
         )
+    dt = time.perf_counter() - t_all
+    print(
+        f"served {args.queries} queries in {dt*1e3:.1f} ms "
+        f"({args.queries/dt:.1f} queries/sec at batch {batch})"
+    )
 
 
-def _serve_indexed(args, rng, db, w):
+def _serve_indexed(args, db, queries, batch, w):
     from repro.core.cascade import nn_search_indexed
     from repro.index import build_index, load_index, save_index
     from repro.index.store import npz_path
@@ -125,20 +151,29 @@ def _serve_indexed(args, rng, db, w):
         if args.index_path:
             print(f"saved index to {save_index(index, args.index_path)}")
 
-    print(f"db={db.shape[0]} series x {db.shape[1]} w={w} p={args.p}")
-    for qi in range(args.queries):
-        q = random_walks(rng, 1, args.length)[0]
-        t0 = time.perf_counter()
-        res = nn_search_indexed(q, db, index, k=args.k, block=args.block)
-        dt = time.perf_counter() - t0
+    print(
+        f"db={db.shape[0]} series x {db.shape[1]} w={w} p={args.p} "
+        f"query_batch={batch}"
+    )
+
+    def search_block(block_q):
+        return nn_search_indexed(block_q, db, index, k=args.k, block=args.block)
+
+    t_all = time.perf_counter()
+    for qi, res in enumerate(drain_queries(queries, search_block, batch)):
         s = res.stats
         print(
             f"query {qi}: nn={res.index} dist={res.distance:.3f} "
-            f"{dt*1e3:.1f} ms  stage0={s.lb0_pruned} ({100*s.stage0_ratio:.1f}%) "
+            f"stage0={s.lb0_pruned} ({100*s.stage0_ratio:.1f}%) "
             f"clusters={s.clusters_pruned}/{s.clusters_total} "
             f"lb1={s.lb1_pruned} lb2={s.lb2_pruned} dtw={s.full_dtw} "
             f"({100*s.pruning_ratio:.1f}% pruned)"
         )
+    dt = time.perf_counter() - t_all
+    print(
+        f"served {args.queries} queries in {dt*1e3:.1f} ms "
+        f"({args.queries/dt:.1f} queries/sec at batch {batch})"
+    )
 
 
 if __name__ == "__main__":

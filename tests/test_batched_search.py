@@ -1,0 +1,224 @@
+"""Query-major batched search == per-query loop (DESIGN.md §3.4).
+
+The batched cascade must be *exact*: identical neighbour indices AND
+identical distance values to running the same queries one at a time,
+for every p, for k > 1, with and without the stage-0 triangle index,
+and for ragged final microbatches.  Per-candidate pruning statistics
+stay per-query and must match the per-query loop too (block-execution
+counters are batch-level by design and are not compared).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.cascade import (
+    BatchSearchResult,
+    SearchResult,
+    nn_search_host,
+    nn_search_indexed,
+    nn_search_scan,
+)
+from repro.index import build_index
+from repro.core.microbatch import drain_queries, iter_query_batches
+
+RNG = np.random.default_rng(42)
+N, N_DB, W = 64, 96, 6
+P_VALUES = [1, 2, jnp.inf]
+
+
+def make_problem(nq=6):
+    db = RNG.normal(size=(N_DB, N)).astype(np.float32).cumsum(axis=1)
+    # mix of near-database queries (stage 0 fires) and fresh walks
+    near = db[RNG.integers(0, N_DB, nq // 2)] + RNG.normal(
+        scale=0.4, size=(nq // 2, N)
+    ).astype(np.float32)
+    far = RNG.normal(size=(nq - nq // 2, N)).astype(np.float32).cumsum(axis=1)
+    return np.concatenate([near, far]), db
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_problem()
+
+
+@pytest.mark.parametrize("p", P_VALUES)
+@pytest.mark.parametrize("k", [1, 3])
+def test_scan_batched_matches_loop(problem, p, k):
+    qs, db = problem
+    batched = nn_search_scan(qs, db, w=W, p=p, k=k)
+    assert isinstance(batched, BatchSearchResult)
+    assert len(batched) == len(qs)
+    for i, q in enumerate(qs):
+        single = nn_search_scan(q, db, w=W, p=p, k=k)
+        assert isinstance(single, SearchResult)
+        np.testing.assert_array_equal(batched.indices[i], single.indices)
+        np.testing.assert_array_equal(batched.distances[i], single.distances)
+        bs, ss = batched.per_query[i], single.stats
+        assert (bs.lb1_pruned, bs.lb2_pruned, bs.full_dtw) == (
+            ss.lb1_pruned,
+            ss.lb2_pruned,
+            ss.full_dtw,
+        )
+
+
+@pytest.mark.parametrize("method", ["full", "lb_keogh", "lb_improved"])
+def test_scan_batched_methods(problem, method):
+    qs, db = problem
+    batched = nn_search_scan(qs, db, w=W, p=1, k=2, method=method)
+    for i, q in enumerate(qs):
+        single = nn_search_scan(q, db, w=W, p=1, k=2, method=method)
+        np.testing.assert_array_equal(batched.indices[i], single.indices)
+        np.testing.assert_array_equal(batched.distances[i], single.distances)
+
+
+@pytest.mark.parametrize("p", P_VALUES)
+@pytest.mark.parametrize("early_abandon", [False, True])
+def test_host_batched_matches_loop(problem, p, early_abandon):
+    """The host cascade pools DP survivors across the batch (§3.4); the
+    pooled-chunk path must still bit-match the per-query loop."""
+    if early_abandon and p == jnp.inf:
+        pytest.skip("early abandon is finite-p only")
+    qs, db = problem
+    kw = dict(w=W, p=p, k=2, block=40, dtw_chunk=8, early_abandon=early_abandon)
+    batched = nn_search_host(qs, db, **kw)
+    assert isinstance(batched, BatchSearchResult)
+    for i, q in enumerate(qs):
+        single = nn_search_host(q, db, **kw)
+        np.testing.assert_array_equal(batched.indices[i], single.indices)
+        np.testing.assert_array_equal(batched.distances[i], single.distances)
+        bs, ss = batched.per_query[i], single.stats
+        assert (bs.lb1_pruned, bs.lb2_pruned, bs.full_dtw) == (
+            ss.lb1_pruned,
+            ss.lb2_pruned,
+            ss.full_dtw,
+        )
+
+
+@pytest.mark.parametrize("p", P_VALUES)
+@pytest.mark.parametrize("k", [1, 3])
+def test_indexed_batched_matches_loop(problem, p, k):
+    qs, db = problem
+    index = build_index(db, w=W, p=p, n_refs=8, seed=0)
+    batched = nn_search_indexed(qs, db, index, k=k)
+    assert isinstance(batched, BatchSearchResult)
+    for i, q in enumerate(qs):
+        single = nn_search_indexed(q, db, index, k=k)
+        np.testing.assert_array_equal(batched.indices[i], single.indices)
+        np.testing.assert_array_equal(batched.distances[i], single.distances)
+        bs, ss = batched.per_query[i], single.stats
+        # stage 0 is computed per query and must match exactly; stages
+        # 1-3 sweep the *union* survivor layout in a batch, so the bound
+        # tightens at different block boundaries and per-stage counts may
+        # shift between lb1/lb2/dtw (results stay exact — DESIGN.md §3.4)
+        assert (bs.lb0_pruned, bs.ref_dtw, bs.clusters_pruned) == (
+            ss.lb0_pruned,
+            ss.ref_dtw,
+            ss.clusters_pruned,
+        )
+        assert (
+            bs.lb0_pruned + bs.lb1_pruned + bs.lb2_pruned + bs.full_dtw
+            == bs.n_candidates
+        )
+
+
+def test_indexed_batched_stats_invariant(problem):
+    qs, db = problem
+    index = build_index(db, w=W, p=jnp.inf, n_refs=8, seed=0)
+    batched = nn_search_indexed(qs, db, index, k=2)
+    for s in batched.per_query:
+        assert (
+            s.lb0_pruned + s.lb1_pruned + s.lb2_pruned + s.full_dtw
+            == s.n_candidates
+        )
+    agg = batched.stats
+    assert agg.n_candidates == len(qs) * db.shape[0]
+    assert (
+        agg.lb0_pruned + agg.lb1_pruned + agg.lb2_pruned + agg.full_dtw
+        == agg.n_candidates
+    )
+
+
+def test_batched_matches_scan_neighbours(problem):
+    """Batched indexed and batched scan agree on the neighbour set."""
+    qs, db = problem
+    index = build_index(db, w=W, p=2, n_refs=8, seed=0)
+    r_idx = nn_search_indexed(qs, db, index, k=3)
+    r_scan = nn_search_scan(qs, db, w=W, p=2, k=3)
+    for i in range(len(qs)):
+        assert set(r_idx.indices[i].tolist()) == set(
+            r_scan.indices[i].tolist()
+        )
+        np.testing.assert_allclose(
+            r_idx.distances[i], r_scan.distances[i], rtol=1e-5
+        )
+
+
+def test_iter_query_batches_ragged():
+    qs, _ = make_problem(nq=7)
+    blocks = list(iter_query_batches(qs, 3))
+    assert [nv for _, nv in blocks] == [3, 3, 1]
+    assert all(b.shape == (3, N) for b, _ in blocks)
+    # pad rows repeat the last real query so shapes stay static
+    np.testing.assert_array_equal(blocks[-1][0][1], qs[-1])
+    np.testing.assert_array_equal(blocks[-1][0][2], qs[-1])
+
+
+@pytest.mark.parametrize("batch", [3, 4, 7, 10])
+def test_drain_queries_ragged_final_batch(problem, batch):
+    """The microbatch front end yields per-query results in order, even
+    when the final batch is ragged (7 queries, batch sizes that don't
+    divide it)."""
+    qs, db = problem
+    qs7 = np.concatenate([qs, qs[:1]])  # 7 queries
+
+    results = list(
+        drain_queries(qs7, lambda blk: nn_search_scan(blk, db, w=W, p=1, k=2), batch)
+    )
+    assert len(results) == len(qs7)
+    for q, res in zip(qs7, results):
+        single = nn_search_scan(q, db, w=W, p=1, k=2)
+        np.testing.assert_array_equal(res.indices, single.indices)
+        np.testing.assert_array_equal(res.distances, single.distances)
+
+
+def test_drain_queries_streams_live_producer(problem):
+    """drain_queries must serve each microbatch as soon as it fills,
+    without materializing an open-ended queue up front."""
+    qs, db = problem
+    produced = []
+
+    def producer():
+        for q in qs:
+            produced.append(q)
+            yield q
+
+    gen = drain_queries(
+        producer(), lambda blk: nn_search_scan(blk, db, w=W, p=1), 2
+    )
+    first = next(gen)
+    assert len(produced) == 2  # only one batch pulled so far
+    rest = list(gen)
+    assert len(produced) == len(qs)
+    for q, res in zip(qs, [first] + rest):
+        single = nn_search_scan(q, db, w=W, p=1)
+        assert res.index == single.index and res.distance == single.distance
+
+
+def test_batch_result_indexing(problem):
+    qs, db = problem
+    batched = nn_search_scan(qs, db, w=W, p=1, k=2)
+    items = list(batched)
+    assert len(items) == len(qs)
+    for i, item in enumerate(items):
+        assert isinstance(item, SearchResult)
+        assert item.index == int(batched.indices[i][0])
+        assert item.stats is batched.per_query[i]
+
+
+def test_single_query_returns_search_result(problem):
+    """1-D queries keep the legacy scalar API on every entry point."""
+    qs, db = problem
+    assert isinstance(nn_search_scan(qs[0], db, w=W), SearchResult)
+    index = build_index(db, w=W, p=1, n_refs=8, seed=0)
+    assert isinstance(nn_search_indexed(qs[0], db, index), SearchResult)

@@ -37,6 +37,17 @@ mesh = Mesh(devs.reshape(8,), ("data",))
 dbp, _ = pad_database(db, mesh, block=8)
 r_sync = sharded_nn_search(q, dbp, mesh, w=w, block=8, sync_every=1)
 assert r_sync.stats.pruning_ratio > 0.3, r_sync.stats
+
+# query-major batch: one sharded sweep serves all lanes, bit-matching
+# the per-query loop (DESIGN.md 3.4)
+qs = np.stack([q] + [rng.normal(size=n).astype(np.float32).cumsum() for _ in range(4)])
+batched = sharded_nn_search(qs, dbp, mesh, w=w, k=3, block=8, sync_every=2)
+for i in range(qs.shape[0]):
+    single = sharded_nn_search(qs[i], dbp, mesh, w=w, k=3, block=8, sync_every=2)
+    assert np.array_equal(batched.indices[i], single.indices), i
+    assert np.array_equal(batched.distances[i], single.distances), i
+    s = batched.per_query[i]
+    assert s.lb1_pruned + s.lb2_pruned + s.full_dtw == dbp.shape[0], s
 print("DIST SEARCH OK")
 """
 

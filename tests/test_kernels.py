@@ -5,15 +5,19 @@ import numpy as np
 import pytest
 
 from repro.core.dtw import dtw_reference
-from repro.core.envelope import envelope, envelope_naive
+from repro.core.envelope import envelope, envelope_batch, envelope_naive
 from repro.kernels import (
     dtw_op,
     dtw_ref,
     envelope_op,
     envelope_ref,
     lb_improved_op,
+    lb_improved_qbatch_op,
+    lb_improved_qbatch_ref,
     lb_improved_ref,
     lb_keogh_op,
+    lb_keogh_qbatch_op,
+    lb_keogh_qbatch_ref,
     lb_keogh_ref,
 )
 
@@ -60,6 +64,51 @@ def test_lb_improved_kernel(b, n, w, p):
     got = lb_improved_op(jnp.asarray(xs), q, u, l, w, p, interpret=True)
     want = lb_improved_ref(jnp.asarray(xs), q, u, l, w, p)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4)
+
+
+QBATCH_SHAPES = [(3, 10, 64, 7), (5, 8, 100, 10), (2, 13, 47, 46)]
+
+
+@pytest.mark.parametrize("nq,b,n,w", QBATCH_SHAPES)
+@pytest.mark.parametrize("p", [1, 2])
+def test_lb_keogh_qbatch_kernel(nq, b, n, w, p):
+    """Query-grid kernel (DESIGN.md §3.4) vs the query-major oracle."""
+    xs = RNG.normal(size=(b, n)).astype(np.float32).cumsum(axis=1)
+    qs = RNG.normal(size=(nq, n)).astype(np.float32).cumsum(axis=1)
+    u, l = envelope_batch(jnp.asarray(qs), w)
+    lb, h = lb_keogh_qbatch_op(jnp.asarray(xs), u, l, p, interpret=True)
+    lbr, hr = lb_keogh_qbatch_ref(jnp.asarray(xs), u, l, p)
+    assert lb.shape == (nq, b) and h.shape == (nq, b, n)
+    np.testing.assert_allclose(np.asarray(lb), np.asarray(lbr), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("nq,b,n,w", QBATCH_SHAPES)
+@pytest.mark.parametrize("p", [1, 2])
+def test_lb_improved_qbatch_kernel(nq, b, n, w, p):
+    """Query-grid two-pass chain vs the pure-jnp Corollary 4 oracle."""
+    xs = RNG.normal(size=(b, n)).astype(np.float32).cumsum(axis=1)
+    qs = jnp.asarray(RNG.normal(size=(nq, n)).astype(np.float32).cumsum(axis=1))
+    u, l = envelope_batch(qs, w)
+    got = lb_improved_qbatch_op(jnp.asarray(xs), qs, u, l, w, p, interpret=True)
+    want = lb_improved_qbatch_ref(jnp.asarray(xs), qs, u, l, w, p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4)
+
+
+def test_qbatch_kernel_rows_match_single_query_kernel():
+    """Each query lane of the batched kernel equals the per-query kernel."""
+    b, n, w, p = 9, 80, 8, 2
+    xs = jnp.asarray(RNG.normal(size=(b, n)).astype(np.float32).cumsum(axis=1))
+    qs = jnp.asarray(RNG.normal(size=(4, n)).astype(np.float32).cumsum(axis=1))
+    u, l = envelope_batch(qs, w)
+    lb_b, h_b = lb_keogh_qbatch_op(xs, u, l, p, interpret=True)
+    imp_b = lb_improved_qbatch_op(xs, qs, u, l, w, p, interpret=True)
+    for i in range(4):
+        lb_s, h_s = lb_keogh_op(xs, u[i], l[i], p, interpret=True)
+        np.testing.assert_allclose(np.asarray(lb_b[i]), np.asarray(lb_s), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(h_b[i]), np.asarray(h_s), rtol=1e-6)
+        imp_s = lb_improved_op(xs, qs[i], u[i], l[i], w, p, interpret=True)
+        np.testing.assert_allclose(np.asarray(imp_b[i]), np.asarray(imp_s), rtol=1e-5)
 
 
 @pytest.mark.parametrize("b,n,w", SHAPES)

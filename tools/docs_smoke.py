@@ -1,0 +1,167 @@
+"""Docs smoke check: every ```bash``` command in README.md must parse.
+
+Keeps the README honest (ISSUE: docs can't rot silently).  For each
+command line inside a bash fence:
+
+* ``VAR=val`` prefixes are applied to the subprocess environment;
+* ``python -m <module> ...`` — the module must resolve; argparse CLIs
+  (currently everything under ``repro.launch``) are additionally
+  executed with ``--help`` as a dry run;
+* ``python <file.py>`` — the file must exist and byte-compile;
+* ``python -c "<code>"`` — the inline code must compile;
+* ``pip install -r <file>`` — the requirements file must exist;
+* ``pytest`` / ``python -m pytest`` — pytest must be importable (the
+  full suite is CI's tier-1 job, not a docs check).
+
+Run from the repo root:  PYTHONPATH=src python tools/docs_smoke.py
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import os
+import pathlib
+import py_compile
+import re
+import shlex
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+README = ROOT / "README.md"
+
+
+def bash_commands(text: str) -> list[str]:
+    cmds = []
+    for fence in re.findall(r"```bash\n(.*?)```", text, re.DOTALL):
+        for line in fence.splitlines():
+            line = line.strip()
+            if line and not line.startswith("#"):
+                cmds.append(line)
+    return cmds
+
+
+def split_env(tokens: list[str]) -> tuple[dict[str, str], list[str]]:
+    env = {}
+    rest = list(tokens)
+    while rest and re.fullmatch(r"[A-Za-z_][A-Za-z0-9_]*=.*", rest[0]):
+        key, val = rest.pop(0).split("=", 1)
+        env[key] = val
+    return env, rest
+
+
+def module_exists(name: str) -> bool:
+    try:
+        return importlib.util.find_spec(name) is not None
+    except (ImportError, ValueError):
+        return False
+
+
+def check(cmd: str) -> str | None:
+    """Return an error string, or None if the command parses."""
+    try:
+        tokens = shlex.split(cmd)
+    except ValueError as e:
+        return f"unparseable shell line: {e}"
+    env_over, rest = split_env(tokens)
+    if not rest:
+        return "environment assignments with no command"
+    prog = rest[0]
+
+    if prog == "pip":
+        for i, tok in enumerate(rest):
+            if tok == "-r":
+                if i + 1 >= len(rest):
+                    return "pip install -r with no requirements file"
+                if not (ROOT / rest[i + 1]).exists():
+                    return f"missing requirements file {rest[i + 1]}"
+        return None
+
+    if prog == "pytest":
+        return None if module_exists("pytest") else "pytest not importable"
+
+    if prog != "python":
+        return f"unknown command {prog!r} (docs_smoke only knows python/pip/pytest)"
+
+    if len(rest) < 2:
+        return "bare `python` with no script or module"
+
+    env = dict(os.environ)
+    for k, v in env_over.items():
+        if k == "PYTHONPATH":
+            v = os.pathsep.join(
+                str(ROOT / p) for p in v.split(os.pathsep) if p
+            ) + os.pathsep + env.get("PYTHONPATH", "")
+        env[k] = v
+    env.setdefault("JAX_PLATFORMS", "cpu")
+
+    if rest[1] == "-m":
+        if len(rest) < 3:
+            return "`python -m` with no module"
+        module = rest[2]
+        if module == "pytest":
+            return None if module_exists("pytest") else "pytest not importable"
+        sys.path.insert(0, str(ROOT / "src"))
+        sys.path.insert(0, str(ROOT))
+        try:
+            if not module_exists(module):
+                return f"module {module} does not resolve"
+        finally:
+            sys.path.pop(0)
+            sys.path.pop(0)
+        if module.startswith("repro.launch."):
+            # argparse CLI: --help must exit 0 without doing any work
+            proc = subprocess.run(
+                [sys.executable, "-m", module, "--help"],
+                env=env,
+                cwd=ROOT,
+                capture_output=True,
+                text=True,
+                timeout=120,
+            )
+            if proc.returncode != 0:
+                return f"`python -m {module} --help` failed:\n{proc.stderr}"
+        return None
+
+    if rest[1] == "-c":
+        if len(rest) < 3:
+            return "`python -c` with no code"
+        try:
+            compile(rest[2], "<readme -c>", "exec")
+        except SyntaxError as e:
+            return f"inline -c code does not compile: {e}"
+        return None
+
+    script = ROOT / rest[1]
+    if not script.exists():
+        return f"script {rest[1]} does not exist"
+    try:
+        py_compile.compile(str(script), doraise=True)
+    except py_compile.PyCompileError as e:
+        return f"script {rest[1]} does not compile: {e}"
+    return None
+
+
+def main() -> int:
+    cmds = bash_commands(README.read_text())
+    if not cmds:
+        print("FAIL: no ```bash``` commands found in README.md")
+        return 1
+    failures = []
+    for cmd in cmds:
+        err = check(cmd)
+        status = "ok " if err is None else "FAIL"
+        print(f"[{status}] {cmd}")
+        if err:
+            failures.append((cmd, err))
+    if failures:
+        print(f"\n{len(failures)} README command(s) failed:")
+        for cmd, err in failures:
+            print(f"  $ {cmd}\n    {err}")
+        return 1
+    print(f"\nall {len(cmds)} README commands parse")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
