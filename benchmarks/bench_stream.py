@@ -1,0 +1,108 @@
+"""Streaming subsequence search: samples/sec and cascade prune rates.
+
+The naive streaming matcher runs one banded DP per (template, window)
+lane — O(Q * n * w) work per arriving hop.  The windowed cascade
+(DESIGN.md §3.5) kills most lanes with the S0 stream-envelope bound and
+the batched LB passes before any DP runs, so sustained throughput
+tracks the LB sweep instead of the DP.
+
+Rows (FAST sizes default; REPRO_BENCH_FAST=0 for paper-scale):
+
+* ``stream/naive``      — every window lane through the DP (method
+  "full"), the per-window baseline of the related motion-segmentation
+  repo;
+* ``stream/cascade/*``  — the full matcher in the retrieval regime
+  (p = inf templates planted in noise), reporting samples/sec, the
+  before-DTW prune rate (must exceed 50% — the acceptance bar), and
+  the per-stage split;
+* ``stream/znorm``      — same with per-window z-normalization (adds
+  the rolling-stats transform to every materialized block);
+* ``stream/speedup``    — cascade vs naive throughput.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.data.synthetic import planted_stream, template_bank
+from repro.stream import StreamMatcher
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
+
+
+def _run_matcher(stream, templates, w, thr, chunk, **kw):
+    m = StreamMatcher(templates, w, thr, **kw)
+    m.push(stream[:chunk])  # warm the jit cache for this specialisation
+    t0 = time.perf_counter()
+    for lo in range(chunk, stream.size, chunk):
+        m.push(stream[lo : lo + chunk])
+        m.poll()
+    m.flush()
+    m.poll()
+    dt = time.perf_counter() - t0
+    return (stream.size - chunk) / dt, m
+
+
+def run(report):
+    rng = np.random.default_rng(11)
+    samples = 16384 if FAST else 131072
+    n = 128 if FAST else 256
+    hop = 4
+    block = 64
+    chunk = 2048
+    w = n // 10
+    templates = template_bank(n, kinds=("sine", "gaussian"))
+    stream, plants = planted_stream(
+        rng, samples, templates, max(samples // 4096, 1), noise_level=0.05
+    )
+    # retrieval regime: threshold well under the noise-window distance
+    # (matches exist only at plants), p = inf
+    p = np.inf
+    thr = 0.6
+
+    sps_naive, m_naive = _run_matcher(
+        stream, templates, w, thr, chunk,
+        p=p, hop=hop, block=block, method="full", prefilter=False,
+    )
+    report(
+        "stream/naive",
+        1e6 / sps_naive,
+        f"samples_per_sec={sps_naive:,.0f} "
+        f"dtw_lanes={int(m_naive.stats.full_dtw.sum())}",
+    )
+
+    sps, m = _run_matcher(
+        stream, templates, w, thr, chunk,
+        p=p, hop=hop, block=block, method="lb_improved",
+    )
+    s = m.stats
+    total = int(s.n_windows.sum())
+    prune = s.pruned_before_dtw
+    report(
+        "stream/cascade/retrieval",
+        1e6 / sps,
+        f"samples_per_sec={sps:,.0f} pruned_before_dtw={100*prune:.1f}% "
+        f"env={int(s.env_pruned.sum())} lb1={int(s.lb1_pruned.sum())} "
+        f"lb2={int(s.lb2_pruned.sum())} dtw={int(s.full_dtw.sum())} "
+        f"of {total} lanes, matches={len(m.matches())}",
+    )
+    assert prune >= 0.5, (
+        f"cascade pruned only {100*prune:.1f}% of window lanes before DTW "
+        "in the retrieval regime (acceptance bar: >= 50%)"
+    )
+
+    sps_z, m_z = _run_matcher(
+        stream, templates, w, 1.2, chunk,
+        p=2, hop=hop, block=block, method="lb_improved", znorm=True,
+    )
+    report(
+        "stream/znorm",
+        1e6 / sps_z,
+        f"samples_per_sec={sps_z:,.0f} "
+        f"pruned_before_dtw={100*m_z.stats.pruned_before_dtw:.1f}%",
+    )
+
+    report("stream/speedup", 0.0, f"{sps / sps_naive:.2f}x vs naive DP")

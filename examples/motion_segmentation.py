@@ -1,0 +1,72 @@
+"""Repeat-motion segmentation on a live stream (DESIGN.md §3.5).
+
+The workload of the repeat-motion-segmentation literature: a noisy
+sensor signal contains repeated occurrences of known motion templates
+(a sine cycle, a gaussian bump); segment the stream by detecting every
+occurrence, online.  A ``StreamMatcher`` watches the signal in 512-sample
+chunks and reports each occurrence (template id, position, DTW distance)
+as soon as its trivial-match-exclusion decision is stable — the printed
+segmentation is provably identical to an offline scan of the whole
+recording.
+
+    PYTHONPATH=src python examples/motion_segmentation.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.data.synthetic import planted_stream, template_bank
+from repro.launch.stream import calibrate_thresholds
+from repro.stream import StreamMatcher, windowed_matches
+
+N = 64  # template length
+W = 6  # warping half-window
+HOP = 2
+CHUNK = 512
+SAMPLES = 6000
+
+rng = np.random.default_rng(42)
+templates = template_bank(N, kinds=("sine", "gaussian"))
+stream, plants = planted_stream(rng, SAMPLES, templates, 5, noise_level=0.05)
+# tight calibration (20% of the median noise-window distance) separates
+# true occurrences (~noise scale) from cross-template look-alikes
+thr = calibrate_thresholds(templates, stream[:2048], W, 2, HOP, False, frac=0.2)
+print(f"templates: sine + gaussian, length {N}; thresholds {np.round(thr, 2)}")
+print(f"planted occurrences: {[(t, p) for t, p, _ in plants]}")
+
+matcher = StreamMatcher(templates, W, thr, p=2, hop=HOP, block=64)
+t0 = time.perf_counter()
+segments = []
+for lo in range(0, SAMPLES, CHUNK):
+    matcher.push(stream[lo : lo + CHUNK])
+    for m in matcher.poll():
+        segments.append(m)
+        print(
+            f"  [{lo + CHUNK:>5d} samples seen] segment: template {m.tid} "
+            f"at {m.start}..{m.start + N} (dist {m.dist:.3f})"
+        )
+matcher.flush()
+for m in matcher.poll():
+    segments.append(m)
+    print(f"  [flush] segment: template {m.tid} at {m.start}..{m.start + N} "
+          f"(dist {m.dist:.3f})")
+dt = time.perf_counter() - t0
+
+# every planted occurrence recovered, with the right template, and
+# nothing else detected
+assert len(segments) == len(plants), (segments, plants)
+for (tid, pos, _), m in zip(plants, sorted(segments, key=lambda m: m.start)):
+    assert m.tid == tid and abs(m.start - pos) <= HOP, (m, (tid, pos))
+
+# the streamed segmentation equals the offline windowed scan exactly
+offline, stats = windowed_matches(stream, templates, W, thr, p=2, hop=HOP)
+assert sorted(segments, key=lambda m: (m.start, m.tid)) == offline
+
+s = matcher.stats
+print(
+    f"segmented {SAMPLES} samples in {dt*1e3:.1f} ms "
+    f"({SAMPLES/dt:,.0f} samples/sec), {len(segments)}/{len(plants)} "
+    f"occurrences, {100*s.pruned_before_dtw:.1f}% of window lanes pruned "
+    f"before DTW; matches offline scan."
+)

@@ -141,6 +141,74 @@ def _pad_db(db: jax.Array, block: int) -> tuple[jax.Array, int]:
     return db, n_pad
 
 
+def block_stage_distances(
+    qs: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    w: int,
+    p: PNorm,
+    method: Method,
+    blk: jax.Array,
+    bound: jax.Array,
+    mask0: jax.Array,
+):
+    """The cascade's staging over one candidate block, query-major.
+
+    Shared by the top-k search drivers (``make_block_step`` merges the
+    result into per-query top-k carries) and the streaming subsequence
+    matcher (``repro.stream.subsequence`` compares against a fixed
+    per-template threshold — DESIGN.md §3.5).
+
+    ``blk`` is a ``(block, n)`` candidate tile, ``bound`` a ``(Q,)``
+    powered pruning bound, ``mask0`` a ``(Q, block)`` bool of lanes
+    alive on entry.  LB_Keogh runs unconditionally on the block;
+    LB_Improved's pass 2 and the banded DP execute under ``lax.cond``
+    only when some (query, candidate) lane survived.  Returns
+    ``(d, alive1, alive2, need_dtw)``: powered distances (BIG on lanes
+    that never reached the DP), the post-LB_Keogh and post-LB_Improved
+    alive masks, and whether the DP actually executed.
+    """
+    nq = qs.shape[0]
+    block = blk.shape[0]
+
+    if method == "full":
+        alive1 = mask0
+        alive2 = alive1
+        lb1 = jnp.zeros((nq, block))
+    else:
+        lb1 = lb_mod.lb_keogh_powered_qbatch(blk, upper, lower, p)
+        alive1 = mask0 & (lb1 < bound[:, None])
+
+    if method == "full":
+        pass
+    elif method == "lb_keogh":
+        alive2 = alive1
+    else:  # lb_improved: pass 2 only if some lane of some query survived
+
+        def pass2(_):
+            return lb_mod.lb_improved_powered_qbatch(
+                blk, qs, upper, lower, w, p
+            )
+
+        lb = jax.lax.cond(
+            jnp.any(alive1), pass2, lambda _: lb1, operand=None
+        )
+        alive2 = alive1 & (lb < bound[:, None])
+
+    def run_dtw(_):
+        return dtw_qbatch(qs, blk, w, p, powered=True)
+
+    need_dtw = jnp.any(alive2)
+    d = jax.lax.cond(
+        need_dtw,
+        run_dtw,
+        lambda _: jnp.full((nq, block), BIG),
+        operand=None,
+    )
+    d = jnp.where(alive2, d, BIG)
+    return d, alive1, alive2, need_dtw
+
+
 def make_block_step(
     qs: jax.Array,
     upper: jax.Array,
@@ -193,42 +261,9 @@ def make_block_step(
                 )
         bound = jnp.minimum(top_v[:, -1], gbound)  # per-query k-th best
 
-        if method == "full":
-            alive1 = mask0
-            alive2 = alive1
-            lb1 = jnp.zeros((nq, block))
-        else:
-            lb1 = lb_mod.lb_keogh_powered_qbatch(blk, upper, lower, p)
-            alive1 = mask0 & (lb1 < bound[:, None])
-
-        if method == "full":
-            pass
-        elif method == "lb_keogh":
-            alive2 = alive1
-            lb = lb1
-        else:  # lb_improved: pass 2 only if some lane of some query survived
-
-            def pass2(_):
-                return lb_mod.lb_improved_powered_qbatch(
-                    blk, qs, upper, lower, w, p
-                )
-
-            lb = jax.lax.cond(
-                jnp.any(alive1), pass2, lambda _: lb1, operand=None
-            )
-            alive2 = alive1 & (lb < bound[:, None])
-
-        def run_dtw(_):
-            return dtw_qbatch(qs, blk, w, p, powered=True)
-
-        need_dtw = jnp.any(alive2)
-        d = jax.lax.cond(
-            need_dtw,
-            run_dtw,
-            lambda _: jnp.full((nq, block), BIG),
-            operand=None,
+        d, alive1, alive2, need_dtw = block_stage_distances(
+            qs, upper, lower, w, p, method, blk, bound, mask0
         )
-        d = jnp.where(alive2, d, BIG)
 
         # merge block results into each query's running top-k
         all_v = jnp.concatenate([top_v, d], axis=1)

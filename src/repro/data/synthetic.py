@@ -145,6 +145,60 @@ def shape_dataset(
     return prof.astype(np.float32)
 
 
+def template_bank(length: int, kinds=("sine", "gaussian")) -> np.ndarray:
+    """Deterministic (Q, length) motion templates — the shapes of the
+    repeat-motion-segmentation workload (sine cycle, gaussian bump, and
+    their variants)."""
+    t = np.arange(length, dtype=np.float64)
+    mu = (length - 1) / 2.0
+    sig = (length - mu) / 2.5
+    shapes = {
+        "sine": np.sin(2 * np.pi * t / length),
+        "cosine": np.cos(2 * np.pi * t / length),
+        "gaussian": np.exp(-0.5 * ((t - mu) / sig) ** 2),
+        "gaussian_inverted": 1.0 - np.exp(-0.5 * ((t - mu) / sig) ** 2),
+    }
+    unknown = set(kinds) - set(shapes)
+    if unknown:
+        raise ValueError(f"unknown template kinds {sorted(unknown)}")
+    return np.stack([shapes[k] for k in kinds]).astype(np.float32)
+
+
+def planted_stream(
+    rng: np.random.Generator,
+    length: int,
+    templates: np.ndarray,
+    n_plants: int,
+    noise_level: float = 0.05,
+    amp_range: tuple[float, float] = (0.8, 1.2),
+):
+    """Noise stream with non-overlapping template occurrences planted in.
+
+    Returns ``(stream (length,), plants)`` where ``plants`` is a list of
+    ``(template_id, position, amplitude)``; occurrences are separated by
+    at least one template length so each is its own ground-truth event.
+    """
+    templates = np.atleast_2d(np.asarray(templates, np.float32))
+    nq, n = templates.shape
+    stream = (noise_level * rng.standard_normal(length)).astype(np.float32)
+    slots = length // (2 * n) if length >= 2 * n else 0
+    if n_plants > slots:
+        raise ValueError(
+            f"{n_plants} plants of length {n} do not fit in {length} "
+            f"samples with non-overlap spacing ({slots} slots)"
+        )
+    chosen = rng.choice(slots, size=n_plants, replace=False)
+    plants = []
+    for slot in sorted(chosen):
+        jitter = int(rng.integers(0, n // 2 + 1))
+        pos = slot * 2 * n + jitter
+        tid = int(rng.integers(0, nq))
+        amp = float(rng.uniform(*amp_range))
+        stream[pos : pos + n] += amp * templates[tid]
+        plants.append((tid, pos, amp))
+    return stream, plants
+
+
 DATASETS = {
     "cylinder_bell_funnel": (cylinder_bell_funnel, 3),
     "control_charts": (control_charts, 6),

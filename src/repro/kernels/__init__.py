@@ -18,7 +18,11 @@ TPU kernel here, with the layout rethought for VMEM/VPU execution
 The LB kernels also come in query-major ``*_qbatch_op`` variants
 (DESIGN.md §3.4): the query batch is a second grid dimension, so one
 launch computes bounds for every (query, candidate) pair of a block —
-the kernel-level mirror of the batched cascade.
+the kernel-level mirror of the batched cascade.  The stream-packed
+``*_stream_qbatch_op`` variants (DESIGN.md §3.5) take a flat stream
+segment instead of a candidate matrix and slice hop-strided window
+lanes out of it in VMEM, so the overlapping windows of a subsequence
+sweep are never materialized in HBM.
 
 Kernels are validated in interpret mode against the pure-jnp oracles in
 each ``ref.py`` (which are in turn validated against numpy DPs).
@@ -33,12 +37,17 @@ from repro.kernels.lb_improved import (
     lb_improved_qbatch_op,
     lb_improved_qbatch_ref,
     lb_improved_ref,
+    lb_improved_stream_qbatch_op,
+    lb_improved_stream_qbatch_ref,
 )
 from repro.kernels.lb_keogh import (
     lb_keogh_op,
     lb_keogh_qbatch_op,
     lb_keogh_qbatch_ref,
     lb_keogh_ref,
+    lb_keogh_stream_qbatch_op,
+    lb_keogh_stream_qbatch_ref,
+    materialize_windows,
 )
 
 __all__ = [
@@ -52,8 +61,13 @@ __all__ = [
     "lb_improved_qbatch_op",
     "lb_improved_ref",
     "lb_improved_qbatch_ref",
+    "lb_improved_stream_qbatch_op",
+    "lb_improved_stream_qbatch_ref",
     "lb_keogh_op",
     "lb_keogh_qbatch_op",
     "lb_keogh_ref",
     "lb_keogh_qbatch_ref",
+    "lb_keogh_stream_qbatch_op",
+    "lb_keogh_stream_qbatch_ref",
+    "materialize_windows",
 ]

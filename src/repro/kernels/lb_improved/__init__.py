@@ -3,14 +3,21 @@ from repro.kernels.lb_improved.ops import (
     lb_improved_pass2_op,
     lb_improved_pass2_qbatch_op,
     lb_improved_qbatch_op,
+    lb_improved_stream_qbatch_op,
 )
-from repro.kernels.lb_improved.ref import lb_improved_qbatch_ref, lb_improved_ref
+from repro.kernels.lb_improved.ref import (
+    lb_improved_qbatch_ref,
+    lb_improved_ref,
+    lb_improved_stream_qbatch_ref,
+)
 
 __all__ = [
     "lb_improved_op",
     "lb_improved_pass2_op",
     "lb_improved_pass2_qbatch_op",
     "lb_improved_qbatch_op",
+    "lb_improved_stream_qbatch_op",
     "lb_improved_ref",
     "lb_improved_qbatch_ref",
+    "lb_improved_stream_qbatch_ref",
 ]

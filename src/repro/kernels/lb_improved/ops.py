@@ -10,7 +10,11 @@ from repro.kernels.lb_improved.kernel import (
     lb_improved_pass2_pallas,
     lb_improved_pass2_qbatch_pallas,
 )
-from repro.kernels.lb_keogh.ops import lb_keogh_op, lb_keogh_qbatch_op
+from repro.kernels.lb_keogh.ops import (
+    lb_keogh_op,
+    lb_keogh_qbatch_op,
+    lb_keogh_stream_qbatch_op,
+)
 
 
 def lb_improved_pass2_op(
@@ -110,5 +114,29 @@ def lb_improved_qbatch_op(
     emits a (Q, B, n) projection stack that feeds straight into the
     query-major pass 2 — one launch per pass for the whole batch."""
     lb1, h = lb_keogh_qbatch_op(cands, upper, lower, p, interpret=interpret)
+    lb2 = lb_improved_pass2_qbatch_op(h, qs, w, p, interpret=interpret)
+    return lb1 + lb2
+
+
+def lb_improved_stream_qbatch_op(
+    segment: jax.Array,
+    qs: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    n: int,
+    w: int,
+    hop: int = 1,
+    p=1,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Full powered LB_Improved for the hop-strided windows of a flat
+    stream segment (L,) against a template batch (Q, n) -> (Q, B)
+    (DESIGN.md §3.5).  Pass 1 is the stream-packed kernel — window
+    lanes sliced out of the segment in VMEM — and its per-(template,
+    window) projection stack feeds the existing query-major pass 2
+    unchanged, so the streaming case adds no third kernel."""
+    lb1, h = lb_keogh_stream_qbatch_op(
+        segment, upper, lower, n, hop, p, interpret=interpret
+    )
     lb2 = lb_improved_pass2_qbatch_op(h, qs, w, p, interpret=interpret)
     return lb1 + lb2

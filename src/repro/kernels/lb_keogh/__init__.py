@@ -1,9 +1,21 @@
-from repro.kernels.lb_keogh.ops import lb_keogh_op, lb_keogh_qbatch_op
-from repro.kernels.lb_keogh.ref import lb_keogh_qbatch_ref, lb_keogh_ref
+from repro.kernels.lb_keogh.ops import (
+    lb_keogh_op,
+    lb_keogh_qbatch_op,
+    lb_keogh_stream_qbatch_op,
+)
+from repro.kernels.lb_keogh.ref import (
+    lb_keogh_qbatch_ref,
+    lb_keogh_ref,
+    lb_keogh_stream_qbatch_ref,
+    materialize_windows,
+)
 
 __all__ = [
     "lb_keogh_op",
     "lb_keogh_qbatch_op",
+    "lb_keogh_stream_qbatch_op",
     "lb_keogh_ref",
     "lb_keogh_qbatch_ref",
+    "lb_keogh_stream_qbatch_ref",
+    "materialize_windows",
 ]

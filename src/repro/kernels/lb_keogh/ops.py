@@ -5,8 +5,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import interpret_default, round_up
-from repro.kernels.lb_keogh.kernel import lb_keogh_pallas, lb_keogh_qbatch_pallas
+from repro.kernels.common import PAD_VALUE, interpret_default, round_up
+from repro.kernels.lb_keogh.kernel import (
+    lb_keogh_pallas,
+    lb_keogh_qbatch_pallas,
+    lb_keogh_stream_qbatch_pallas,
+)
 
 
 def lb_keogh_op(
@@ -49,4 +53,39 @@ def lb_keogh_qbatch_op(
     if bp != b:
         cands = jnp.pad(cands, ((0, bp - b), (0, 0)))
     lb, h = lb_keogh_qbatch_pallas(cands, upper, lower, p, tile_b, interpret)
+    return lb[:, :b], h[:, :b]
+
+
+def lb_keogh_stream_qbatch_op(
+    segment: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    n: int,
+    hop: int = 1,
+    p=1,
+    tile_b: int = 8,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Stream-packed LB_Keogh (DESIGN.md §3.5): a flat stream segment
+    (L,) holding ``B = (L - n)//hop + 1`` hop-strided windows vs
+    envelopes (Q, n) -> (lb (Q, B), H (Q, B, n)) in one launch, window
+    lanes sliced out of the segment in VMEM instead of materialized."""
+    if interpret is None:
+        interpret = interpret_default()
+    segment = jnp.asarray(segment).reshape(1, -1)
+    length = segment.shape[1]
+    if length < n:
+        raise ValueError(f"segment of {length} samples holds no {n}-window")
+    b = (length - n) // hop + 1
+    bp = round_up(b, tile_b)
+    lp = (bp - 1) * hop + n
+    if lp > length:
+        # pad rows never win: |PAD - envelope| is huge
+        filler = jnp.full((1, lp - length), PAD_VALUE, segment.dtype)
+        segment = jnp.concatenate([segment, filler], axis=1)
+    else:
+        segment = segment[:, :lp]
+    lb, h = lb_keogh_stream_qbatch_pallas(
+        segment, upper, lower, n, hop, p, tile_b, interpret
+    )
     return lb[:, :b], h[:, :b]

@@ -1,10 +1,21 @@
 """Pure-jnp oracle for the fused LB_Keogh kernel."""
 
+import jax.numpy as jnp
+
 from repro.core.lb import (
     lb_keogh_powered_batch,
     lb_keogh_powered_qbatch,
     project,
 )
+
+
+def materialize_windows(segment, n: int, hop: int = 1):
+    """(L,) flat segment -> (B, n) hop-strided window rows (the
+    materialization the stream kernel avoids)."""
+    segment = jnp.asarray(segment).reshape(-1)
+    b = (segment.shape[0] - n) // hop + 1
+    idx = jnp.arange(b)[:, None] * hop + jnp.arange(n)[None, :]
+    return segment[idx]
 
 
 def lb_keogh_ref(cands, upper, lower, p=1):
@@ -18,3 +29,11 @@ def lb_keogh_qbatch_ref(cands, upper, lower, p=1):
     lb = lb_keogh_powered_qbatch(cands, upper, lower, p)
     h = project(cands[None, :, :], upper[:, None, :], lower[:, None, :])
     return lb, h
+
+
+def lb_keogh_stream_qbatch_ref(segment, upper, lower, n, hop=1, p=1):
+    """Flat segment (L,) vs (Q, n) envelopes: materialize the window
+    rows, then run the query-major oracle."""
+    return lb_keogh_qbatch_ref(
+        materialize_windows(segment, n, hop), upper, lower, p
+    )

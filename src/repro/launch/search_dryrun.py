@@ -18,17 +18,16 @@ compute term is derived analytically (see benchmarks/roofline notes).
 """
 
 import argparse  # noqa: E402
-import dataclasses  # noqa: E402
 import json  # noqa: E402
 import time  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.core.distributed import _sharded_search_fn  # noqa: E402
 from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
-from repro.launch.mesh import make_production_mesh, mesh_axis_sizes  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "../../../benchmarks/artifacts")
 

@@ -21,8 +21,6 @@ All softmax statistics are fp32 regardless of compute dtype.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

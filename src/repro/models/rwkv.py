@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import constrain
-from repro.models.common import PSpec, act_fn, rms_norm
+from repro.models.common import PSpec, rms_norm
 
 LOG_DECAY_MIN = -0.24  # per-step clamp: e^(-0.24*128) ~ 4.3e-14 within a chunk
 LOG_DECAY_MAX = -1e-4

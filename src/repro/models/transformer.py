@@ -21,7 +21,6 @@ Structure:
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Any, Callable
 

@@ -11,7 +11,6 @@ here, batch-major with position counters, is already slot-addressable.)
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

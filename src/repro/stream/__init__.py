@@ -1,0 +1,49 @@
+"""Streaming subsequence search (DESIGN.md §3.5).
+
+Watches an unbounded signal and reports every subsequence matching a
+template bank, through the same LB_Keogh -> LB_Improved -> DTW cascade
+the database search uses — windows as candidate lanes, templates as the
+query batch, one batched sweep per window block.
+
+* ``StreamState`` — ring buffer + Lemire monotonic-deque online
+  envelope (O(1)/sample) + rolling window mean/variance.
+* ``SubsequenceScanner`` / ``windowed_matches`` — hop-strided window
+  blocks through the shared cascade with an S0 stream-envelope
+  prefilter and per-stage prune stats.
+* ``StreamMatcher`` — push-samples / poll-matches service with
+  streaming trivial-match exclusion (emits exactly the offline scan's
+  match set, incrementally).
+"""
+
+from repro.stream.matcher import StreamMatcher, windowed_matches
+from repro.stream.state import (
+    StreamState,
+    prefix_sums,
+    window_mean_std_from_prefix,
+)
+from repro.stream.subsequence import (
+    Match,
+    StreamStats,
+    SubsequenceScanner,
+    greedy_suppress,
+    num_windows,
+    suppress_stream,
+    znorm_series,
+    znorm_windows,
+)
+
+__all__ = [
+    "Match",
+    "StreamMatcher",
+    "StreamState",
+    "StreamStats",
+    "SubsequenceScanner",
+    "greedy_suppress",
+    "num_windows",
+    "prefix_sums",
+    "suppress_stream",
+    "window_mean_std_from_prefix",
+    "windowed_matches",
+    "znorm_series",
+    "znorm_windows",
+]

@@ -25,7 +25,6 @@ import os
 import time
 from typing import Any, Callable
 
-import jax
 import numpy as np
 
 from repro.checkpoint import Checkpointer

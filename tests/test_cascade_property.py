@@ -1,6 +1,5 @@
 """Property test: the cascade is EXACT for arbitrary databases (hypothesis)."""
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,8 +1,6 @@
 """Early-abandoning DTW (paper §3 optimisation): exactness below the
 bound, validity of abandonment, end-to-end search equivalence + speed."""
 
-import time
-
 import jax.numpy as jnp
 import numpy as np
 

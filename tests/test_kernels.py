@@ -15,10 +15,15 @@ from repro.kernels import (
     lb_improved_qbatch_op,
     lb_improved_qbatch_ref,
     lb_improved_ref,
+    lb_improved_stream_qbatch_op,
+    lb_improved_stream_qbatch_ref,
     lb_keogh_op,
     lb_keogh_qbatch_op,
     lb_keogh_qbatch_ref,
     lb_keogh_ref,
+    lb_keogh_stream_qbatch_op,
+    lb_keogh_stream_qbatch_ref,
+    materialize_windows,
 )
 
 RNG = np.random.default_rng(5)
@@ -109,6 +114,57 @@ def test_qbatch_kernel_rows_match_single_query_kernel():
         np.testing.assert_allclose(np.asarray(h_b[i]), np.asarray(h_s), rtol=1e-6)
         imp_s = lb_improved_op(xs, qs[i], u[i], l[i], w, p, interpret=True)
         np.testing.assert_allclose(np.asarray(imp_b[i]), np.asarray(imp_s), rtol=1e-5)
+
+
+STREAM_SHAPES = [  # (nq, n, w, hop, L)
+    (3, 32, 4, 1, 95),
+    (2, 40, 8, 3, 160),
+    (4, 24, 23, 5, 130),
+    (2, 16, 2, 16, 97),  # hop == n: non-overlapping windows
+]
+
+
+@pytest.mark.parametrize("nq,n,w,hop,L", STREAM_SHAPES)
+@pytest.mark.parametrize("p", [1, 2])
+def test_lb_keogh_stream_kernel(nq, n, w, hop, L, p):
+    """Stream-packed kernel (window lanes sliced from a flat segment in
+    VMEM, DESIGN.md §3.5) vs the materialized-window oracle."""
+    seg = jnp.asarray(RNG.normal(size=L).astype(np.float32).cumsum())
+    qs = jnp.asarray(RNG.normal(size=(nq, n)).astype(np.float32).cumsum(axis=1))
+    u, l = envelope_batch(qs, w)
+    lb, h = lb_keogh_stream_qbatch_op(seg, u, l, n, hop, p, interpret=True)
+    lbr, hr = lb_keogh_stream_qbatch_ref(seg, u, l, n, hop, p)
+    b = (L - n) // hop + 1
+    assert lb.shape == (nq, b) and h.shape == (nq, b, n)
+    np.testing.assert_allclose(np.asarray(lb), np.asarray(lbr), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("nq,n,w,hop,L", STREAM_SHAPES)
+@pytest.mark.parametrize("p", [1, 2])
+def test_lb_improved_stream_kernel(nq, n, w, hop, L, p):
+    """Stream pass 1 feeding the existing query-major pass 2 equals the
+    materialized two-pass oracle."""
+    seg = jnp.asarray(RNG.normal(size=L).astype(np.float32).cumsum())
+    qs = jnp.asarray(RNG.normal(size=(nq, n)).astype(np.float32).cumsum(axis=1))
+    u, l = envelope_batch(qs, w)
+    got = lb_improved_stream_qbatch_op(seg, qs, u, l, n, w, hop, p, interpret=True)
+    want = lb_improved_stream_qbatch_ref(seg, qs, u, l, n, w, hop, p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4)
+
+
+def test_stream_kernel_equals_materialized_qbatch_kernel():
+    """The segment-sliced lanes are exactly the rows the materialized
+    qbatch kernel would see."""
+    nq, n, w, hop, L, p = 3, 30, 5, 2, 120, 2
+    seg = jnp.asarray(RNG.normal(size=L).astype(np.float32).cumsum())
+    qs = jnp.asarray(RNG.normal(size=(nq, n)).astype(np.float32).cumsum(axis=1))
+    u, l = envelope_batch(qs, w)
+    wins = materialize_windows(seg, n, hop)
+    lb_s, h_s = lb_keogh_stream_qbatch_op(seg, u, l, n, hop, p, interpret=True)
+    lb_m, h_m = lb_keogh_qbatch_op(wins, u, l, p, interpret=True)
+    np.testing.assert_array_equal(np.asarray(lb_s), np.asarray(lb_m))
+    np.testing.assert_array_equal(np.asarray(h_s), np.asarray(h_m))
 
 
 @pytest.mark.parametrize("b,n,w", SHAPES)

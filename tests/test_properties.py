@@ -14,8 +14,8 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.dtw import dtw_banded, dtw_banded_diag, dtw_reference
-from repro.core.metrics import theorem1_bound, triangle_ratio, violation_fraction
+from repro.core.dtw import dtw_banded, dtw_reference
+from repro.core.metrics import theorem1_bound, violation_fraction
 
 floats = st.floats(-20, 20, allow_nan=False, width=32)
 

@@ -1,0 +1,88 @@
+"""Property tests: the online deque envelope is the batch envelope
+(hypothesis; skips cleanly when hypothesis is absent)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.envelope import envelope, envelope_naive
+from repro.stream.state import (
+    StreamState,
+    prefix_sums,
+    window_mean_std_from_prefix,
+)
+
+series = st.lists(
+    st.floats(-100, 100, allow_nan=False, width=32), min_size=2, max_size=80
+)
+
+
+@st.composite
+def stream_cases(draw):
+    xs = np.asarray(draw(series), np.float32)
+    w = draw(st.integers(0, 20))
+    chunk = draw(st.integers(1, len(xs)))
+    return xs, min(w, len(xs) - 1), chunk
+
+
+@settings(max_examples=60, deadline=None)
+@given(stream_cases())
+def test_online_envelope_bitmatches_batch(case):
+    """After N pushes (in arbitrary chunkings) the deque envelope equals
+    ``envelope()`` and ``envelope_naive()`` on the same suffix, bit for
+    bit — max/min are exact in float32, so no tolerance."""
+    xs, w, chunk = case
+    state = StreamState(capacity=len(xs) + 2 * w + 2, w=w)
+    for lo in range(0, len(xs), chunk):
+        state.push(xs[lo : lo + chunk])
+    u, l = state.envelope_view(0, len(xs))
+    un, ln = envelope_naive(xs, w)
+    np.testing.assert_array_equal(u, un)
+    np.testing.assert_array_equal(l, ln)
+    ub, lb = envelope(jnp.asarray(xs), w)
+    np.testing.assert_array_equal(u, np.asarray(ub))
+    np.testing.assert_array_equal(l, np.asarray(lb))
+
+
+@settings(max_examples=40, deadline=None)
+@given(stream_cases())
+def test_online_envelope_incremental_prefix(case):
+    """Positions at least w behind the frontier are final mid-stream:
+    the envelope of a prefix push equals the full-stream envelope on
+    the settled range."""
+    xs, w, chunk = case
+    state = StreamState(capacity=len(xs) + 2 * w + 2, w=w)
+    state.push(xs[:chunk])
+    settled = max(chunk - w, 0)
+    if settled:
+        u, l = state.envelope_view(0, settled)
+        un, ln = envelope_naive(xs, w)
+        np.testing.assert_array_equal(u, un[:settled])
+        np.testing.assert_array_equal(l, ln[:settled])
+
+
+@settings(max_examples=40, deadline=None)
+@given(stream_cases())
+def test_rolling_stats_match_offline_prefix_sums(case):
+    """Ring-based rolling window mean/std == the offline prefix-sum
+    twin (bit-identical float64 accumulation) and ~= direct numpy."""
+    xs, w, chunk = case
+    n = min(len(xs), max(2, w + 1))
+    state = StreamState(capacity=len(xs) + 2 * w + 2, w=w)
+    for lo in range(0, len(xs), chunk):
+        state.push(xs[lo : lo + chunk])
+    starts = np.arange(0, len(xs) - n + 1, dtype=np.int64)
+    if starts.size == 0:
+        return
+    m_on, s_on = state.window_mean_std(starts, n)
+    c1, c2 = prefix_sums(xs)
+    m_off, s_off = window_mean_std_from_prefix(c1, c2, starts, n)
+    np.testing.assert_array_equal(m_on, m_off)
+    np.testing.assert_array_equal(s_on, s_off)
+    for idx in range(0, starts.size, max(1, starts.size // 8)):
+        win = xs[starts[idx] : starts[idx] + n].astype(np.float64)
+        assert abs(m_on[idx] - win.mean()) < 1e-8

@@ -1,12 +1,11 @@
 """Training integration: loss decreases, microbatching exact, optimizers."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs.base import ParallelConfig
-from repro.configs.registry import ARCH_IDS, get_config
+from repro.configs.registry import get_config
 from repro.data.pipeline import SyntheticTokenPipeline
 from repro.models.model_zoo import build_model
 from repro.optim import OptimizerConfig, optimizer_init
