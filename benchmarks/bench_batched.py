@@ -81,6 +81,14 @@ def run(report):
             method="lb_improved",
         )
 
+    def dp_lane_note(stats):
+        # wasted-vs-useful DP lanes (DESIGN.md §3.6): the pooled host DP
+        # executed `work` (chunk-padded) lanes for `useful` alive ones
+        return (
+            f"dp_useful/work={stats.dp_lane_useful}/{stats.dp_lane_work} "
+            f"(eff={stats.dp_lane_efficiency:.2f})"
+        )
+
     qps = {}
     for batch in BATCH_SIZES:
         qps[batch], stats = _drain_qps(near, retrieval, batch)
@@ -89,14 +97,15 @@ def run(report):
             f"batched/retrieval/batch{batch}",
             1e6 / qps[batch],
             f"qps={qps[batch]:.1f} speedup_vs_b1={speedup:.2f}x "
-            f"dtw_per_query={stats.full_dtw}",
+            f"dtw_per_query={stats.full_dtw} {dp_lane_note(stats)}",
         )
     for batch in (1, BATCH_SIZES[-1]):
         q, stats = _drain_qps(cold, coldscan, batch)
         report(
             f"batched/coldscan/batch{batch}",
             1e6 / q,
-            f"qps={q:.1f} dtw_per_query={stats.full_dtw}",
+            f"qps={q:.1f} dtw_per_query={stats.full_dtw} "
+            f"{dp_lane_note(stats)}",
         )
 
     # exactness across batch sizes is asserted by the test-suite; here we

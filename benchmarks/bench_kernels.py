@@ -54,3 +54,45 @@ def run(report):
         "kernel/dtw_banded_batch32", t * 1e6,
         f"cells_per_sec={cells/t:.3e}",
     )
+
+    # early-abandoning DP (DESIGN.md §3.6): per-lane bounds from a tight
+    # quantile of the true distances — most lanes stop after a few rows
+    from repro.core.dtw import dtw_banded_early
+
+    d_true = np.asarray(dtw_batch(q, small, w, 1, True))
+    bounds = jnp.asarray(
+        np.full(32, np.quantile(d_true, 0.1), np.float32)
+    )
+    ea = jax.jit(
+        jax.vmap(lambda c, bd: dtw_banded_early(q, c, w, bd, 1))
+    )
+    t_ea = _time(lambda c: ea(c, bounds), small)
+    report(
+        "kernel/dtw_early_abandon_batch32", t_ea * 1e6,
+        # vmapped while_loops run lockstep on CPU (per-row gather
+        # overhead); the cascade-level win is measured in bench_batched /
+        # bench_stream where abandoned lanes skip real dispatches
+        f"vs_full={t/t_ea:.2f}x abandoned="
+        f"{int((np.asarray(ea(small, bounds)) >= np.asarray(bounds)).sum())}/32",
+    )
+
+    # fused LB_Keogh -> LB_Improved stage (one launch, one HBM read;
+    # interpret-mode parity timing — on-TPU numbers use interpret=False)
+    from repro.kernels import lb_fused_qbatch_op
+
+    nq = 4
+    qs = jnp.asarray(
+        rng.normal(size=(nq, n)).astype(np.float32).cumsum(axis=1)
+    )
+    uq, lq = envelope_batch(qs, w)
+    fused_bounds = jnp.full((nq,), float(np.quantile(d_true, 0.5)))
+    t = _time(
+        lambda c: lb_fused_qbatch_op(
+            c, qs, uq, lq, w, fused_bounds, 1, interpret=True
+        ),
+        small,
+    )
+    report(
+        "kernel/lb_fused_qbatch32", t * 1e6,
+        f"lanes_per_sec={nq*32/t:.3e}",
+    )

@@ -81,6 +81,17 @@ def run(report):
     s = m.stats
     total = int(s.n_windows.sum())
     prune = s.pruned_before_dtw
+    # wasted-vs-useful DP lanes (DESIGN.md §3.6): the compacted DP ran
+    # `work` lanes; the old all-or-nothing staging would have run whole
+    # (Q, block) tiles for every block with any survivor
+    baseline = len(templates) * block * s.blocks_dtw
+    wasted_now = (
+        0.0 if s.dp_lane_work == 0
+        else 1.0 - s.dp_lane_useful / s.dp_lane_work
+    )
+    wasted_aon = (
+        0.0 if baseline == 0 else 1.0 - s.dp_lane_useful / baseline
+    )
     report(
         "stream/cascade/retrieval",
         1e6 / sps,
@@ -88,6 +99,14 @@ def run(report):
         f"env={int(s.env_pruned.sum())} lb1={int(s.lb1_pruned.sum())} "
         f"lb2={int(s.lb2_pruned.sum())} dtw={int(s.full_dtw.sum())} "
         f"of {total} lanes, matches={len(m.matches())}",
+    )
+    report(
+        "stream/cascade/dp_lanes",
+        0.0,
+        f"dp_useful/work={s.dp_lane_useful}/{s.dp_lane_work} "
+        f"wasted={100*wasted_now:.1f}% vs "
+        f"allornothing_wasted={100*wasted_aon:.1f}% "
+        f"(baseline {baseline} lanes)",
     )
     assert prune >= 0.5, (
         f"cascade pruned only {100*prune:.1f}% of window lanes before DTW "

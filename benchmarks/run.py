@@ -1,7 +1,11 @@
 """Benchmark runner: one module per paper table/figure + roofline.
 
-Prints ``name,us_per_call,derived`` CSV rows.  REPRO_BENCH_FAST=0 runs
-paper-scale sizes (minutes-hours); the default is container-friendly.
+Prints ``name,us_per_call,derived`` CSV rows and, per module, writes a
+machine-readable ``BENCH_<module>.json`` artifact (module, rows, fast
+flag) into ``REPRO_BENCH_DIR`` (default: current directory) so the perf
+trajectory is recorded run over run — CI archives these.
+REPRO_BENCH_FAST=0 runs paper-scale sizes (minutes-hours); the default
+is container-friendly.
 
 Modules are registered by name in two registries — ``FULL_SUITE`` (the
 paper-scale sweep) and ``FAST_SUITE`` (the container default) — and
@@ -13,6 +17,7 @@ runs; the process exits non-zero at the end if anything failed.
 from __future__ import annotations
 
 import importlib
+import json
 import os
 import sys
 import traceback
@@ -29,21 +34,51 @@ FULL_SUITE = (
     "roofline",
 )
 
-#: container-friendly default (REPRO_BENCH_FAST unset or != 0).  The
-#: registries currently coincide — every module self-shrinks its sizes
-#: off the same env var — so FAST aliases FULL rather than duplicating
-#: it; replace with an explicit tuple to exclude modules from fast runs.
-FAST_SUITE = FULL_SUITE
+#: container-friendly default (REPRO_BENCH_FAST unset or != 0): the
+#: cascade-relevant modules at their self-shrunk sizes.  perf_search and
+#: roofline are paper-scale sweeps whose FAST shrink is still the
+#: slowest part of the suite, so they run only in FULL mode.
+FAST_SUITE = (
+    "bench_kernels",
+    "bench_triangle",
+    "bench_index",
+    "bench_batched",
+    "bench_stream",
+    "bench_lb",
+    "bench_classify",
+)
+
+
+def write_artifact(out_dir: str, name: str, fast: bool, rows: list) -> str:
+    """One BENCH_<module>.json per module: the machine-readable twin of
+    the CSV rows, stable keys for trend tooling."""
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    payload = {
+        "module": name,
+        "fast": fast,
+        "rows": [
+            {"name": r[0], "us_per_call": r[1], "derived": r[2]}
+            for r in rows
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    return path
 
 
 def main() -> None:
     fast = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
     suite = FAST_SUITE if fast else FULL_SUITE
+    out_dir = os.environ.get("REPRO_BENCH_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
 
-    rows: list[tuple[str, float, str]] = []
+    all_rows: list[tuple[str, float, str]] = []
+    mod_rows: list[tuple[str, float, str]] = []
 
     def report(name: str, us_per_call: float, derived: str = ""):
-        rows.append((name, us_per_call, derived))
+        row = (name, us_per_call, derived)
+        all_rows.append(row)
+        mod_rows.append(row)
         print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
     print("name,us_per_call,derived")
@@ -51,6 +86,7 @@ def main() -> None:
     for name in suite:
         # report-and-continue: an import error in one module must not
         # take the rest of the suite down with it
+        mod_rows = []
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
         except Exception as e:
@@ -62,10 +98,13 @@ def main() -> None:
         except Exception as e:
             traceback.print_exc()
             failures.append(f"{mod.__name__}: {e}")
+        # partial rows are still worth archiving when a module died mid-run
+        path = write_artifact(out_dir, name, fast, mod_rows)
+        print(f"# wrote {path}", flush=True)
     if failures:
         print("FAILURES:", failures)
         sys.exit(1)
-    print(f"# {len(rows)} benchmark rows")
+    print(f"# {len(all_rows)} benchmark rows")
 
 
 if __name__ == "__main__":

@@ -28,6 +28,14 @@ from repro.core.cascade import (
     nn_search_indexed,
     nn_search_scan,
 )
+from repro.core.pipeline import (
+    PIPELINES,
+    STAGES,
+    BlockStages,
+    PipeContext,
+    Stage,
+    run_block_stages,
+)
 from repro.core.classify import classification_accuracy, nn_classify
 from repro.core.microbatch import drain_queries, iter_query_batches
 from repro.core.metrics import (
@@ -59,6 +67,12 @@ __all__ = [
     "BatchSearchResult",
     "SearchResult",
     "SearchStats",
+    "BlockStages",
+    "PipeContext",
+    "Stage",
+    "STAGES",
+    "PIPELINES",
+    "run_block_stages",
     "nn_search_scan",
     "nn_search_host",
     "nn_search_indexed",

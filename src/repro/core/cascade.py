@@ -11,13 +11,16 @@ holding one top-k per query lane, so a single sweep over the database
 serves a whole `(Q, n)` query batch while every lane prunes against its
 own tightening bound.
 
-* ``nn_search_scan`` — fully jittable ``lax.scan`` over blocks.  Stage 2
-  and stage 3 of a block execute under ``lax.cond`` only when at least one
-  (query, candidate) lane survived, so a fully-pruned block costs exactly
-  one LB_Keogh pass, like the paper.  The carry threads the per-query
-  top-k so later blocks see the tightened thresholds, preserving the
-  sequential algorithm's pruning behaviour for every query independently.
-  A 1-D query returns a ``SearchResult``; a ``(Q, n)`` batch returns a
+* ``nn_search_scan`` — fully jittable ``lax.scan`` over blocks.  Each
+  block runs through the stage pipeline of ``repro.core.pipeline``
+  (DESIGN.md §3.6): the first LB stage sweeps the whole tile, then every
+  later stage runs survivor-compacted, so a fully-pruned block costs
+  exactly one LB_Keogh pass — like the paper — and a barely-surviving
+  block costs one LB pass plus a few compacted lane chunks instead of a
+  full ``(Q, block)`` tile.  The carry threads the per-query top-k so
+  later blocks see the tightened thresholds, preserving the sequential
+  algorithm's pruning behaviour for every query independently.  A 1-D
+  query returns a ``SearchResult``; a ``(Q, n)`` batch returns a
   ``BatchSearchResult``.
 * ``nn_search_host`` — host-orchestrated variant with true survivor
   compaction: LB survivors are gathered into fixed-size chunks before the
@@ -34,7 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Iterator, Literal
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp
@@ -42,9 +45,18 @@ import numpy as np
 
 from repro.core.dtw import BIG, PNorm, dtw_qbatch, finish_cost
 from repro.core.envelope import envelope_batch
-from repro.core import lb as lb_mod
+from repro.core import pipeline as pipe
+from repro.core.pipeline import Method, run_block_stages
 
-Method = Literal["full", "lb_keogh", "lb_improved"]
+__all__ = [
+    "BatchSearchResult",
+    "Method",
+    "SearchResult",
+    "SearchStats",
+    "nn_search_host",
+    "nn_search_indexed",
+    "nn_search_scan",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +78,14 @@ class SearchStats:
     blocks_total: int = 0
     blocks_lb2: int = 0  # blocks where pass 2 actually executed
     blocks_dtw: int = 0  # blocks where the DP actually executed
+    # DP lane economics (batch-level, like blocks_*): the banded DP runs
+    # on survivor-compacted lane chunks (DESIGN.md §3.6), so `work` is
+    # the lanes actually executed (chunk-padded) and `useful` the alive
+    # lanes among them.  useful/work is the headline wasted-vs-useful
+    # ratio; the all-or-nothing baseline would have spent
+    # Q * block * blocks_dtw lanes instead.
+    dp_lane_work: int = 0
+    dp_lane_useful: int = 0
     # stage-0 triangle-index counters (nn_search_indexed only)
     lb0_pruned: int = 0  # discarded by LB_tri before any envelope work
     ref_dtw: int = 0  # exact DPs spent on references at query time (2R:
@@ -85,6 +105,14 @@ class SearchStats:
         if self.n_candidates == 0:
             return 0.0
         return self.lb0_pruned / self.n_candidates
+
+    @property
+    def dp_lane_efficiency(self) -> float:
+        """useful / work of the DP lanes actually executed (1.0 when the
+        DP never ran): how much of the dispatched DP was not padding."""
+        if self.dp_lane_work == 0:
+            return 1.0
+        return self.dp_lane_useful / self.dp_lane_work
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,74 +169,6 @@ def _pad_db(db: jax.Array, block: int) -> tuple[jax.Array, int]:
     return db, n_pad
 
 
-def block_stage_distances(
-    qs: jax.Array,
-    upper: jax.Array,
-    lower: jax.Array,
-    w: int,
-    p: PNorm,
-    method: Method,
-    blk: jax.Array,
-    bound: jax.Array,
-    mask0: jax.Array,
-):
-    """The cascade's staging over one candidate block, query-major.
-
-    Shared by the top-k search drivers (``make_block_step`` merges the
-    result into per-query top-k carries) and the streaming subsequence
-    matcher (``repro.stream.subsequence`` compares against a fixed
-    per-template threshold — DESIGN.md §3.5).
-
-    ``blk`` is a ``(block, n)`` candidate tile, ``bound`` a ``(Q,)``
-    powered pruning bound, ``mask0`` a ``(Q, block)`` bool of lanes
-    alive on entry.  LB_Keogh runs unconditionally on the block;
-    LB_Improved's pass 2 and the banded DP execute under ``lax.cond``
-    only when some (query, candidate) lane survived.  Returns
-    ``(d, alive1, alive2, need_dtw)``: powered distances (BIG on lanes
-    that never reached the DP), the post-LB_Keogh and post-LB_Improved
-    alive masks, and whether the DP actually executed.
-    """
-    nq = qs.shape[0]
-    block = blk.shape[0]
-
-    if method == "full":
-        alive1 = mask0
-        alive2 = alive1
-        lb1 = jnp.zeros((nq, block))
-    else:
-        lb1 = lb_mod.lb_keogh_powered_qbatch(blk, upper, lower, p)
-        alive1 = mask0 & (lb1 < bound[:, None])
-
-    if method == "full":
-        pass
-    elif method == "lb_keogh":
-        alive2 = alive1
-    else:  # lb_improved: pass 2 only if some lane of some query survived
-
-        def pass2(_):
-            return lb_mod.lb_improved_powered_qbatch(
-                blk, qs, upper, lower, w, p
-            )
-
-        lb = jax.lax.cond(
-            jnp.any(alive1), pass2, lambda _: lb1, operand=None
-        )
-        alive2 = alive1 & (lb < bound[:, None])
-
-    def run_dtw(_):
-        return dtw_qbatch(qs, blk, w, p, powered=True)
-
-    need_dtw = jnp.any(alive2)
-    d = jax.lax.cond(
-        need_dtw,
-        run_dtw,
-        lambda _: jnp.full((nq, block), BIG),
-        operand=None,
-    )
-    d = jnp.where(alive2, d, BIG)
-    return d, alive1, alive2, need_dtw
-
-
 def make_block_step(
     qs: jax.Array,
     upper: jax.Array,
@@ -229,7 +189,7 @@ def make_block_step(
 
     carry = (top_v (Q, k), top_i (Q, k), gbound (Q,),
              lb1_pruned (Q,), lb2_pruned (Q,), dtw_count (Q,),
-             lb2_blocks, dtw_blocks)
+             lb2_blocks, dtw_blocks, dp_lane_work, dp_lane_useful)
     input = (block_array, lane_indices[, entry_mask])
     where ``lane_indices`` is the (block,) vector of candidate ids — a
     contiguous range for the plain scan, a compacted survivor gather for
@@ -248,7 +208,8 @@ def make_block_step(
     nq = qs.shape[0]
 
     def body(carry, inp):
-        top_v, top_i, gbound, c_lb1, c_lb2, c_dtw, b_lb2, b_dtw = carry
+        (top_v, top_i, gbound, c_lb1, c_lb2, c_dtw,
+         b_lb2, b_dtw, w_dp, u_dp) = carry
         if masked:
             blk, cand_i, mask0 = inp
         else:
@@ -261,12 +222,12 @@ def make_block_step(
                 )
         bound = jnp.minimum(top_v[:, -1], gbound)  # per-query k-th best
 
-        d, alive1, alive2, need_dtw = block_stage_distances(
+        st = run_block_stages(
             qs, upper, lower, w, p, method, blk, bound, mask0
         )
 
         # merge block results into each query's running top-k
-        all_v = jnp.concatenate([top_v, d], axis=1)
+        all_v = jnp.concatenate([top_v, st.d], axis=1)
         all_i = jnp.concatenate(
             [top_i, jnp.broadcast_to(cand_i[None, :], (nq, block))], axis=1
         )
@@ -274,12 +235,15 @@ def make_block_step(
         top_v = -neg_v
         top_i = jnp.take_along_axis(all_i, sel, axis=1)
 
-        c_lb1 += jnp.sum(mask0 & ~alive1, axis=1)
-        c_lb2 += jnp.sum(alive1 & ~alive2, axis=1)
-        c_dtw += jnp.sum(alive2, axis=1)
-        b_lb2 += jnp.int32(jnp.any(alive1) & (method == "lb_improved"))
-        b_dtw += jnp.int32(need_dtw)
-        return (top_v, top_i, gbound, c_lb1, c_lb2, c_dtw, b_lb2, b_dtw), None
+        c_lb1 += jnp.sum(mask0 & ~st.alive1, axis=1)
+        c_lb2 += jnp.sum(st.alive1 & ~st.alive2, axis=1)
+        c_dtw += jnp.sum(st.alive2, axis=1)
+        b_lb2 += jnp.int32(st.need_lb2)
+        b_dtw += jnp.int32(st.need_dtw)
+        w_dp += st.dp_lane_work
+        u_dp += st.dp_lane_useful
+        return (top_v, top_i, gbound, c_lb1, c_lb2, c_dtw,
+                b_lb2, b_dtw, w_dp, u_dp), None
 
     return body
 
@@ -304,6 +268,8 @@ def init_carry(
         jnp.zeros((nq,), jnp.int32),
         jnp.int32(0),
         jnp.int32(0),
+        jnp.int32(0),  # dp_lane_work
+        jnp.int32(0),  # dp_lane_useful
     )
 
 
@@ -332,8 +298,8 @@ def _scan_search(
         qs, upper, lower, w, p, k, block, method, n_real=n_real
     )
     carry, _ = jax.lax.scan(body, init_carry(k, nq=nq), (blocks, idx))
-    top_v, top_i, _gbound, c1, c2, c3, b2, b3 = carry
-    return top_v, top_i, c1, c2, c3, b2, b3
+    top_v, top_i, _gbound, c1, c2, c3, b2, b3, w_dp, u_dp = carry
+    return top_v, top_i, c1, c2, c3, b2, b3, w_dp, u_dp
 
 
 def _batch_stats(
@@ -345,13 +311,17 @@ def _batch_stats(
     b3: int,
     blocks_total: int,
     per_query_stage0: list[dict] | None = None,
+    dp_lane_work: int = 0,
+    dp_lane_useful: int = 0,
 ) -> tuple[SearchStats, tuple[SearchStats, ...]]:
     """Per-query + aggregated stats from the (Q,) counter vectors.
 
     Every driver masks or slices padded lanes out of its counters, so no
     pad corrections are needed here.  ``per_query_stage0`` optionally
     carries each query's stage-0 counter dict (lb0_pruned / ref_dtw /
-    clusters_*) from the indexed path.
+    clusters_*) from the indexed path.  The DP lane counters are
+    batch-level (survivor pairs are pooled across queries), so per-query
+    stats carry the batch values, like ``blocks_*``.
     """
     nq = len(c1)
     s0_per = per_query_stage0 if per_query_stage0 is not None else [{}] * nq
@@ -364,6 +334,8 @@ def _batch_stats(
             blocks_total=blocks_total,
             blocks_lb2=int(b2),
             blocks_dtw=int(b3),
+            dp_lane_work=int(dp_lane_work),
+            dp_lane_useful=int(dp_lane_useful),
             **s0_per[i],
         )
         for i in range(nq)
@@ -376,6 +348,8 @@ def _batch_stats(
         blocks_total=blocks_total,
         blocks_lb2=int(b2),
         blocks_dtw=int(b3),
+        dp_lane_work=int(dp_lane_work),
+        dp_lane_useful=int(dp_lane_useful),
         lb0_pruned=sum(s.lb0_pruned for s in per_query),
         ref_dtw=sum(s.ref_dtw for s in per_query),
         clusters_total=sum(s.clusters_total for s in per_query),
@@ -406,7 +380,7 @@ def nn_search_scan(
     db = jnp.asarray(db)
     n_db = db.shape[0]
     dbp, _ = _pad_db(db, block)
-    top_v, top_i, c1, c2, c3, b2, b3 = _scan_search(
+    top_v, top_i, c1, c2, c3, b2, b3, w_dp, u_dp = _scan_search(
         qs, dbp, jnp.int32(n_db), int(w), p, int(k), int(block), method
     )
     agg, per_query = _batch_stats(
@@ -417,6 +391,8 @@ def nn_search_scan(
         int(b2),
         int(b3),
         blocks_total=dbp.shape[0] // block,
+        dp_lane_work=int(w_dp),
+        dp_lane_useful=int(u_dp),
     )
     distances = np.asarray(finish_cost(top_v, p))
     indices = np.asarray(top_i)
@@ -432,14 +408,13 @@ def nn_search_scan(
 # ------------------------------------------------------------------ host
 
 
-@functools.partial(jax.jit, static_argnames=("p",))
-def _lb1_qblock(blk, upper, lower, p):
-    return lb_mod.lb_keogh_powered_qbatch(blk, upper, lower, p)
-
-
-@functools.partial(jax.jit, static_argnames=("w", "p"))
-def _lb2_qblock(blk, qs, upper, lower, w, p):
-    return lb_mod.lb_improved_powered_qbatch(blk, qs, upper, lower, w, p)
+@functools.partial(jax.jit, static_argnames=("name", "w", "p"))
+def _dense_stage_qblock(name, qs, upper, lower, blk, w, p):
+    """One registry stage's dense (Q, B) form — the host driver sweeps
+    whatever LB stages the method's pipeline declares, so a new bound
+    registered in ``repro.core.pipeline`` appears here for free."""
+    ctx = pipe.PipeContext(qs, upper, lower, w, p)
+    return pipe.STAGES[name].dense(ctx, blk)
 
 
 @functools.partial(jax.jit, static_argnames=("w", "p"))
@@ -500,10 +475,16 @@ def nn_search_host(
 
     top_v = np.full((nq, k), BIG)
     top_i = np.full((nq, k), -1, np.int64)
-    c1 = np.zeros(nq, np.int64)
-    c2 = np.zeros(nq, np.int64)
+    lb_names = pipe.lb_stage_names(method)
+    lb_pruned = np.zeros((2, nq), np.int64)  # SearchStats has lb1/lb2 slots
+    if len(lb_names) > 2:
+        raise ValueError(
+            f"SearchStats tracks at most two LB stages, pipeline for "
+            f"{method!r} declares {len(lb_names)}"
+        )
     c3 = np.zeros(nq, np.int64)
     blocks_lb2 = blocks_dtw = 0
+    dp_lane_work = dp_lane_useful = 0
     nb = -(-n_db // block)
 
     def merge(qi: int, vals: np.ndarray, idxs: np.ndarray):
@@ -520,20 +501,20 @@ def nn_search_host(
             blk = jnp.concatenate([blk, pad], axis=0)
         bound = top_v[:, -1]  # (Q,)
 
-        if method == "full":
-            alive = np.ones((nq, hi - lo), bool)
-        else:
-            lb1 = np.asarray(_lb1_qblock(blk, upper, lower, p))[:, : hi - lo]
-            alive = lb1 < bound[:, None]
-            c1 += (~alive).sum(axis=1)
-            if method == "lb_improved" and alive.any():
+        # LB stages as the method's pipeline declares them: the first
+        # sweeps the whole block, later ones only run while lanes survive
+        alive = np.ones((nq, hi - lo), bool)
+        for si, name in enumerate(lb_names):
+            if si > 0:
+                if not alive.any():
+                    break
                 blocks_lb2 += 1
-                lb2 = np.asarray(_lb2_qblock(blk, qs, upper, lower, w, p))[
-                    :, : hi - lo
-                ]
-                alive2 = alive & (lb2 < bound[:, None])
-                c2 += (alive & ~alive2).sum(axis=1)
-                alive = alive2
+            lb = np.asarray(
+                _dense_stage_qblock(name, qs, upper, lower, blk, w, p)
+            )[:, : hi - lo]
+            alive_next = alive & (lb < bound[:, None])
+            lb_pruned[si] += (alive & ~alive_next).sum(axis=1)
+            alive = alive_next
 
         # pooled survivor pairs: all queries' survivors of this block,
         # query-major order so each chunk touches few top-k rows
@@ -547,6 +528,8 @@ def nn_search_host(
             sel_qp = np.concatenate([sel_q, np.repeat(sel_q[-1:], pad_n)])
             sel_cp = np.concatenate([sel_c, np.repeat(sel_c[-1:], pad_n)])
             blocks_dtw += 1
+            dp_lane_work += dtw_chunk
+            dp_lane_useful += len(sel_q)
             if early_abandon:
                 d = np.array(
                     _dtw_pairs_block_early(
@@ -567,12 +550,14 @@ def nn_search_host(
 
     agg, per_query = _batch_stats(
         n_db,
-        c1,
-        c2,
+        lb_pruned[0],
+        lb_pruned[1],
         c3,
         blocks_lb2,
         blocks_dtw,
         blocks_total=nb,
+        dp_lane_work=dp_lane_work,
+        dp_lane_useful=dp_lane_useful,
     )
     distances = np.asarray(finish_cost(jnp.asarray(top_v), p))
     if single:
@@ -624,8 +609,8 @@ def _scan_search_compact(
     carry, _ = jax.lax.scan(
         body, init_carry(k, top_v0, top_i0, nq=nq), (blocks, idxb, maskb)
     )
-    top_v, top_i, _gbound, c1, c2, c3, b2, b3 = carry
-    return top_v, top_i, c1, c2, c3, b2, b3
+    top_v, top_i, _gbound, c1, c2, c3, b2, b3, w_dp, u_dp = carry
+    return top_v, top_i, c1, c2, c3, b2, b3, w_dp, u_dp
 
 
 def nn_search_indexed(
@@ -800,7 +785,7 @@ def nn_search_indexed(
     mask = np.concatenate(
         [alive[:, survivors], np.zeros((nq, pad), bool)], axis=1
     )
-    top_vj, top_ij, c1, c2, c3, b2, b3 = _scan_search_compact(
+    top_vj, top_ij, c1, c2, c3, b2, b3, w_dp, u_dp = _scan_search_compact(
         qs,
         sub,
         jnp.asarray(idx, jnp.int32),
@@ -825,5 +810,7 @@ def nn_search_indexed(
         int(b3),
         blocks_total=nb_pad,
         per_query_stage0=stage0_per,
+        dp_lane_work=int(w_dp),
+        dp_lane_useful=int(u_dp),
     )
     return finish(top_vj, top_ij, agg, per_query)

@@ -100,7 +100,7 @@ def _sharded_search_fn(
             return (top_v, top_i, gbound, *stats), None
 
         carry, _ = jax.lax.scan(round_body, init_carry(k, nq=nq), (blocks, idx))
-        top_v, top_i, _gbound, c1, c2, c3, b2, b3 = carry
+        top_v, top_i, _gbound, c1, c2, c3, b2, b3, w_dp, u_dp = carry
         # gather per-shard per-query top-k along the k axis and merge
         all_v = jax.lax.all_gather(top_v, axis_names, axis=1, tiled=True)
         all_i = jax.lax.all_gather(top_i, axis_names, axis=1, tiled=True)
@@ -117,6 +117,8 @@ def _sharded_search_fn(
             [
                 jax.lax.psum(b2, axis_names),
                 jax.lax.psum(b3, axis_names),
+                jax.lax.psum(w_dp, axis_names),
+                jax.lax.psum(u_dp, axis_names),
             ]
         )
         return -neg, merged_i, cand_stats, block_stats
@@ -168,7 +170,7 @@ def sharded_nn_search(
     )
     top_v, top_i, cand_stats, block_stats = fn(qs, db)
     cand_stats = np.asarray(cand_stats)
-    b2, b3 = (int(v) for v in np.asarray(block_stats))
+    b2, b3, w_dp, u_dp = (int(v) for v in np.asarray(block_stats))
     agg, per_query = _batch_stats(
         int(db.shape[0]),
         cand_stats[0],
@@ -177,6 +179,8 @@ def sharded_nn_search(
         b2,
         b3,
         blocks_total=int(db.shape[0]) // block,
+        dp_lane_work=w_dp,
+        dp_lane_useful=u_dp,
     )
     distances = np.asarray(finish_cost(jnp.asarray(top_v), p))
     indices = np.asarray(top_i)

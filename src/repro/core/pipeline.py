@@ -1,0 +1,334 @@
+"""Composable cascade stage pipeline with survivor compaction (DESIGN.md §3.6).
+
+The paper's economics are "spend almost nothing on lanes the lower
+bounds kill": LB_Keogh -> LB_Improved -> DTW, each stage touching only
+what the previous one let through.  The original device staging
+(`block_stage_distances`, now deleted) gated stage 2 and the DP behind
+an all-or-nothing ``lax.cond`` — one surviving lane triggered a full
+``(Q, block)`` tile of work.  This module makes per-lane work
+proportional to survivors while staying fully jit-able:
+
+* **Stage registry.**  Every bound is declared once as a :class:`Stage`
+  (a dense ``(Q, B)`` form and a compacted per-lane-pair form) and
+  listed in :data:`PIPELINES` per cascade method.  All five drivers
+  (scan, host, indexed, sharded, stream) consume the registry, so a new
+  bound plugs in here once and appears everywhere.
+
+* **Survivor compaction, argwhere-free.**  After each LB stage the
+  alive ``(query, candidate)`` lane pairs are compacted with a stable
+  sort-by-alive (`argsort` of the dead mask: alive lanes first, original
+  order preserved) and processed in fixed-capacity ``lane_chunk`` gathers
+  under a ``lax.while_loop`` whose trip count is ``ceil(alive/chunk)`` —
+  shapes stay static, the work does not.  A ``lax.cond`` falls back to
+  the dense tile form when survivors exceed half the lanes (compaction
+  would then serialize full-width work into chunks for nothing).
+
+* **Early abandoning.**  The compacted DP threads each lane's powered
+  pruning bound into ``dtw_banded_early`` (finite p), the host twin of
+  the Pallas early-abandon kernel (`kernels/dtw`): rows stop as soon as
+  the band's running min exceeds the bound.  Abandoned lanes return a
+  value >= bound, which can never enter a top-k whose k-th best *is*
+  that bound, so results are unchanged.
+
+The per-block entry point is :func:`run_block_stages`; it returns the
+powered distances, the per-stage alive masks, and the
+``dp_lane_work`` / ``dp_lane_useful`` counters that make the
+wasted-vs-useful DP ratio measurable (`SearchStats`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Literal, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dtw import (
+    BIG,
+    PNorm,
+    dtw_banded_diag,
+    dtw_banded_early,
+    dtw_qbatch,
+)
+from repro.core.envelope import envelope_batch
+from repro.core import lb as lb_mod
+
+Method = Literal["full", "lb_keogh", "lb_improved"]
+
+#: lanes per compacted gather; also the unit dp_lane_work is counted in
+LANE_CHUNK = 32
+
+
+class PipeContext(NamedTuple):
+    """Per-call constants every stage closes over: the query batch, its
+    envelopes, and the (static) band half-width and norm order."""
+
+    qs: jax.Array  # (Q, n)
+    upper: jax.Array  # (Q, n)
+    lower: jax.Array  # (Q, n)
+    w: int
+    p: PNorm
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One cascade stage, declared once, consumed by every driver.
+
+    ``dense``  — (ctx, blk) -> (Q, B) powered values for a whole tile.
+    ``pair``   — (ctx, blk, qi, ci, bound, prev) -> (chunk,) powered
+                 values for compacted (query, candidate) lane pairs;
+                 ``bound`` is the per-lane powered pruning bound (exact
+                 stages may abandon once they can prove the result
+                 >= bound) and ``prev`` the previous stage's value for
+                 each lane (a tightening stage builds on it instead of
+                 recomputing).
+    ``exact``  — True for the terminal stage (true distances, not bounds).
+    """
+
+    name: str
+    dense: Callable[[PipeContext, jax.Array], jax.Array]
+    pair: Callable[..., jax.Array]
+    exact: bool = False
+
+
+# --------------------------------------------------------------- stages
+
+
+def _lb_keogh_dense(ctx: PipeContext, blk: jax.Array) -> jax.Array:
+    return lb_mod.lb_keogh_powered_qbatch(blk, ctx.upper, ctx.lower, ctx.p)
+
+
+def _lb_keogh_pair(ctx, blk, qi, ci, bound, prev):
+    c = blk[ci]  # (chunk, n)
+    return lb_mod.lb_keogh_powered(c, ctx.upper[qi], ctx.lower[qi], ctx.p)
+
+
+def _lb_improved_dense(ctx: PipeContext, blk: jax.Array) -> jax.Array:
+    return lb_mod.lb_improved_powered_qbatch(
+        blk, ctx.qs, ctx.upper, ctx.lower, ctx.w, ctx.p
+    )
+
+
+def _lb_improved_pair(ctx, blk, qi, ci, bound, prev):
+    """Corollary 4 per compacted lane pair: envelope-of-projection pass 2
+    on top of the stage-1 LB_Keogh values (``prev``, gathered rather than
+    recomputed — the dense form recomputes them bit-identically), same op
+    sequence as the dense query-major form so values on alive lanes
+    bit-match the tile computation."""
+    c = blk[ci]  # (chunk, n)
+    u, l, q = ctx.upper[qi], ctx.lower[qi], ctx.qs[qi]
+    h = lb_mod.project(c, u, l)
+    hu, hl = envelope_batch(h, ctx.w)
+    pass2 = lb_mod.lb_keogh_powered(q, hu, hl, ctx.p)
+    if ctx.p == jnp.inf:
+        return jnp.maximum(prev, pass2)
+    return prev + pass2
+
+
+def _dtw_dense(ctx: PipeContext, blk: jax.Array) -> jax.Array:
+    return dtw_qbatch(ctx.qs, blk, ctx.w, ctx.p, powered=True)
+
+
+def _dtw_pair(ctx, blk, qi, ci, bound, prev):
+    """Banded DP on compacted lane pairs, early-abandoning against each
+    lane's own powered bound (finite p).  Abandoned lanes return >= bound,
+    so they can never displace a top-k entry the bound came from."""
+    qrows = ctx.qs[qi]
+    crows = blk[ci]
+    if ctx.p == jnp.inf:
+        return jax.vmap(
+            lambda a, b: dtw_banded_diag(a, b, ctx.w, ctx.p, powered=True)
+        )(qrows, crows)
+    return jax.vmap(
+        lambda a, b, bd: dtw_banded_early(a, b, ctx.w, bd, ctx.p)
+    )(qrows, crows, bound)
+
+
+STAGES: dict[str, Stage] = {
+    "lb_keogh": Stage("lb_keogh", _lb_keogh_dense, _lb_keogh_pair),
+    "lb_improved": Stage("lb_improved", _lb_improved_dense, _lb_improved_pair),
+    "full": Stage("full", _dtw_dense, _dtw_pair, exact=True),
+}
+
+#: the cascade per method: LB stages in tightening order, terminal DP last.
+#: A new bound slots into these lists (and STAGES) once and every driver
+#: — scan, host, indexed, sharded, stream — picks it up.  Caveat:
+#: ``SearchStats`` exposes two LB prune slots (lb1/lb2), so a pipeline
+#: may declare at most two LB stages until the stats grow per-stage
+#: vectors (the host driver raises on more; the scan drivers fold any
+#: later LB stage's prunes into the lb2 slot).
+PIPELINES: dict[Method, tuple[str, ...]] = {
+    "full": ("full",),
+    "lb_keogh": ("lb_keogh", "full"),
+    "lb_improved": ("lb_keogh", "lb_improved", "full"),
+}
+
+
+def lb_stage_names(method: Method) -> tuple[str, ...]:
+    """The non-terminal (lower-bound) stages of a method's pipeline."""
+    return PIPELINES[method][:-1]
+
+
+# ---------------------------------------------------- compacted execution
+
+
+def _compact_order(alive_flat: jax.Array) -> jax.Array:
+    """Alive-first stable permutation of flat lane ids — the argwhere-free
+    compaction: sorting the *dead* mask moves alive lanes (False) to the
+    front while the stable sort preserves their original order."""
+    return jnp.argsort(~alive_flat)
+
+
+def _run_stage_compacted(
+    ctx: PipeContext,
+    stage: Stage,
+    blk: jax.Array,
+    alive: jax.Array,
+    bound: jax.Array,
+    prev_vals: jax.Array,
+    lane_chunk: int,
+):
+    """Run ``stage`` on the alive lanes of a ``(Q, B)`` tile.
+
+    Survivors are compacted into ``lane_chunk``-sized gathers processed
+    under a ``lax.while_loop`` (trip count ``ceil(alive / chunk)`` — work
+    proportional to survivors, shapes static).  When survivors exceed
+    half the lanes a ``lax.cond`` switches to the dense tile form, which
+    vectorises better than many near-full chunks.  ``prev_vals`` is the
+    previous stage's (Q, B) value tile, gathered per lane for stages
+    that tighten it.  Returns
+    ``(vals (Q, B) powered — BIG on lanes not computed, lane_work)``.
+    """
+    nq, b = alive.shape
+    lanes = nq * b
+    flat = alive.reshape(-1)
+    prev_flat = prev_vals.reshape(-1)
+    count = jnp.sum(flat)
+    n_chunk_slots = -(-lanes // lane_chunk)
+    pad = n_chunk_slots * lane_chunk - lanes
+
+    def dense_path(_):
+        vals = stage.dense(ctx, blk)
+        return jnp.where(alive, vals, BIG), jnp.int32(lanes)
+
+    def chunked_path(_):
+        order = _compact_order(flat)
+        if pad:
+            # sentinel ids land past the flat buffer and scatter-drop
+            order = jnp.concatenate(
+                [order, jnp.full((pad,), lanes, order.dtype)]
+            )
+        n_chunks = (count + lane_chunk - 1) // lane_chunk
+
+        def body(state):
+            i, vals = state
+            sel = jax.lax.dynamic_slice(
+                order, (i * lane_chunk,), (lane_chunk,)
+            )
+            pos = i * lane_chunk + jnp.arange(lane_chunk)
+            live = pos < count
+            safe = jnp.where(live, sel, 0)
+            qi, ci = safe // b, safe % b
+            out = stage.pair(ctx, blk, qi, ci, bound[qi], prev_flat[safe])
+            out = jnp.where(live, out, BIG)
+            # `order` is a permutation (+ sentinels), so scatters never
+            # collide; sentinel ids fall off the end and are dropped
+            vals = vals.at[sel].set(out, mode="drop")
+            return i + 1, vals
+
+        _, vals = jax.lax.while_loop(
+            lambda s: s[0] < n_chunks,
+            body,
+            (jnp.int32(0), jnp.full((lanes,), BIG)),
+        )
+        return vals.reshape(nq, b), (n_chunks * lane_chunk).astype(jnp.int32)
+
+    # dense fallback: beyond half the lanes, chunking serializes
+    # near-full-width work for no savings
+    return jax.lax.cond(2 * count > lanes, dense_path, chunked_path, None)
+
+
+class BlockStages(NamedTuple):
+    """Result of one block through the pipeline (powered domain).
+
+    ``d``        — (Q, B) distances; BIG on lanes that never reached the DP
+                   (abandoned DP lanes hold a value >= their bound).
+    ``alive1``   — mask after the first LB stage (== entry mask for
+                   method "full").
+    ``alive2``   — mask after the last LB stage (== alive1 for
+                   single-LB methods); the lanes the DP ran on.
+    ``need_lb2`` — whether any lane entered the second LB stage.
+    ``need_dtw`` — whether any lane entered the DP.
+    ``dp_lane_work``   — DP lanes actually executed (chunk-padded).
+    ``dp_lane_useful`` — DP lanes that were alive (== full_dtw increment).
+    """
+
+    d: jax.Array
+    alive1: jax.Array
+    alive2: jax.Array
+    need_lb2: jax.Array
+    need_dtw: jax.Array
+    dp_lane_work: jax.Array
+    dp_lane_useful: jax.Array
+
+
+def run_block_stages(
+    qs: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    w: int,
+    p: PNorm,
+    method: Method,
+    blk: jax.Array,
+    bound: jax.Array,
+    mask0: jax.Array,
+    lane_chunk: int = LANE_CHUNK,
+) -> BlockStages:
+    """One candidate block through the method's stage pipeline, query-major.
+
+    Shared by the top-k search drivers (``make_block_step`` merges the
+    result into per-query top-k carries) and the streaming subsequence
+    matcher (``repro.stream.subsequence`` compares against a fixed
+    per-template threshold — DESIGN.md §3.5).
+
+    ``blk`` is a ``(block, n)`` candidate tile, ``bound`` a ``(Q,)``
+    powered pruning bound, ``mask0`` a ``(Q, block)`` bool of lanes alive
+    on entry.  The first LB stage runs unconditionally on the tile (the
+    paper's economics: a fully-pruned block costs exactly one LB_Keogh
+    pass); every later stage runs survivor-compacted.
+    """
+    nq, block = qs.shape[0], blk.shape[0]
+    ctx = PipeContext(qs, upper, lower, w, p)
+    names = PIPELINES[method]
+    stages = [STAGES[nm] for nm in names]
+
+    alive = mask0
+    masks = []
+    vals = jnp.full((nq, block), BIG)  # no prior bound before stage 1
+    for si, stage in enumerate(stages):
+        if stage.exact:
+            # any lane that entered a tightening stage past the first LB
+            # (SearchStats tracks two LB slots; the host driver guards)
+            need_lb2 = (
+                jnp.any(masks[0]) if len(stages) > 2 else jnp.bool_(False)
+            )
+            need_dtw = jnp.any(alive)
+            d, dp_work = _run_stage_compacted(
+                ctx, stage, blk, alive, bound, vals, lane_chunk
+            )
+            dp_useful = jnp.sum(alive).astype(jnp.int32)
+            alive1 = masks[0] if masks else mask0
+            alive2 = masks[-1] if masks else mask0
+            return BlockStages(
+                d, alive1, alive2, need_lb2, need_dtw, dp_work, dp_useful
+            )
+        if si == 0:
+            vals = stage.dense(ctx, blk)
+        else:
+            vals, _ = _run_stage_compacted(
+                ctx, stage, blk, alive, bound, vals, lane_chunk
+            )
+        alive = alive & (vals < bound[:, None])
+        masks.append(alive)
+    raise ValueError(f"pipeline for {method!r} has no terminal exact stage")

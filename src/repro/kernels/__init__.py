@@ -12,8 +12,15 @@ TPU kernel here, with the layout rethought for VMEM/VPU execution
   AND the projection H(c, q) in one VMEM pass (feeds LB_Improved pass 2).
 * ``lb_improved`` — fused pass 2: envelope of the projection + second
   accumulation in one VMEM pass (the two-pass contribution itself).
+* ``lb_fused``    — both passes in ONE launch (DESIGN.md §3.6): the
+  candidate tile stays resident in VMEM, pass 2 is predicated per lane
+  on the powered pruning bound, and the projection never touches HBM —
+  one HBM read of the block instead of up to three.
 * ``dtw``         — banded DP with the loop-carried band row resident in
-  VMEM; within-row recurrence solved by cumsum+cummin doubling.
+  VMEM; within-row recurrence solved by cumsum+cummin doubling.  The
+  row loop is a ``while_loop`` threaded with a per-lane powered bound
+  (early abandoning, paper §3): rows stop once the band's running min
+  clears the bound — the device twin of ``core.dtw.dtw_banded_early``.
 
 The LB kernels also come in query-major ``*_qbatch_op`` variants
 (DESIGN.md §3.4): the query batch is a second grid dimension, so one
@@ -28,8 +35,9 @@ Kernels are validated in interpret mode against the pure-jnp oracles in
 each ``ref.py`` (which are in turn validated against numpy DPs).
 """
 
-from repro.kernels.dtw import dtw_op, dtw_ref
+from repro.kernels.dtw import dtw_early_ref, dtw_op, dtw_ref
 from repro.kernels.envelope import envelope_op, envelope_ref
+from repro.kernels.lb_fused import lb_fused_qbatch_op, lb_fused_qbatch_ref
 from repro.kernels.lb_improved import (
     lb_improved_op,
     lb_improved_pass2_op,
@@ -51,10 +59,13 @@ from repro.kernels.lb_keogh import (
 )
 
 __all__ = [
+    "dtw_early_ref",
     "dtw_op",
     "dtw_ref",
     "envelope_op",
     "envelope_ref",
+    "lb_fused_qbatch_op",
+    "lb_fused_qbatch_ref",
     "lb_improved_op",
     "lb_improved_pass2_op",
     "lb_improved_pass2_qbatch_op",

@@ -1,4 +1,4 @@
 from repro.kernels.dtw.ops import dtw_op
-from repro.kernels.dtw.ref import dtw_ref
+from repro.kernels.dtw.ref import dtw_early_ref, dtw_ref
 
-__all__ = ["dtw_op", "dtw_ref"]
+__all__ = ["dtw_op", "dtw_early_ref", "dtw_ref"]

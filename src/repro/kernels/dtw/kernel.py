@@ -1,11 +1,21 @@
-"""Pallas TPU kernel: banded DTW_p dynamic program.
+"""Pallas TPU kernel: banded DTW_p dynamic program, early-abandoning.
 
 One grid step computes DTW_p(q, c) for a single candidate.  The DP runs
 row-by-row; the loop-carried band row (width 2w+1) lives in VMEM/VREGs
 for the whole computation, so HBM traffic is exactly the two input
-series.  The within-row (min,+) recurrence is solved in closed form with
-one cumsum + one cummin (Hillis-Steele doubling — log2(W) vector steps),
-the same restructuring as repro.core.dtw.dtw_banded (DESIGN.md §3).
+series (plus one bound scalar).  The within-row (min,+) recurrence is
+solved in closed form with one cumsum + one cummin (Hillis-Steele
+doubling — log2(W) vector steps), the same restructuring as
+repro.core.dtw.dtw_banded (DESIGN.md §3).
+
+The row loop is a ``lax.while_loop`` threaded with the lane's powered
+pruning bound (paper §3's early-abandoning optimisation, the device
+twin of ``repro.core.dtw.dtw_banded_early``): row minima of the (min,+)
+DP are non-decreasing, so once every band cell meets or exceeds the
+bound the final distance provably does too and the remaining rows are
+skipped.  Abandoned lanes return the running band min — a value
+>= bound, which the cascade's top-k can never admit past the bound it
+supplied.  A BIG bound degrades to the exact full-row DP.
 
 Layout notes:
 * the candidate arrives pre-padded with PAD_VALUE sentinels on both sides
@@ -28,13 +38,15 @@ from jax.experimental import pallas as pl
 from repro.kernels.common import BIG, cummin_doubling, cumsum_doubling
 
 
-def _dtw_kernel(q_ref, ypad_ref, out_ref, *, n: int, w: int, p):
+def _dtw_kernel(q_ref, ypad_ref, bound_ref, out_ref, *, n: int, w: int, p):
     width = 2 * w + 1
     ks = jax.lax.broadcasted_iota(jnp.int32, (1, width), 1)  # band offset k
 
     prev0 = jnp.full((1, width), BIG, jnp.float32).at[0, w].set(0.0)
+    bound = bound_ref[0, 0]
 
-    def row(i, prev):
+    def row(state):
+        i, prev = state
         yrow = ypad_ref[0, pl.ds(i, width)].reshape(1, width)
         qi = q_ref[0, i]
         diff = jnp.abs(qi - yrow)
@@ -50,24 +62,32 @@ def _dtw_kernel(q_ref, ypad_ref, out_ref, *, n: int, w: int, p):
         s = cumsum_doubling(cost_sum, axis=1)
         t = jnp.where(valid, b + cost_sum - s, BIG)
         new = jnp.minimum(s + cummin_doubling(t, axis=1), BIG)
-        return jnp.where(valid, new, BIG)
+        return i + 1, jnp.where(valid, new, BIG)
 
-    last = jax.lax.fori_loop(0, n, row, prev0)
-    out_ref[0, 0] = last[0, w]
+    def cond(state):
+        i, prev = state
+        # row minima are non-decreasing: once the whole band clears the
+        # bound, the final cell will too — the remaining rows are skipped
+        return (i < n) & (jnp.min(prev) < bound)
+
+    i, last = jax.lax.while_loop(cond, row, (jnp.int32(0), prev0))
+    # finished: exact powered DTW; abandoned: a valid lower bound >= bound
+    out_ref[0, 0] = jnp.where(i == n, last[0, w], jnp.min(last))
 
 
 @functools.partial(jax.jit, static_argnames=("n", "w", "p", "interpret"))
 def dtw_banded_pallas(
     q: jax.Array,
     cands_pad: jax.Array,
+    bounds: jax.Array,
     n: int,
     w: int,
     p=1,
     interpret: bool = True,
 ):
-    """q (1, n); cands_pad (B, n + 2w) sentinel-padded -> powered DTW (B,)."""
+    """q (1, n); cands_pad (B, n + 2w) sentinel-padded; bounds (B, 1)
+    per-lane powered abandon thresholds -> powered DTW (B,)."""
     b = cands_pad.shape[0]
-    width = 2 * w + 1
     kern = functools.partial(_dtw_kernel, n=n, w=w, p=p)
     out = pl.pallas_call(
         kern,
@@ -75,9 +95,10 @@ def dtw_banded_pallas(
         in_specs=[
             pl.BlockSpec((1, n), lambda i: (0, 0)),
             pl.BlockSpec((1, n + 2 * w), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
         interpret=interpret,
-    )(q, cands_pad)
+    )(q, cands_pad, bounds)
     return out[:, 0]

@@ -1,4 +1,4 @@
-"""Public wrapper for the banded DTW kernel."""
+"""Public wrapper for the banded (early-abandoning) DTW kernel."""
 
 from __future__ import annotations
 
@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dtw import finish_cost
-from repro.kernels.common import PAD_VALUE, interpret_default
+from repro.kernels.common import BIG, PAD_VALUE, interpret_default
 from repro.kernels.dtw.kernel import dtw_banded_pallas
 
 
@@ -16,9 +16,18 @@ def dtw_op(
     w: int,
     p=1,
     powered: bool = False,
+    bounds: jax.Array | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """DTW_p of query (n,) against candidates (B, n) via the TPU kernel."""
+    """DTW_p of query (n,) against candidates (B, n) via the TPU kernel.
+
+    ``bounds`` (B,), if given, are per-lane *powered* early-abandon
+    thresholds (the cascade's running k-th best): a lane's row loop
+    stops as soon as its whole band meets the bound, returning a value
+    >= bound instead of the exact distance (``powered`` applies to the
+    returned values either way).  Omitted, every lane runs the full DP
+    and the result is exact — identical to the pre-abandon kernel.
+    """
     if interpret is None:
         interpret = interpret_default()
     if p not in (1, 2):
@@ -29,5 +38,9 @@ def dtw_op(
     w = int(min(w, n - 1))
     pad = jnp.full((b, w), PAD_VALUE, jnp.float32)
     cands_pad = jnp.concatenate([pad, cands, pad], axis=1)
-    out = dtw_banded_pallas(q[None, :], cands_pad, n, w, p, interpret)
+    if bounds is None:
+        bounds_col = jnp.full((b, 1), BIG, jnp.float32)
+    else:
+        bounds_col = jnp.asarray(bounds, jnp.float32).reshape(b, 1)
+    out = dtw_banded_pallas(q[None, :], cands_pad, bounds_col, n, w, p, interpret)
     return out if powered else finish_cost(out, p)

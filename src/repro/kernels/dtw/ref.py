@@ -1,8 +1,18 @@
-"""Pure-jnp oracle for the DTW kernel (itself validated against the
+"""Pure-jnp oracles for the DTW kernel (themselves validated against the
 O(n^2) numpy DP ``repro.core.dtw.dtw_reference`` in the test-suite)."""
 
-from repro.core.dtw import dtw_batch, dtw_reference  # noqa: F401
+import jax
+
+from repro.core.dtw import dtw_banded_early, dtw_batch, dtw_reference  # noqa: F401
 
 
 def dtw_ref(q, cands, w: int, p=1, powered: bool = False):
     return dtw_batch(q, cands, w, p, powered)
+
+
+def dtw_early_ref(q, cands, w: int, bounds, p=1):
+    """Early-abandoning oracle: the host-side while-loop DP the kernel
+    mirrors (powered values; abandoned lanes return >= their bound)."""
+    return jax.vmap(lambda c, bd: dtw_banded_early(q, c, w, bd, p))(
+        cands, bounds
+    )

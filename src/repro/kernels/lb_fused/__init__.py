@@ -1,0 +1,4 @@
+from repro.kernels.lb_fused.ops import lb_fused_qbatch_op
+from repro.kernels.lb_fused.ref import lb_fused_qbatch_ref
+
+__all__ = ["lb_fused_qbatch_op", "lb_fused_qbatch_ref"]

@@ -1,0 +1,152 @@
+"""Pallas TPU kernel: fused LB_Keogh -> LB_Improved cascade stage.
+
+The separate lb_keogh / lb_improved kernels stream the candidate block
+out of HBM, write the (Q, B, n) projection stack H back to HBM, and read
+it again for pass 2 — up to three HBM sweeps of block-sized data for one
+cascade stage.  This kernel performs the whole two-pass bound while the
+candidate tile is resident in VMEM:
+
+    lb1   = || c - H(c, q) ||_p^p            (pass 1, Corollary 3)
+    alive = lb1 < bound                       (per-lane predication)
+    lb2   = || q - clip(q, L(H), U(H)) ||_p^p (pass 2, Corollary 4)
+    lb    = alive ? lb1 + lb2 : lb1
+
+One HBM read of the block per query lane; H never leaves VMEM and only
+two scalars per lane return.  ``bound`` is the query lane's powered
+pruning bound (the cascade's running k-th best / stream threshold):
+pass 2 is predicated on it per lane — dead lanes contribute nothing to
+the output — and skipped outright (``lax.cond``) when a tile has no
+survivor, so a fully-pruned tile costs exactly pass 1, the paper's
+Algorithm 3 economics.  (On a VPU, per-lane *work* skipping inside a
+live tile is the job of the survivor compaction upstream —
+``repro.core.pipeline`` — the kernel's contribution is fusing the HBM
+traffic and the tile-granular skip.)
+
+The pass-2 envelope U(H), L(H) is built in-kernel with the same vHGW
+block trick as the lb_improved kernel: sentinel-pad the projection to a
+multiple of the window, per-block prefix/suffix cummax/cummin, two
+lookups per element.  Supports p in {1, 2} like the other kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import (
+    BIG,
+    cummax_doubling,
+    cummin_doubling,
+    round_up,
+)
+
+
+def _lb_fused_kernel(
+    c_ref, u_ref, l_ref, q_ref, bound_ref, lb1_ref, lb_ref, *, w: int, n: int, p
+):
+    win = 2 * w + 1
+    total = round_up(n + 2 * w, win)
+    c = c_ref[...]  # (tile_b, n) — candidate tile, one VMEM residency
+    u = u_ref[...]  # (1, n) — envelope of query lane program_id(0)
+    l = l_ref[...]
+    q = q_ref[...]  # (1, n)
+    tile_b = c.shape[0]
+    nblocks = total // win
+
+    # ---- pass 1: clamp-project-accumulate (lb_keogh kernel, inlined)
+    over = jnp.maximum(c - u, 0.0)
+    under = jnp.maximum(l - c, 0.0)
+    d1 = over + under  # one side is always 0
+    cost1 = d1 if p == 1 else d1 * d1
+    lb1 = jnp.sum(cost1, axis=1)  # (tile_b,)
+
+    bound = bound_ref[0, 0]
+    alive = lb1 < bound  # per-lane predication of pass 2
+
+    def pass2(_):
+        h = jnp.clip(c, l, u)  # H(c, q) — VMEM only, never HBM
+
+        def padded(x, fill):
+            lo = jnp.full((tile_b, w), fill, x.dtype)
+            hi = jnp.full((tile_b, total - n - w), fill, x.dtype)
+            return jnp.concatenate([lo, x, hi], axis=1)
+
+        bmax = padded(h, -BIG).reshape(tile_b * nblocks, win)
+        bmin = padded(h, BIG).reshape(tile_b * nblocks, win)
+        pref_max = cummax_doubling(bmax, axis=1).reshape(tile_b, total)
+        suff_max = cummax_doubling(bmax[:, ::-1], axis=1)[:, ::-1].reshape(
+            tile_b, total
+        )
+        pref_min = cummin_doubling(bmin, axis=1).reshape(tile_b, total)
+        suff_min = cummin_doubling(bmin[:, ::-1], axis=1)[:, ::-1].reshape(
+            tile_b, total
+        )
+        hu = jnp.maximum(suff_max[:, :n], pref_max[:, win - 1 : win - 1 + n])
+        hl = jnp.minimum(suff_min[:, :n], pref_min[:, win - 1 : win - 1 + n])
+
+        over2 = jnp.maximum(q - hu, 0.0)
+        under2 = jnp.maximum(hl - q, 0.0)
+        d2 = over2 + under2
+        cost2 = d2 if p == 1 else d2 * d2
+        return jnp.sum(cost2, axis=1)  # (tile_b,)
+
+    # tile-granular skip: a fully-pruned tile pays pass 1 only
+    lb2 = jax.lax.cond(
+        jnp.any(alive), pass2, lambda _: jnp.zeros_like(lb1), None
+    )
+    lb1_ref[...] = lb1[None, :]  # (1, tile_b)
+    lb_ref[...] = jnp.where(alive, lb1 + lb2, lb1)[None, :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("w", "n", "p", "tile_b", "interpret")
+)
+def lb_fused_qbatch_pallas(
+    cands: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    qs: jax.Array,
+    bounds: jax.Array,
+    w: int,
+    n: int,
+    p=1,
+    tile_b: int = 8,
+    interpret: bool = True,
+):
+    """Fused two-pass bound, query-major: grid (Q, B/tile_b).
+
+    cands (B, n); envelopes + queries (Q, n); bounds (Q, 1) powered
+    pruning bounds -> (lb1 (Q, B), lb (Q, B)) where ``lb`` holds the full
+    LB_Improved on lanes with ``lb1 < bound`` and lb1 elsewhere.
+    B % tile_b == 0.
+    """
+    b = cands.shape[0]
+    nq = upper.shape[0]
+    if b % tile_b:
+        raise ValueError(f"batch {b} not a multiple of tile_b {tile_b}")
+    grid = (nq, b // tile_b)
+    kern = functools.partial(_lb_fused_kernel, w=w, n=n, p=p)
+    lb1, lb = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, n), lambda qi, bi: (bi, 0)),
+            pl.BlockSpec((1, n), lambda qi, bi: (qi, 0)),
+            pl.BlockSpec((1, n), lambda qi, bi: (qi, 0)),
+            pl.BlockSpec((1, n), lambda qi, bi: (qi, 0)),
+            pl.BlockSpec((1, 1), lambda qi, bi: (qi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_b), lambda qi, bi: (qi, bi)),
+            pl.BlockSpec((1, tile_b), lambda qi, bi: (qi, bi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, b), cands.dtype),
+            jax.ShapeDtypeStruct((nq, b), cands.dtype),
+        ],
+        interpret=interpret,
+    )(cands, upper, lower, qs, bounds)
+    return lb1, lb

@@ -1,0 +1,55 @@
+"""Public wrapper for the fused LB_Keogh -> LB_Improved stage kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import PAD_VALUE, interpret_default, round_up
+from repro.kernels.lb_fused.kernel import lb_fused_qbatch_pallas
+
+
+def lb_fused_qbatch_op(
+    cands: jax.Array,
+    qs: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    w: int,
+    bounds: jax.Array,
+    p=1,
+    tile_b: int = 8,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Both passes of the two-pass bound in one kernel launch.
+
+    cands (B, n) vs queries/envelopes (Q, n) with per-query powered
+    pruning ``bounds`` (Q,) -> (lb1 (Q, B), lb (Q, B)): powered LB_Keogh
+    for every lane, and the full powered LB_Improved on lanes that
+    survive pass 1 (``lb == lb1`` on pruned lanes, whose pass 2 is
+    predicated away).  The candidate tile is read from HBM once per
+    query lane and the projection stack never leaves VMEM — the
+    single-sweep form of ``lb_keogh_qbatch_op`` + ``lb_improved_pass2_qbatch_op``.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    if p not in (1, 2):
+        raise ValueError("kernel fast path supports p in {1, 2}")
+    cands = jnp.asarray(cands, jnp.float32)
+    qs = jnp.asarray(qs, jnp.float32)
+    upper = jnp.asarray(upper, jnp.float32)
+    lower = jnp.asarray(lower, jnp.float32)
+    b, n = cands.shape
+    w = int(min(w, n - 1))
+    bp = round_up(b, tile_b)
+    if bp != b:
+        # sentinel rows, not zeros: a zero pad lane's lb1 can be ~0 when
+        # the envelope straddles zero, which would keep the final tile's
+        # pass-2 cond alive even with every real lane pruned
+        cands = jnp.pad(
+            cands, ((0, bp - b), (0, 0)), constant_values=PAD_VALUE
+        )
+    bounds_col = jnp.asarray(bounds, jnp.float32).reshape(-1, 1)
+    lb1, lb = lb_fused_qbatch_pallas(
+        cands, upper, lower, qs, bounds_col, w, n, p, tile_b, interpret
+    )
+    return lb1[:, :b], lb[:, :b]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused LB stage kernel: the dense query-major
+pass-1/pass-2 forms from ``repro.core.lb``, with the same per-lane
+predication applied after the fact."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import lb as lb_mod
+
+
+def lb_fused_qbatch_ref(cands, qs, upper, lower, w: int, bounds, p=1):
+    lb1 = lb_mod.lb_keogh_powered_qbatch(cands, upper, lower, p)
+    lbi = lb_mod.lb_improved_powered_qbatch(cands, qs, upper, lower, w, p)
+    alive = lb1 < jnp.asarray(bounds).reshape(-1, 1)
+    return lb1, jnp.where(alive, lbi, lb1)

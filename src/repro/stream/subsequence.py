@@ -3,11 +3,11 @@
 The database search answers "which series is nearest to q"; the stream
 workload asks "*where* in an unbounded signal does any template match".
 Both are the same cascade — this module materializes hop-strided window
-blocks from a ``StreamState`` and drives them through the exact staging
-the top-k drivers use (``repro.core.cascade.block_stage_distances``):
-windows are the candidate lanes, templates the query batch, and the
-per-query pruning bound is a fixed powered threshold instead of a
-tightening k-th best.
+blocks from a ``StreamState`` and drives them through the exact stage
+pipeline the top-k drivers use (``repro.core.pipeline.run_block_stages``,
+DESIGN.md §3.6): windows are the candidate lanes, templates the query
+batch, and the per-query pruning bound is a fixed powered threshold
+instead of a tightening k-th best.
 
 Stages per block (windows as lanes, templates as query rows):
 
@@ -20,8 +20,9 @@ Stages per block (windows as lanes, templates as query rows):
       before z-normalized windows are even materialized (the z-transform
       is affine per window, so envelope slices transform in O(n) too).
   S1  LB_Keogh          (batched, one dispatch per block)
-  S2  LB_Improved pass 2 (lax.cond — only if some lane survived)
-  S3  banded DTW        (lax.cond — only if some lane survived)
+  S2  LB_Improved pass 2 (survivor-compacted lane chunks)
+  S3  banded DTW        (survivor-compacted, early-abandoning at the
+                         powered threshold)
 
 A window matches template ``t`` when its powered DTW distance is
 ``<= threshold[t]^p``; pruning uses ``nextafter(threshold^p)`` so the
@@ -49,8 +50,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cascade import Method, block_stage_distances
+from repro.core.cascade import Method
 from repro.core.dtw import PNorm
+from repro.core.pipeline import run_block_stages
 from repro.core.envelope import envelope_batch
 from repro.stream.state import STD_EPS, StreamState
 
@@ -128,10 +130,10 @@ def finish_np(acc: np.ndarray, p: PNorm) -> np.ndarray:
 
 @functools.partial(jax.jit, static_argnames=("w", "p", "method"))
 def _match_block_jit(qs, upper, lower, blk, bound, mask0, w, p, method):
-    """One window block through the shared cascade staging (fixed
+    """One window block through the shared stage pipeline (fixed
     per-template powered bound; lanes masked off by the prefilter are
     neither evaluated nor counted)."""
-    return block_stage_distances(
+    return run_block_stages(
         qs, upper, lower, w, p, method, blk, bound, mask0
     )
 
@@ -159,6 +161,10 @@ class StreamStats:
     blocks_total: int = 0
     blocks_lb2: int = 0
     blocks_dtw: int = 0
+    # DP lane economics, batch-level like blocks_* (DESIGN.md §3.6):
+    # lanes the compacted DP actually executed vs alive lanes among them
+    dp_lane_work: int = 0
+    dp_lane_useful: int = 0
 
     @classmethod
     def zeros(cls, n_templates: int) -> "StreamStats":
@@ -172,6 +178,14 @@ class StreamStats:
         if total == 0:
             return 0.0
         return 1.0 - int(self.full_dtw.sum()) / total
+
+    @property
+    def dp_lane_efficiency(self) -> float:
+        """useful / work of the DP lanes actually executed (1.0 when the
+        DP never ran)."""
+        if self.dp_lane_work == 0:
+            return 1.0
+        return self.dp_lane_useful / self.dp_lane_work
 
 
 class SubsequenceScanner:
@@ -291,7 +305,7 @@ class SubsequenceScanner:
             self.stats.env_pruned += (mask0 & ~alive0).sum(axis=1)
             mask0 = alive0
 
-        d, a1, a2, _ = _match_block_jit(
+        res = _match_block_jit(
             self._qs_j,
             self._u_j,
             self._l_j,
@@ -302,9 +316,9 @@ class SubsequenceScanner:
             self.p,
             self.method,
         )
-        d = np.asarray(d)
-        a1 = np.asarray(a1)
-        a2 = np.asarray(a2)
+        d = np.asarray(res.d)
+        a1 = np.asarray(res.alive1)
+        a2 = np.asarray(res.alive2)
 
         st = self.stats
         st.n_windows += n_valid
@@ -312,8 +326,10 @@ class SubsequenceScanner:
         st.lb2_pruned += (a1 & ~a2).sum(axis=1)
         st.full_dtw += a2.sum(axis=1)
         st.blocks_total += 1
-        st.blocks_lb2 += int(a1.any() and self.method == "lb_improved")
-        st.blocks_dtw += int(a2.any())
+        st.blocks_lb2 += int(res.need_lb2)
+        st.blocks_dtw += int(res.need_dtw)
+        st.dp_lane_work += int(res.dp_lane_work)
+        st.dp_lane_useful += int(res.dp_lane_useful)
 
         hit = d <= self.thr_pow[:, None]
         st.matched += hit.sum(axis=1)

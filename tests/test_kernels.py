@@ -6,9 +6,13 @@ import pytest
 
 from repro.core.dtw import dtw_reference
 from repro.core.envelope import envelope, envelope_batch, envelope_naive
+from repro.core.lb import lb_keogh_powered_qbatch
 from repro.kernels import (
+    dtw_early_ref,
     dtw_op,
     dtw_ref,
+    lb_fused_qbatch_op,
+    lb_fused_qbatch_ref,
     envelope_op,
     envelope_ref,
     lb_improved_op,
@@ -186,6 +190,74 @@ def test_dtw_kernel_powered():
     d2 = dtw_op(jnp.asarray(q), jnp.asarray(xs), 6, 2, powered=True, interpret=True)
     d = dtw_op(jnp.asarray(q), jnp.asarray(xs), 6, 2, powered=False, interpret=True)
     np.testing.assert_allclose(np.asarray(d) ** 2, np.asarray(d2), rtol=1e-3)
+
+
+@pytest.mark.parametrize("b,n,w", SHAPES)
+@pytest.mark.parametrize("p", [1, 2])
+def test_dtw_kernel_early_abandon(b, n, w, p):
+    """While-loop kernel vs ``dtw_banded_early`` (the host twin): exact
+    below the bound, >= bound when abandoned, bit-matched either way."""
+    xs = RNG.normal(size=(b, n)).astype(np.float32).cumsum(axis=1)
+    q = RNG.normal(size=n).astype(np.float32).cumsum()
+    true = np.array([dtw_reference(q, c, w, p) for c in xs])
+    true_pow = true if p == 1 else true**p
+    # bounds straddling the true distances: some lanes abandon, some not
+    fracs = np.resize([0.2, 0.7, 1.0, 1.4], b)
+    bounds = (true_pow * fracs).astype(np.float32)
+    got = np.asarray(
+        dtw_op(
+            jnp.asarray(q), jnp.asarray(xs), w, p,
+            powered=True, bounds=jnp.asarray(bounds), interpret=True,
+        )
+    )
+    want = np.asarray(
+        dtw_early_ref(jnp.asarray(q), jnp.asarray(xs), w, jnp.asarray(bounds), p)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+    abandoned = 0
+    for i in range(b):
+        if got[i] < bounds[i]:  # finished: exact powered DTW
+            np.testing.assert_allclose(
+                got[i], true_pow[i], rtol=3e-4, atol=1e-5
+            )
+        else:  # abandoned: still a valid lower bound
+            abandoned += 1
+            assert true_pow[i] >= bounds[i] - 1e-3 * max(1.0, abs(true_pow[i]))
+    assert abandoned > 0  # the sweep must actually exercise abandonment
+
+
+@pytest.mark.parametrize("nq,b,n,w", QBATCH_SHAPES)
+@pytest.mark.parametrize("p", [1, 2])
+def test_lb_fused_kernel(nq, b, n, w, p):
+    """Single-launch fused LB_Keogh -> LB_Improved (DESIGN.md §3.6) vs
+    the dense two-kernel oracle, pass 2 predicated per lane."""
+    xs = jnp.asarray(RNG.normal(size=(b, n)).astype(np.float32).cumsum(axis=1))
+    qs = jnp.asarray(RNG.normal(size=(nq, n)).astype(np.float32).cumsum(axis=1))
+    u, l = envelope_batch(qs, w)
+    lb1_true = np.asarray(lb_keogh_powered_qbatch(xs, u, l, p))
+    # per-query bounds that keep ~40% of lanes alive into pass 2
+    bounds = jnp.asarray(np.quantile(lb1_true, 0.4, axis=1).astype(np.float32))
+    lb1, lb = lb_fused_qbatch_op(xs, qs, u, l, w, bounds, p, interpret=True)
+    lb1r, lbr = lb_fused_qbatch_ref(xs, qs, u, l, w, bounds, p)
+    np.testing.assert_allclose(np.asarray(lb1), np.asarray(lb1r), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(lb), np.asarray(lbr), rtol=2e-4)
+    # pruned lanes must carry lb1 unchanged (pass 2 predicated away)
+    dead = np.asarray(lb1) >= np.asarray(bounds)[:, None]
+    np.testing.assert_array_equal(np.asarray(lb)[dead], np.asarray(lb1)[dead])
+    assert dead.any() and (~dead).any()
+
+
+def test_lb_fused_kernel_matches_unfused_chain():
+    """The fused kernel's alive lanes equal the two-launch kernel chain
+    (lb_keogh_qbatch_op + pass 2) — same values, one HBM sweep."""
+    nq, b, n, w, p = 4, 16, 80, 8, 2
+    xs = jnp.asarray(RNG.normal(size=(b, n)).astype(np.float32).cumsum(axis=1))
+    qs = jnp.asarray(RNG.normal(size=(nq, n)).astype(np.float32).cumsum(axis=1))
+    u, l = envelope_batch(qs, w)
+    bounds = jnp.full((nq,), 1e30, jnp.float32)  # everything alive
+    _, lb = lb_fused_qbatch_op(xs, qs, u, l, w, bounds, p, interpret=True)
+    chain = lb_improved_qbatch_op(xs, qs, u, l, w, p, interpret=True)
+    np.testing.assert_allclose(np.asarray(lb), np.asarray(chain), rtol=1e-5)
 
 
 def test_envelope_kernel_odd_batch_padding():

@@ -1,0 +1,282 @@
+"""Survivor-compacted pipeline == pre-refactor all-or-nothing staging.
+
+The refactor (DESIGN.md §3.6) replaced ``block_stage_distances`` — dense
+tiles gated by block-granular ``lax.cond`` — with the compacted stage
+pipeline of ``repro.core.pipeline``.  These tests pin the new execution
+to the old semantics:
+
+* block level: ``run_block_stages`` vs a verbatim reimplementation of
+  the deleted dense staging — alive masks bit-equal, distances bit-equal
+  wherever they are below the lane's bound (the early-abandoning DP may
+  return any value >= bound on lanes the bound already excludes);
+* driver level: ``nn_search_scan`` vs a numpy replay of the old scan
+  driver built on the dense oracle — top-k values, indices and
+  per-query stage counters bit-equal across p × method × query batches
+  × ragged final block;
+* entry-masked lanes (the indexed path's stage-0 survivors) are neither
+  evaluated nor counted, exactly as before;
+* the new ``dp_lane_work`` / ``dp_lane_useful`` counters: useful equals
+  the lanes that reached the DP, work never exceeds the all-or-nothing
+  baseline and is an over-approximation of useful by at most the chunk
+  rounding.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cascade import nn_search_scan
+from repro.core.dtw import BIG, dtw_qbatch
+from repro.core.envelope import envelope_batch
+from repro.core import lb as lb_mod
+from repro.core.pipeline import LANE_CHUNK, run_block_stages
+
+RNG = np.random.default_rng(17)
+
+PS = [1, 2, np.inf]
+METHODS = ["full", "lb_keogh", "lb_improved"]
+
+
+def staging_oracle(qs, upper, lower, w, p, method, blk, bound, mask0):
+    """The deleted ``block_stage_distances``, verbatim: dense tiles,
+    all-or-nothing gating.  Returns (d, alive1, alive2)."""
+    nq = qs.shape[0]
+    block = blk.shape[0]
+    if method == "full":
+        alive1 = mask0
+        alive2 = alive1
+    else:
+        lb1 = lb_mod.lb_keogh_powered_qbatch(blk, upper, lower, p)
+        alive1 = mask0 & (lb1 < bound[:, None])
+        if method == "lb_keogh":
+            alive2 = alive1
+        else:
+            lb = jnp.where(
+                jnp.any(alive1),
+                lb_mod.lb_improved_powered_qbatch(blk, qs, upper, lower, w, p),
+                lb1,
+            )
+            alive2 = alive1 & (lb < bound[:, None])
+    d = jnp.where(
+        jnp.any(alive2),
+        dtw_qbatch(qs, blk, w, p, powered=True),
+        jnp.full((nq, block), BIG),
+    )
+    return jnp.where(alive2, d, BIG), alive1, alive2
+
+
+def _problem(nq, block, n, seed):
+    rng = np.random.default_rng(seed)
+    qs = rng.normal(size=(nq, n)).astype(np.float32).cumsum(axis=1)
+    blk = rng.normal(size=(block, n)).astype(np.float32).cumsum(axis=1)
+    return jnp.asarray(qs), jnp.asarray(blk)
+
+
+@pytest.mark.parametrize("p", PS)
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("masked", [False, True])
+def test_block_stages_match_dense_oracle(p, method, masked):
+    nq, block, n, w = 3, 48, 60, 6
+    qs, blk = _problem(nq, block, n, seed=23)
+    upper, lower = envelope_batch(qs, w)
+    # a mid-scan bound: tight enough to prune, loose enough to keep lanes
+    d_all = np.asarray(dtw_qbatch(qs, blk, w, p, powered=True))
+    bound = jnp.asarray(
+        np.quantile(d_all, 0.3, axis=1).astype(np.float32)
+    )
+    if masked:  # the indexed path's stage-0 entry mask, incl. a dead row
+        m = np.random.default_rng(7).random((nq, block)) < 0.6
+        m[1] = False
+        mask0 = jnp.asarray(m)
+    else:
+        mask0 = jnp.ones((nq, block), bool)
+
+    res = run_block_stages(
+        qs, upper, lower, w, p, method, blk, bound, mask0
+    )
+    d_ref, a1_ref, a2_ref = staging_oracle(
+        qs, upper, lower, w, p, method, blk, bound, mask0
+    )
+    np.testing.assert_array_equal(np.asarray(res.alive1), np.asarray(a1_ref))
+    np.testing.assert_array_equal(np.asarray(res.alive2), np.asarray(a2_ref))
+    d = np.asarray(res.d)
+    d_ref = np.asarray(d_ref)
+    bnd = np.asarray(bound)[:, None]
+    # below the bound both paths are the exact DP, bit for bit; at or
+    # above it the compacted DP may abandon with any value >= bound
+    exact = d < bnd
+    np.testing.assert_array_equal(d[exact], d_ref[exact])
+    # abandoned lanes: the dense oracle's exact value clears the bound too
+    abandoned = ~exact & np.asarray(a2_ref)
+    bnd_full = np.broadcast_to(bnd, d.shape)
+    assert np.all(d_ref[abandoned] >= bnd_full[abandoned] - 1e-6)
+    # lanes that never reached the DP stay BIG (as stored in fp32)
+    np.testing.assert_array_equal(
+        d[~np.asarray(a2_ref)], np.float32(BIG)
+    )
+    # counter semantics
+    assert int(res.dp_lane_useful) == int(np.asarray(a2_ref).sum())
+    work = int(res.dp_lane_work)
+    useful = int(res.dp_lane_useful)
+    assert work >= useful
+    if useful > 0:
+        assert work <= max(
+            nq * block,  # dense fallback ceiling (the old baseline)
+            -(-useful // LANE_CHUNK) * LANE_CHUNK,
+        )
+    else:
+        assert work == 0
+
+
+def replay_scan_oracle(qs, db, w, p, k, block, method):
+    """Numpy replay of the pre-refactor scan driver: dense staging oracle
+    per block + stable top-k merge, per-query counters."""
+    nq, n = qs.shape
+    w = int(min(w, n - 1))
+    n_db = db.shape[0]
+    upper, lower = envelope_batch(jnp.asarray(qs), w)
+    top_v = np.full((nq, k), BIG)
+    top_i = np.full((nq, k), -1, np.int64)
+    c1 = np.zeros(nq, np.int64)
+    c2 = np.zeros(nq, np.int64)
+    c3 = np.zeros(nq, np.int64)
+    pad = (-n_db) % block
+    dbp = np.concatenate(
+        [db, np.full((pad, n), 0.5 * BIG**0.25, db.dtype)], axis=0
+    )
+    for lo in range(0, dbp.shape[0], block):
+        blk = jnp.asarray(dbp[lo : lo + block])
+        cand_i = np.arange(lo, lo + block)
+        mask0 = np.broadcast_to((cand_i < n_db)[None, :], (nq, block))
+        bound = jnp.asarray(top_v[:, -1].astype(np.float32))
+        d, a1, a2 = staging_oracle(
+            jnp.asarray(qs), upper, lower, w, p, method,
+            blk, bound, jnp.asarray(mask0),
+        )
+        d, a1, a2 = np.asarray(d), np.asarray(a1), np.asarray(a2)
+        for qi in range(nq):
+            av = np.concatenate([top_v[qi], d[qi]])
+            ai = np.concatenate([top_i[qi], cand_i])
+            order = np.argsort(av, kind="stable")[:k]  # == lax.top_k ties
+            top_v[qi], top_i[qi] = av[order], ai[order]
+        c1 += (mask0 & ~a1).sum(axis=1)
+        c2 += (a1 & ~a2).sum(axis=1)
+        c3 += a2.sum(axis=1)
+    return top_v, top_i, c1, c2, c3
+
+
+@pytest.mark.parametrize("p", PS)
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize(
+    "nq,n_db,block,k",
+    [
+        (1, 90, 32, 1),  # ragged final block, single query
+        (3, 100, 32, 2),  # ragged final block, batch, k > 1
+        (2, 64, 16, 1),  # exact blocking
+    ],
+)
+def test_scan_driver_bitmatches_prerefactor_replay(p, method, nq, n_db, block, k):
+    n, w = 48, 5
+    rng = np.random.default_rng(int(13 + n_db + (0 if p == np.inf else p)))
+    db = rng.normal(size=(n_db, n)).astype(np.float32).cumsum(axis=1)
+    qs = np.stack(
+        [db[rng.integers(0, n_db)] + rng.normal(scale=0.3, size=n).astype(np.float32)
+         for _ in range(nq)]
+    )
+    pj = jnp.inf if p == np.inf else p
+    res = nn_search_scan(qs, db, w=w, p=pj, k=k, block=block, method=method)
+    top_v, top_i, c1, c2, c3 = replay_scan_oracle(
+        qs, db, w, pj, k, block, method
+    )
+    # powered top-k values are bit-equal; compare in the powered domain
+    # by replaying finish_cost on the oracle values
+    from repro.core.dtw import finish_cost
+
+    want_d = np.asarray(finish_cost(jnp.asarray(top_v), pj))
+    np.testing.assert_array_equal(res.distances, want_d)
+    np.testing.assert_array_equal(res.indices, top_i)
+    for qi in range(nq):
+        s = res.per_query[qi] if nq > 1 else res.stats
+        assert s.lb1_pruned == c1[qi]
+        assert s.lb2_pruned == c2[qi]
+        assert s.full_dtw == c3[qi]
+        assert s.lb1_pruned + s.lb2_pruned + s.full_dtw == n_db
+    # DP lane accounting: useful lanes == candidates that reached the DP
+    stats = res.stats
+    assert stats.dp_lane_useful == int(c3.sum())
+    assert stats.dp_lane_work >= stats.dp_lane_useful
+    # never worse than the all-or-nothing baseline (one whole (Q, block)
+    # tile per block in which any lane survived)
+    assert stats.dp_lane_work <= nq * block * stats.blocks_dtw
+
+
+def test_compaction_reduces_dp_lane_work():
+    """The point of the refactor: with few survivors per block, executed
+    DP lanes must be far below the all-or-nothing whole-tile count."""
+    rng = np.random.default_rng(2)
+    n_db, n, w, block, nq = 512, 64, 6, 64, 8
+    db = rng.normal(size=(n_db, n)).astype(np.float32).cumsum(axis=1)
+    # unrelated (cold) queries: every block keeps a few straggler lanes,
+    # which the old gating paid a whole (Q, block) DP tile for
+    qs = rng.normal(size=(nq, n)).astype(np.float32).cumsum(axis=1)
+    res = nn_search_scan(qs, db, w=w, p=2, block=block, method="lb_improved")
+    s = res.stats
+    baseline = nq * block * s.blocks_dtw  # old: whole (Q, block) tiles
+    assert s.dp_lane_useful == s.full_dtw
+    assert s.dp_lane_work >= s.dp_lane_useful
+    assert s.blocks_dtw > 0 and baseline > 0
+    assert s.dp_lane_work < baseline / 2, (
+        f"compaction saved too little: work={s.dp_lane_work} "
+        f"vs baseline={baseline}"
+    )
+
+
+def test_full_method_dense_fallback_counts_whole_tiles():
+    """method='full' keeps every lane alive, so the pipeline's dense
+    fallback runs whole tiles and the counters say so."""
+    rng = np.random.default_rng(4)
+    db = rng.normal(size=(64, 32)).astype(np.float32).cumsum(axis=1)
+    q = rng.normal(size=32).astype(np.float32).cumsum()
+    res = nn_search_scan(q, db, w=4, p=1, block=32, method="full")
+    s = res.stats
+    assert s.full_dtw == 64
+    assert s.dp_lane_useful == 64
+    assert s.dp_lane_work == 64  # dense tiles, zero padding waste
+
+
+def test_stream_pipeline_counters():
+    """The stream scanner rides the same pipeline: counters flow and the
+    invariant env + lb1 + lb2 + dtw == windows holds per template."""
+    from repro.stream import windowed_matches
+
+    rng = np.random.default_rng(11)
+    stream = rng.normal(size=4096).astype(np.float32).cumsum()
+    templates = np.stack(
+        [stream[100:164].copy(), rng.normal(size=64).astype(np.float32).cumsum()]
+    )
+    matches, stats = windowed_matches(
+        stream, templates, w=6, threshold=2.0, p=2, hop=4, block=32
+    )
+    total = stats.env_pruned + stats.lb1_pruned + stats.lb2_pruned + stats.full_dtw
+    np.testing.assert_array_equal(total, stats.n_windows)
+    assert stats.dp_lane_useful == int(stats.full_dtw.sum())
+    assert stats.dp_lane_work >= stats.dp_lane_useful
+
+
+@pytest.mark.parametrize("p", [1, 2])
+def test_indexed_entry_mask_still_exact(p):
+    """Masked (stage-0 survivor) lanes through the compacted pipeline:
+    the indexed search still returns the plain scan's neighbours."""
+    from repro.index import build_index
+    from repro.core.cascade import nn_search_indexed
+
+    rng = np.random.default_rng(31)
+    db = rng.normal(size=(160, 48)).astype(np.float32).cumsum(axis=1)
+    qs = np.stack([db[7] + 0.05 * rng.normal(size=48).astype(np.float32),
+                   db[91] + 0.05 * rng.normal(size=48).astype(np.float32)])
+    index = build_index(db, w=5, p=p, n_refs=8, seed=0)
+    got = nn_search_indexed(qs, db, index, k=3)
+    ref = nn_search_scan(qs, db, w=5, p=p, k=3)
+    np.testing.assert_allclose(got.distances, ref.distances, rtol=1e-4)
+    s = got.stats
+    assert s.dp_lane_work >= s.dp_lane_useful
