@@ -1,12 +1,14 @@
 """Stage-0 triangle-index pruning vs the LB_Keogh-only cascade.
 
-For each series family (random walk / CBF / white noise) we build a
-reference index and answer the same queries twice: through the 4-stage
-``nn_search_indexed`` and through the plain LB_Keogh scan.  Reported
-per row: query latency, the stage-0 pruning ratio (candidates killed
-with O(R) arithmetic before any envelope work), and the end-to-end DP
-ratio of both paths.  Neighbours are asserted identical — stage 0 is
-exact, never approximate.
+For each series family (random walk / CBF / white noise) we build an
+indexed ``repro.api.Database`` session (build-once: envelopes, powered
+norms, the reference index) and answer the same queries twice: through
+the session's planned 4-stage indexed cascade (``db.search``) and
+through the plain LB_Keogh scan.  Reported per row: query latency, the
+stage-0 pruning ratio (candidates killed with O(R) arithmetic before
+any envelope work), and the end-to-end DP ratio of both paths.
+Neighbours are asserted identical — stage 0 is exact, never
+approximate.
 
 p = inf is where Theorem 1 bites hardest (c = 1: DTW_inf is a metric,
 LB_tri is the exact reverse triangle inequality); the p = 1 rows show
@@ -22,9 +24,9 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cascade import nn_search_indexed, nn_search_scan
+from repro.api import Database, SearchConfig
+from repro.core.cascade import nn_search_scan
 from repro.data.synthetic import cylinder_bell_funnel, random_walks, white_noise
-from repro.index import build_index
 
 FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
 
@@ -45,25 +47,32 @@ def run(report):
     n_refs = 12 if FAST else 32
     w = length // 10
 
-    for fam, db in _families(rng, n_db, length).items():
+    for fam, data in _families(rng, n_db, length).items():
         for p_name, p in (("inf", jnp.inf), ("1", 1)):
             t0 = time.perf_counter()
-            index = build_index(db, w=w, p=p, n_refs=n_refs, seed=0)
+            db = Database.build(
+                data, SearchConfig(w=w, p=p), index=True, n_refs=n_refs,
+                seed=0,
+            )
             build_s = time.perf_counter() - t0
-            report(f"index/{fam}/p{p_name}/build", build_s * 1e6, f"R={n_refs}")
+            report(
+                f"index/{fam}/p{p_name}/build",
+                build_s * 1e6,
+                f"R={n_refs} (session build: envelopes+norms+index)",
+            )
 
             qs = np.asarray(
-                db[rng.integers(0, n_db, n_queries)]
+                data[rng.integers(0, n_db, n_queries)]
                 + rng.normal(scale=0.5, size=(n_queries, length)).astype(np.float32)
             )
             stage0 = dtw_idx = dtw_base = 0
             t_idx = t_base = 0.0
             for q in qs:
                 t0 = time.perf_counter()
-                r_idx = nn_search_indexed(q, db, index)
+                r_idx = db.search(q)  # planner routes through the index
                 t_idx += time.perf_counter() - t0
                 t0 = time.perf_counter()
-                r_base = nn_search_scan(q, db, w=w, p=p, method="lb_keogh")
+                r_base = nn_search_scan(q, data, w=w, p=p, method="lb_keogh")
                 t_base += time.perf_counter() - t0
                 assert r_idx.index == r_base.index or np.isclose(
                     r_idx.distance, r_base.distance, rtol=1e-3

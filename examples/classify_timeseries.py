@@ -1,7 +1,13 @@
 """Paper Section 7: which DTW_p classifies best?
 
 1-NN classification over Cylinder-Bell-Funnel with p in {1, 2, 4, inf}
-(reduced replication of Figure 2) — DTW_1 should win or tie.
+(reduced replication of Figure 2) — DTW_1 should win or tie.  The
+session API serves the kernel-specialised norms {1, 2, inf}: one
+``Database`` per norm is built over the training set (build-once
+envelopes amortize across the whole test sweep) and ``db.classify``
+predicts every test series in one query-major sweep.  The DTW_4 row
+goes through the legacy ``classification_accuracy`` shim, which stays
+public for exactly this kind of off-menu norm.
 
     PYTHONPATH=src python examples/classify_timeseries.py
 """
@@ -9,6 +15,7 @@
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Database, SearchConfig
 from repro.core.classify import classification_accuracy
 from repro.data.synthetic import cylinder_bell_funnel
 
@@ -20,8 +27,15 @@ w = train_x.shape[1] // 10
 print(f"train {train_x.shape}, test {test_x.shape}, w={w}")
 accs = {}
 for p in (1, 2, 4, jnp.inf):
-    acc = classification_accuracy(test_x, test_y, train_x, train_y, w=w, p=p)
     name = "inf" if p == jnp.inf else p
+    if p == 4:  # off-menu norm: the legacy entry points still serve it
+        acc = classification_accuracy(
+            test_x, test_y, train_x, train_y, w=w, p=p
+        )
+    else:
+        db = Database.build(train_x, SearchConfig(w=w, p=p))
+        pred = db.classify(train_y, test_x)
+        acc = float(np.mean(pred == test_y))
     accs[name] = acc
     print(f"DTW_{name}: accuracy {acc:.3f}")
 best = max(accs, key=accs.get)

@@ -1,19 +1,25 @@
-"""Quickstart: the paper in 60 seconds.
+"""Quickstart: the paper in 60 seconds, through the session API.
 
-Builds a random-walk time-series database, searches it with the full
-scan, LB_Keogh (Algorithm 2) and the paper's two-pass LB_Improved
-(Algorithm 3), and prints pruning power + speedup — the paper's headline
-result (Figures 6-10).  Then serves a whole *batch* of queries through
-one query-major sweep (DESIGN.md §3.4) and checks it returns exactly
-what the per-query loop returned.
+Builds a ``repro.api.Database`` over a random-walk time-series database
+(build-once artifacts: envelopes, powered norms, device upload), then
+searches it with the full scan, LB_Keogh (Algorithm 2) and the paper's
+two-pass LB_Improved (Algorithm 3), printing pruning power + speedup —
+the paper's headline result (Figures 6-10).  Then: the planner's
+explanation of the routing, a whole query batch through one query-major
+sweep (DESIGN.md §3.4, checked against the legacy per-call entry
+point), and a ``save`` -> ``load`` round trip showing the session
+serves warm with zero rebuild.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import os
+import tempfile
 import time
 
 import numpy as np
 
+from repro.api import Database, SearchConfig
 from repro.core.cascade import nn_search_host
 from repro.data.synthetic import random_walks
 
@@ -21,15 +27,18 @@ rng = np.random.default_rng(0)
 N_DB, LENGTH = 2000, 512
 W = LENGTH // 10  # paper's locality constraint
 
-db = random_walks(rng, N_DB, LENGTH)
+data = random_walks(rng, N_DB, LENGTH)
 query = random_walks(rng, 1, LENGTH)[0]
 
 print(f"database: {N_DB} random walks x {LENGTH} samples, w={W} (DTW_1)\n")
+# one build serves every method: the cached artifacts depend only on
+# (w, p, precision, znorm), so the stage pipeline is a per-call override
+db = Database.build(data, SearchConfig(w=W))
 results = {}
 for method in ("full", "lb_keogh", "lb_improved"):
-    nn_search_host(query, db[:64], w=W, method=method)  # warm up compile
+    db.search(data[0], driver="host", method=method)  # warm up compile
     t0 = time.perf_counter()
-    res = nn_search_host(query, db, w=W, method=method)
+    res = db.search(query, driver="host", method=method)
     dt = time.perf_counter() - t0
     results[method] = (res, dt)
     s = res.stats
@@ -47,17 +56,37 @@ print(
 assert results["full"][0].index == results["lb_improved"][0].index
 print("all three methods agree on the nearest neighbour (exactness).\n")
 
+# ---- the planner, explained: why this database takes the host pipeline
+print(db.plan(query).explain(), "\n")
+
 # ---- query-major batching (DESIGN.md §3.4): one sweep, many queries
 queries = random_walks(rng, 8, LENGTH)
-batched = nn_search_host(queries, db, w=W, method="lb_improved")
+batched = db.search(queries)  # warm the (Q, n) specialisation
 t0 = time.perf_counter()
-batched = nn_search_host(queries, db, w=W, method="lb_improved")
+batched = db.search(queries)
 bt = time.perf_counter() - t0
 print(
     f"batched: {len(batched)} queries in one sweep, {bt*1e3:.1f} ms "
     f"({len(batched)/bt:.1f} queries/sec)"
 )
-for i, res in enumerate(batched):  # BatchSearchResult iterates per query
-    single = nn_search_host(queries[i], db, w=W, method="lb_improved")
-    assert res.index == single.index and res.distance == single.distance
-print("batched results identical to the per-query loop (exactness).")
+# the facade routes onto the legacy entry points bit-for-bit
+legacy = nn_search_host(queries, data, w=W, block=32, method="lb_improved")
+assert np.array_equal(batched.distances, legacy.distances)
+assert np.array_equal(batched.indices, legacy.indices)
+print("facade results identical to the legacy nn_search_host call (exactness).")
+
+# ---- persist the session, serve warm: build once, query many
+with tempfile.TemporaryDirectory() as td:
+    path = db.save(os.path.join(td, "session.npz"))
+    size_mb = os.path.getsize(path) / 2**20
+    warm = Database.load(path)
+    warm.search(query)  # warm the jit cache
+    t0 = time.perf_counter()
+    r2 = warm.search(query)
+    warm_t = time.perf_counter() - t0
+assert r2.index == results["lb_improved"][0].index
+print(
+    f"saved bundle {size_mb:.1f} MiB; reloaded session answers in "
+    f"{warm_t*1e3:.1f} ms with zero rebuild (envelopes, norms and config "
+    f"ride in the bundle)."
+)

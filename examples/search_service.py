@@ -1,10 +1,12 @@
 """Distributed DTW search service (the paper's system, sharded + batched).
 
 Runs with 8 virtual host devices to demonstrate the serving path end to
-end: the DB shards over all devices, a queue of queries drains through
-query-major microbatches (DESIGN.md §3.4), each batch rides one sharded
-sweep of the two-pass cascade, and the per-query best-bound lanes are
-pmin-exchanged between rounds.
+end through the session API: one ``repro.api.Database`` is built (its
+artifacts computed once), a mesh is attached so the planner routes onto
+the sharded driver, and a queue of queries drains through query-major
+microbatches (DESIGN.md §3.4) — each batch rides one sharded sweep with
+per-query best-bound lanes pmin-exchanged between rounds.  Results are
+checked against the same session's single-device scan.
 
     PYTHONPATH=src python examples/search_service.py
 """
@@ -19,35 +21,30 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 
-from repro.core.cascade import nn_search_scan  # noqa: E402
-from repro.core.distributed import pad_database, sharded_nn_search  # noqa: E402
-from repro.data.synthetic import random_walks  # noqa: E402
+from repro.api import Database, SearchConfig  # noqa: E402
 from repro.launch.search import drain_queries  # noqa: E402
+from repro.data.synthetic import random_walks  # noqa: E402
 
 rng = np.random.default_rng(0)
-db = random_walks(rng, 2048, 256)
+data = random_walks(rng, 2048, 256)
 queries = random_walks(rng, 10, 256)  # the incoming query queue
-w = 25
 QUERY_BATCH = 4  # ragged final batch (10 % 4 != 0) is handled by the drain
 
+db = Database.build(data, SearchConfig(w=25, block=16))
 devs = np.array(jax.devices())
 mesh = Mesh(devs.reshape(2, 4), ("data", "model"))
-dbp, n_real = pad_database(db, mesh, block=16)
+db.use_mesh(mesh, sync_every=4)
 print(
-    f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))}, db {n_real} series, "
-    f"query_batch={QUERY_BATCH}"
+    f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))}, db {db.n_rows} "
+    f"series, query_batch={QUERY_BATCH}"
 )
+print(db.plan(queries).explain())
 
-# reference answers from the local single-device scan (also batched)
-local = nn_search_scan(queries, db, w=w, method="lb_improved")
-
-
-def search_block(block_q):
-    return sharded_nn_search(block_q, dbp, mesh, w=w, block=16, sync_every=4)
-
+# reference answers from the same session's single-device scan
+local = db.search(queries, driver="scan")
 
 t0 = time.perf_counter()
-for qi, res in enumerate(drain_queries(queries, search_block, QUERY_BATCH)):
+for qi, res in enumerate(drain_queries(queries, db.search, QUERY_BATCH)):
     s = res.stats
     assert res.index == local[qi].index, (qi, res.index, local[qi].index)
     print(

@@ -1,0 +1,33 @@
+"""Unified session API: build-once artifacts, one entry point (DESIGN.md §3.7).
+
+    from repro.api import Database, SearchConfig
+
+    cfg = SearchConfig(w=0, p="inf", k=5)        # validated up front
+    db  = Database.build(data, cfg, index=True)  # envelopes + norms + index
+    print(db.plan(queries).explain())            # driver + stages + why
+    res = db.search(queries)                     # routed, exact, amortized
+    db.save("session.npz")                       # one-file bundle
+    db2 = Database.load("session.npz")           # query again, no rebuild
+
+``Database`` replaces the five ad-hoc entry points (``nn_search_scan`` /
+``nn_search_host`` / ``nn_search_indexed`` / ``sharded_nn_search`` /
+``StreamMatcher``) with one session object; the legacy functions remain
+public and bit-identical — the facade routes onto them, it never forks
+the numerics.  ``tests/test_api_surface.py`` pins this module's surface
+against a checked-in snapshot so accidental breaking changes fail CI.
+"""
+
+from repro.api.config import SUPPORTED_P, SUPPORTED_PRECISION, SearchConfig
+from repro.api.database import BUNDLE_FORMAT_VERSION, Database
+from repro.api.planner import DRIVERS, Plan, plan_search
+
+__all__ = [
+    "BUNDLE_FORMAT_VERSION",
+    "DRIVERS",
+    "Database",
+    "Plan",
+    "SUPPORTED_P",
+    "SUPPORTED_PRECISION",
+    "SearchConfig",
+    "plan_search",
+]

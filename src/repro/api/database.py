@@ -1,0 +1,521 @@
+"""Database: the build-once / query-many session facade (DESIGN.md §3.7).
+
+The paper's whole pitch is amortization — spend a little once to skip
+quadratic DTW work on every query — yet the low-level entry points
+(``nn_search_scan`` / ``nn_search_host`` / ``nn_search_indexed`` /
+``sharded_nn_search`` / ``StreamMatcher``) each re-derive per-database
+artifacts per call and each take their own kwargs.  ``Database`` is the
+index lifecycle those drivers were missing:
+
+    cfg = SearchConfig(w=0, p="inf" and friends validated up front)
+    db  = Database.build(data, cfg, index=True)   # build once
+    db.plan(queries).explain()                    # see the routing
+    res = db.search(queries)                      # query many
+    db.save("session.npz"); Database.load(...)    # persist the bundle
+
+``build`` computes every database-side artifact exactly once: the
+(z-normalized, precision-cast) rows uploaded to device, their warping
+envelopes, the float64 powered row norms (per-row scale in O(1) via
+``row_mean_std``), and optionally the stage-0 triangle index.  Query-side
+work (query envelopes, the cascade itself) stays lazy per call — it
+depends on the query, not the database (tests/test_api_database.py pins
+that a second ``search`` performs zero database-side envelope
+recomputation).  ``search``/``topk``/``classify``/``stream`` all route
+through the planner (``repro.api.planner``) onto the legacy drivers,
+which remain public and bit-identical — the facade adds no numeric path
+of its own, so every result is pinned to the corresponding low-level
+call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import SearchConfig
+from repro.api.planner import Plan, plan_search
+from repro.core.cascade import (
+    BatchSearchResult,
+    SearchResult,
+    nn_search_host,
+    nn_search_indexed,
+    nn_search_scan,
+)
+from repro.core.envelope import envelope_batch
+from repro.index.build import TriangleIndex, build_index
+from repro.index.store import index_arrays, index_from_arrays, npz_path
+from repro.stream.state import STD_EPS
+
+BUNDLE_FORMAT_VERSION = 1
+
+
+def _znorm_rows(
+    rows: np.ndarray, eps: float = STD_EPS, dtype="float32"
+) -> np.ndarray:
+    """Per-row global z-normalization, vectorized over rows.  For float32
+    this is bit-identical to the stream scanner's ``znorm_series`` (the
+    axis-1 reductions use the same pairwise summation over the same row
+    bytes, same op order, same final cast — pinned by the facade parity
+    tests); float64 keeps the full precision the session was configured
+    for instead of round-tripping through f32."""
+    x64 = np.asarray(rows, np.float64)
+    mean = x64.mean(axis=1, keepdims=True)
+    std = np.maximum(x64.std(axis=1, keepdims=True), eps)
+    return ((x64 - mean) / std).astype(dtype)
+
+
+def _require_x64_for(config: SearchConfig) -> None:
+    """float64 artifacts are a lie unless JAX x64 is on — device ops
+    would silently downcast; enforced at build *and* load."""
+    if config.precision != "float64":
+        return
+    import jax
+
+    if not jax.config.jax_enable_x64:
+        raise ValueError(
+            "precision='float64' needs JAX x64: set JAX_ENABLE_X64=1 (or "
+            "jax.config.update('jax_enable_x64', True)) before "
+            "building/loading; with x64 disabled device ops would "
+            "silently downcast"
+        )
+
+
+class Database:
+    """One searchable time-series database session.
+
+    Construct with :meth:`build` or :meth:`load`, never directly.  All
+    artifacts are tied to the frozen :class:`SearchConfig` the session
+    was built under; per-call overrides are limited to what cannot
+    invalidate them (``k``, the driver choice, stream thresholds).
+    """
+
+    def __init__(
+        self,
+        *,
+        raw: np.ndarray,
+        data: np.ndarray,
+        config: SearchConfig,
+        w: int,
+        upper: np.ndarray,
+        lower: np.ndarray,
+        row_sums: np.ndarray,
+        row_sumsq: np.ndarray,
+        index: TriangleIndex | None,
+    ):
+        self.raw = raw  # as given (precision-cast), what save() persists
+        self.data = data  # znormed when config.znorm, else raw itself
+        self.config = config
+        self.w = w  # resolved band half-width (config.w or n // 10)
+        self.upper = upper  # (N, n) db-row envelopes at band w
+        self.lower = lower
+        # (N,) float64 powered norms of the raw rows (sum x, sum x^2):
+        # cached so per-row scale is O(1) for callers (row_mean_std,
+        # external calibration) instead of an O(N n) sweep per use; the
+        # cascade itself never consumes them — its bounds are envelope-
+        # based — so they ride the bundle as a serving-side artifact
+        self.row_sums = row_sums
+        self.row_sumsq = row_sumsq
+        self.index = index
+        self._db_j = jnp.asarray(self.data)  # device-resident, uploaded once
+        self.mesh = None
+        self._axis_names: tuple[str, ...] | None = None
+        self._sync_every = 4
+        self._db_sharded = None
+
+    # ------------------------------------------------------ constructors
+
+    @classmethod
+    def build(
+        cls,
+        data,
+        config: SearchConfig | None = None,
+        *,
+        index: bool | TriangleIndex = False,
+        n_refs: int = 8,
+        n_clusters: int | None = None,
+        strategy: str = "maxmin",
+        seed: int = 0,
+    ) -> "Database":
+        """Precompute every database-side artifact for ``data`` (N, n).
+
+        ``index=True`` additionally builds the stage-0 triangle index
+        (2R banded-DTW sweeps over the database — the expensive artifact
+        the bundle exists to amortize); pass a prebuilt
+        :class:`TriangleIndex` to attach one instead (it is validated
+        against the data and config).
+        """
+        config = config if config is not None else SearchConfig()
+        _require_x64_for(config)
+        raw = np.asarray(data, dtype=config.precision)
+        if raw.ndim != 2:
+            raise ValueError(
+                f"data must be a (N, n) array of equal-length series, got "
+                f"shape {raw.shape}"
+            )
+        n_db, n = raw.shape
+        if n < 2:
+            raise ValueError(f"series length n={n} must be >= 2")
+        w = config.resolve_w(n)
+        config.validate_k(config.k, n_db)
+
+        rows = (
+            _znorm_rows(raw, dtype=config.precision) if config.znorm else raw
+        )
+        raw64 = np.asarray(raw, np.float64)
+        row_sums = raw64.sum(axis=1)
+        row_sumsq = (raw64 * raw64).sum(axis=1)
+        u, l = envelope_batch(jnp.asarray(rows), w)
+        upper, lower = np.asarray(u), np.asarray(l)
+
+        tri: TriangleIndex | None = None
+        if index is True:
+            tri = build_index(
+                rows,
+                w=w,
+                p=config.p,
+                n_refs=n_refs,
+                n_clusters=n_clusters,
+                strategy=strategy,
+                seed=seed,
+            )
+        elif isinstance(index, TriangleIndex):
+            tri = index
+            tri.validate(n_db, n, w, config.p)
+            tri.validate_data(rows)
+        elif index is not False:
+            raise TypeError(
+                f"index must be a bool or a prebuilt TriangleIndex, got "
+                f"{type(index).__name__}"
+            )
+        return cls(
+            raw=raw,
+            data=rows,
+            config=config,
+            w=w,
+            upper=upper,
+            lower=lower,
+            row_sums=row_sums,
+            row_sumsq=row_sumsq,
+            index=tri,
+        )
+
+    # ------------------------------------------------------- persistence
+
+    def save(self, path: str) -> str:
+        """Persist the whole session — data, envelopes, powered norms,
+        stage-0 index, config — to one ``.npz`` bundle."""
+        path = npz_path(path)
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        arrays: dict[str, np.ndarray] = {
+            "bundle_format_version": np.int64(BUNDLE_FORMAT_VERSION),
+            "config_json": np.str_(self.config.to_json()),
+            "resolved_w": np.int64(self.w),
+            "data": self.raw,
+            "upper": self.upper,
+            "lower": self.lower,
+            "row_sums": self.row_sums,
+            "row_sumsq": self.row_sumsq,
+        }
+        if self.index is not None:
+            arrays.update(
+                {f"idx_{k}": v for k, v in index_arrays(self.index).items()}
+            )
+        np.savez_compressed(path, **arrays)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "Database":
+        """Rebuild a session from a :meth:`save` bundle.
+
+        Saved artifacts (envelopes, norms, index) are loaded, not
+        recomputed; only the derived in-memory forms (z-normalized rows,
+        the device upload) are re-materialized.
+        """
+        path = npz_path(path)
+        with np.load(path) as z:
+            version = int(z["bundle_format_version"])
+            if version != BUNDLE_FORMAT_VERSION:
+                raise ValueError(
+                    f"database bundle format v{version} unsupported "
+                    f"(expected v{BUNDLE_FORMAT_VERSION})"
+                )
+            config = SearchConfig.from_json(str(z["config_json"]))
+            _require_x64_for(config)
+            raw = np.asarray(z["data"], dtype=config.precision)
+            rows = (
+                _znorm_rows(raw, dtype=config.precision)
+                if config.znorm
+                else raw
+            )
+            tri = None
+            if "idx_meta" in z:
+                tri = index_from_arrays(
+                    {
+                        k[len("idx_"):]: z[k]
+                        for k in z.files
+                        if k.startswith("idx_")
+                    }
+                )
+            return cls(
+                raw=raw,
+                data=rows,
+                config=config,
+                w=int(z["resolved_w"]),
+                upper=z["upper"],
+                lower=z["lower"],
+                row_sums=z["row_sums"],
+                row_sumsq=z["row_sumsq"],
+                index=tri,
+            )
+
+    # -------------------------------------------------------- properties
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.data.shape[0])
+
+    @property
+    def length(self) -> int:
+        return int(self.data.shape[1])
+
+    @property
+    def p(self):
+        return self.config.p
+
+    @property
+    def envelopes(self) -> tuple[np.ndarray, np.ndarray]:
+        """(upper, lower) warping envelopes of the database rows, band
+        ``self.w`` — computed once at build, persisted in the bundle."""
+        return self.upper, self.lower
+
+    def row_mean_std(self, eps: float = STD_EPS) -> tuple[np.ndarray, np.ndarray]:
+        """Per-row mean and (eps-floored) std of the *raw* rows, derived
+        O(1) from the cached powered norms — the scale statistics a
+        caller needs to normalize external data against this database
+        without re-sweeping it."""
+        n = self.length
+        mean = self.row_sums / n
+        var = np.maximum(self.row_sumsq / n - mean * mean, 0.0)
+        return mean, np.maximum(np.sqrt(var), eps)
+
+    def __len__(self) -> int:
+        return self.n_rows
+
+    def __repr__(self) -> str:
+        return (
+            f"Database({self.n_rows} x {self.length}, w={self.w}, "
+            f"p={self.config.p}, method={self.config.method!r}, "
+            f"index={'R=%d' % self.index.n_refs if self.index else 'none'}, "
+            f"mesh={'attached' if self.mesh is not None else 'none'})"
+        )
+
+    # ---------------------------------------------------------- sharding
+
+    def use_mesh(self, mesh, axis_names=None, sync_every: int = 4) -> "Database":
+        """Attach a device mesh: the planner then routes queries through
+        the sharded driver.  The database is padded and placed onto the
+        mesh here, once — per-call ``device_put`` becomes a no-op."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.core.distributed import pad_database
+
+        self.mesh = mesh
+        self._axis_names = tuple(
+            axis_names if axis_names is not None else mesh.axis_names
+        )
+        self._sync_every = int(sync_every)
+        dbp, _ = pad_database(
+            self.data, mesh, self._axis_names, block=self.config.block
+        )
+        self._db_sharded = jax.device_put(
+            dbp, NamedSharding(mesh, P(self._axis_names))
+        )
+        return self
+
+    # ----------------------------------------------------------- queries
+
+    def _prep_queries(self, queries) -> np.ndarray:
+        qs = np.asarray(queries, dtype=self.config.precision)
+        if qs.ndim not in (1, 2):
+            raise ValueError(
+                f"queries must be one (n,) series or a (Q, n) batch, got "
+                f"shape {qs.shape}"
+            )
+        if qs.shape[-1] != self.length:
+            raise ValueError(
+                f"query length {qs.shape[-1]} != database series length "
+                f"{self.length}: the paper's DTW bounds assume equal "
+                f"lengths"
+            )
+        if self.config.znorm:
+            single = qs.ndim == 1
+            qs = _znorm_rows(
+                qs[None] if single else qs, dtype=self.config.precision
+            )
+            if single:
+                qs = qs[0]
+        return qs
+
+    def _config_for(self, method: str | None) -> SearchConfig:
+        """Per-call method override: the stage pipeline never affects
+        results or the cached artifacts (those depend only on w, p,
+        precision, znorm), so it may vary per call without a rebuild."""
+        if method is None:
+            return self.config
+        return dataclasses.replace(self.config, method=method)
+
+    def plan(
+        self,
+        queries=None,
+        *,
+        driver: str | None = None,
+        method: str | None = None,
+    ) -> Plan:
+        """The routing decision ``search`` would take for ``queries``
+        (shape only — nothing is computed).  ``Plan.explain()`` renders
+        the chosen driver, stage list and reasons."""
+        if queries is None:
+            n_queries = 1
+        elif isinstance(queries, (int, np.integer)):
+            n_queries = int(queries)
+        else:
+            arr = np.asarray(queries)
+            n_queries = 1 if arr.ndim == 1 else int(arr.shape[0])
+        return plan_search(
+            self._config_for(method),
+            self.n_rows,
+            n_queries,
+            has_index=self.index is not None,
+            has_mesh=self.mesh is not None,
+            driver=driver,
+        )
+
+    def search(
+        self,
+        queries,
+        *,
+        k: int | None = None,
+        driver: str | None = None,
+        method: str | None = None,
+    ) -> SearchResult | BatchSearchResult:
+        """Exact nearest-neighbour search through the planned pipeline.
+
+        ``queries`` is one (n,) series -> ``SearchResult`` or a (Q, n)
+        batch -> ``BatchSearchResult`` (one query-major sweep).  Results
+        are bit-identical to the corresponding legacy entry point — the
+        facade only amortizes the database-side work.  ``k``, ``driver``
+        and ``method`` may be overridden per call (none of them touch
+        the cached artifacts); everything else is fixed by the config.
+        """
+        qs = self._prep_queries(queries)
+        k = self.config.validate_k(
+            self.config.k if k is None else k, self.n_rows
+        )
+        cfg = self._config_for(method)
+        plan = self.plan(qs, driver=driver, method=method)
+        if plan.driver == "scan":
+            return nn_search_scan(
+                qs, self._db_j, w=self.w, p=cfg.p, k=k,
+                block=cfg.block, method=cfg.method,
+            )
+        if plan.driver == "host":
+            return nn_search_host(
+                qs, self._db_j, w=self.w, p=cfg.p, k=k,
+                block=cfg.block, method=cfg.method,
+            )
+        if plan.driver == "indexed":
+            return nn_search_indexed(
+                qs, self._db_j, self.index, k=k,
+                block=cfg.block, method=cfg.method,
+            )
+        # sharded
+        from repro.core.distributed import sharded_nn_search
+
+        return sharded_nn_search(
+            qs, self._db_sharded, self.mesh,
+            axis_names=self._axis_names, w=self.w, p=cfg.p, k=k,
+            block=cfg.block, sync_every=self._sync_every,
+            method=cfg.method,
+        )
+
+    def topk(
+        self, queries, k: int, *, driver: str | None = None
+    ) -> SearchResult | BatchSearchResult:
+        """``search`` with an explicit neighbour count."""
+        return self.search(queries, k=k, driver=driver)
+
+    def classify(
+        self, labels, queries, *, driver: str = "scan"
+    ) -> int | np.ndarray:
+        """1-NN classification against per-row ``labels`` (paper §7).
+
+        Defaults to the scan driver — the bit-identical twin of the
+        legacy ``repro.core.classify.nn_classify`` loop; pass
+        ``driver="indexed"`` on an indexed session to classify through
+        stage 0 (same predictions, exactness is driver-independent).
+        """
+        labels = np.asarray(labels)
+        if labels.shape != (self.n_rows,):
+            raise ValueError(
+                f"labels must be one label per database row "
+                f"({self.n_rows},), got shape {labels.shape}"
+            )
+        res = self.search(queries, k=1, driver=driver)
+        if isinstance(res, SearchResult):
+            return int(labels[res.index])
+        return np.asarray(labels[res.indices[:, 0]])
+
+    # ---------------------------------------------------------- streaming
+
+    def stream(
+        self,
+        templates=None,
+        *,
+        threshold,
+        hop: int = 1,
+        prefilter: bool = True,
+        exclusion: int | None = None,
+        capacity: int | None = None,
+        eps: float = STD_EPS,
+    ):
+        """A :class:`repro.stream.StreamMatcher` under this session's
+        config (w, p, block, method, znorm).
+
+        With ``templates=None`` the database rows are the template bank
+        and the build-time envelopes are reused — constructing matchers
+        per signal stops re-deriving them.  Explicit ``templates`` get
+        their envelopes computed on construction, exactly like the
+        legacy constructor.
+        """
+        from repro.stream.matcher import StreamMatcher
+
+        envelopes = None
+        if templates is None:
+            templates = self.raw
+            # cached envelopes were computed on the (znormed) float32
+            # rows with the default std floor; reuse them only when the
+            # scanner would recompute exactly that
+            if self.config.precision == "float32" and (
+                not self.config.znorm or eps == STD_EPS
+            ):
+                envelopes = (self.upper, self.lower)
+        return StreamMatcher(
+            templates,
+            self.w,
+            threshold,
+            p=self.config.p,
+            hop=hop,
+            znorm=self.config.znorm,
+            block=self.config.block,
+            method=self.config.method,
+            prefilter=prefilter,
+            exclusion=exclusion,
+            capacity=capacity,
+            eps=eps,
+            envelopes=envelopes,
+        )

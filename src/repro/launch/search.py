@@ -1,26 +1,22 @@
 """Distributed DTW search service launcher (the paper's system at scale).
 
-Shards a time-series database across every device of the mesh and
-serves nearest-neighbour queries through the two-pass LB_Improved
-cascade with best-bound exchange (repro.core.distributed).
+Serves nearest-neighbour queries through one ``repro.api.Database``
+session: artifacts (envelopes, powered norms, optionally the stage-0
+triangle index) are built **once**, the planner picks the pipeline —
+sharded over the host mesh by default, the 4-stage indexed cascade with
+``--index`` — and the query queue drains through query-major
+microbatches (DESIGN.md §3.4), every batch riding one sweep.
 
-Queries are served **query-major** (DESIGN.md §3.4): the launcher drains
-its query queue in microbatches of ``--query-batch`` so one sweep over
-the database (one jit trace, one envelope pass, one bound-exchange lane
-per query) serves a whole block of queries instead of re-tracing the
-scan per query.  The final ragged batch is padded to the batch size and
-the pad results dropped, so nothing recompiles.
-
-With ``--index`` the launcher instead builds (or loads) a
-triangle-inequality reference index (repro.index) and serves query
-batches through the four-stage ``nn_search_indexed`` cascade, printing
-stage-0 pruning statistics next to the usual LB counters.
+Persistence is first-class: ``--db-path x.npz`` saves/loads the whole
+session bundle (data + envelopes + index + config), so a restarted
+service skips every build step.  ``--index-path`` keeps the older
+index-only store working.
 
 Usage:
   python -m repro.launch.search --db-size 4096 --length 512 --queries 16 \
       --query-batch 8
   python -m repro.launch.search --index --p inf --n-refs 16 \
-      --index-path /tmp/rw.idx.npz
+      --db-path /tmp/rw.session.npz
 """
 
 from __future__ import annotations
@@ -31,7 +27,7 @@ import time
 
 import numpy as np
 
-from repro.core.distributed import pad_database, sharded_nn_search
+from repro.api import Database, SearchConfig
 from repro.core.microbatch import drain_queries, iter_query_batches
 from repro.data.synthetic import random_walks
 from repro.launch.mesh import make_host_mesh
@@ -50,6 +46,79 @@ def _parse_p(s: str):
     return int(v) if v == int(v) else v
 
 
+def load_session(args) -> Database | None:
+    """Load the serving session from ``--db-path`` if a bundle exists.
+
+    A loaded bundle *is* the session — its data, config and artifacts
+    win over the CLI flags (they are what the artifacts are valid for).
+    Every flag the bundle overrides is warned about explicitly; ``--k``
+    stays live because it is per-call-safe.
+    """
+    from repro.index.store import npz_path
+
+    if not (args.db_path and os.path.exists(npz_path(args.db_path))):
+        return None
+    db = Database.load(args.db_path)
+    print(f"loaded session bundle from {args.db_path}: {db!r}")
+    config = SearchConfig(w=args.w, p=args.p, k=args.k, block=args.block)
+    diffs = [
+        f"--{f}: bundle={getattr(db.config, f)!r} flag={getattr(config, f)!r}"
+        for f in ("w", "p", "block", "method", "znorm", "precision")
+        if getattr(db.config, f) != getattr(config, f)
+    ]
+    if (db.n_rows, db.length) != (args.db_size, args.length):
+        diffs.append(
+            f"--db-size/--length: bundle holds {db.n_rows} x {db.length}, "
+            f"flags describe {args.db_size} x {args.length} — serving the "
+            f"bundle's data (queries are generated at its length)"
+        )
+    if args.index != (db.index is not None):
+        diffs.append(
+            f"--index: bundle={'has' if db.index else 'has no'} stage-0 "
+            f"index, flag asked for {'one' if args.index else 'none'} — "
+            f"the planner serves what the bundle has"
+        )
+    if diffs:
+        print(
+            "warning: serving under the bundle's saved session; these "
+            "CLI flags are ignored (rebuild without --db-path, or "
+            "delete the bundle, to change them):\n  "
+            + "\n  ".join(diffs)
+        )
+    return db
+
+
+def build_session(args, db_data: np.ndarray) -> Database:
+    """Build (and optionally persist) the serving session from the flags."""
+    from repro.index import load_index, save_index
+    from repro.index.store import npz_path
+
+    config = SearchConfig(w=args.w, p=args.p, k=args.k, block=args.block)
+    index: object = False
+    if args.index:
+        if args.index_path and os.path.exists(npz_path(args.index_path)):
+            index = load_index(args.index_path)
+            print(f"loaded index from {args.index_path} (R={index.n_refs})")
+        else:
+            index = True
+    t0 = time.perf_counter()
+    db = Database.build(
+        db_data,
+        config,
+        index=index,
+        n_refs=args.n_refs,
+        n_clusters=args.n_clusters or None,
+        seed=args.seed,
+    )
+    dt = time.perf_counter() - t0
+    print(f"built session in {dt:.2f}s: {db!r}")
+    if args.index and index is True and args.index_path:
+        print(f"saved index to {save_index(db.index, args.index_path)}")
+    if args.db_path:
+        print(f"saved session bundle to {db.save(args.db_path)}")
+    return db
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--db-size", type=int, default=4096)
@@ -62,7 +131,7 @@ def main():
         help="queries served per sweep (query-major microbatching, §3.4)",
     )
     ap.add_argument("--w", type=int, default=0, help="0 = n/10")
-    ap.add_argument("--p", type=_parse_p, default=1, help="1, 2, ... or inf")
+    ap.add_argument("--p", type=_parse_p, default=1, help="1, 2 or inf")
     ap.add_argument("--k", type=int, default=1)
     ap.add_argument("--block", type=int, default=32)
     ap.add_argument("--sync-every", type=int, default=4)
@@ -75,99 +144,60 @@ def main():
     ap.add_argument("--n-refs", type=int, default=16)
     ap.add_argument("--n-clusters", type=int, default=0, help="0 = n_refs")
     ap.add_argument(
+        "--db-path",
+        type=str,
+        default="",
+        help="load the whole session bundle (data+envelopes+index+config) "
+        "from this .npz if present, else build and save it",
+    )
+    ap.add_argument(
         "--index-path",
         type=str,
         default="",
-        help="load the index from this .npz if present, else build and save it",
+        help="legacy index-only store: load the index from this .npz if "
+        "present, else build and save it",
     )
     args = ap.parse_args()
 
     rng = np.random.default_rng(args.seed)
-    w = args.w or args.length // 10
-    db = random_walks(rng, args.db_size, args.length)
-    queries = random_walks(rng, args.queries, args.length)
+    db = load_session(args)
+    if db is None:  # no bundle: synthesize and build (the cold path)
+        db = build_session(args, random_walks(rng, args.db_size, args.length))
+    # queries follow the *session's* series length, so a loaded bundle of
+    # a different --length serves instead of crashing on the first batch
+    queries = random_walks(rng, args.queries, db.length)
     # --queries 0 (config-printout smoke runs) must stay a graceful no-op
     batch = max(1, min(args.query_batch, args.queries))
-
-    if args.index:
-        _serve_indexed(args, db, queries, batch, w)
-        return
-
-    mesh = make_host_mesh()
-    dbp, n_real = pad_database(db, mesh, block=args.block)
+    # route on what the session actually has (a loaded bundle may differ
+    # from the flags — make_session warned about it above)
+    indexed = db.index is not None
+    if not indexed:
+        mesh = make_host_mesh()
+        db.use_mesh(mesh, sync_every=args.sync_every)
+        print(f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
     print(
-        f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
-        f"db={n_real} series x {args.length} (padded {dbp.shape[0]}) "
-        f"w={w} query_batch={batch}"
-    )
-
-    def search_block(block_q):
-        return sharded_nn_search(
-            block_q, dbp, mesh, w=w, p=args.p, k=args.k, block=args.block,
-            sync_every=args.sync_every,
-        )
-
-    t_all = time.perf_counter()
-    for qi, res in enumerate(drain_queries(queries, search_block, batch)):
-        s = res.stats
-        print(
-            f"query {qi}: nn={res.index} dist={res.distance:.3f} "
-            f"pruned_lb1={s.lb1_pruned} pruned_lb2={s.lb2_pruned} "
-            f"dtw={s.full_dtw} ({100*s.pruning_ratio:.1f}% pruned)"
-        )
-    dt = time.perf_counter() - t_all
-    print(
-        f"served {args.queries} queries in {dt*1e3:.1f} ms "
-        f"({args.queries/dt:.1f} queries/sec at batch {batch})"
-    )
-
-
-def _serve_indexed(args, db, queries, batch, w):
-    from repro.core.cascade import nn_search_indexed
-    from repro.index import build_index, load_index, save_index
-    from repro.index.store import npz_path
-
-    index = None
-    if args.index_path and os.path.exists(npz_path(args.index_path)):
-        index = load_index(args.index_path)
-        index.validate(db.shape[0], db.shape[1], w, args.p)
-        index.validate_data(db)  # refuse a stale index over different data
-        print(f"loaded index from {args.index_path} (R={index.n_refs})")
-    if index is None:
-        t0 = time.perf_counter()
-        index = build_index(
-            db,
-            w=w,
-            p=args.p,
-            n_refs=args.n_refs,
-            n_clusters=args.n_clusters or None,
-            seed=args.seed,
-        )
-        dt = time.perf_counter() - t0
-        print(
-            f"built index: R={index.n_refs} C={index.n_clusters} "
-            f"c_w={index.constant:.3g} in {dt:.2f}s"
-        )
-        if args.index_path:
-            print(f"saved index to {save_index(index, args.index_path)}")
-
-    print(
-        f"db={db.shape[0]} series x {db.shape[1]} w={w} p={args.p} "
+        f"db={db.n_rows} series x {db.length} w={db.w} p={db.p} "
         f"query_batch={batch}"
     )
+    print(db.plan(batch).explain())
 
     def search_block(block_q):
-        return nn_search_indexed(block_q, db, index, k=args.k, block=args.block)
+        return db.search(block_q, k=args.k)  # k is per-call-safe
 
     t_all = time.perf_counter()
     for qi, res in enumerate(drain_queries(queries, search_block, batch)):
         s = res.stats
-        print(
-            f"query {qi}: nn={res.index} dist={res.distance:.3f} "
+        extra = (
             f"stage0={s.lb0_pruned} ({100*s.stage0_ratio:.1f}%) "
             f"clusters={s.clusters_pruned}/{s.clusters_total} "
-            f"lb1={s.lb1_pruned} lb2={s.lb2_pruned} dtw={s.full_dtw} "
-            f"({100*s.pruning_ratio:.1f}% pruned)"
+            if indexed
+            else ""
+        )
+        print(
+            f"query {qi}: nn={res.index} dist={res.distance:.3f} "
+            f"{extra}"
+            f"pruned_lb1={s.lb1_pruned} pruned_lb2={s.lb2_pruned} "
+            f"dtw={s.full_dtw} ({100*s.pruning_ratio:.1f}% pruned)"
         )
     dt = time.perf_counter() - t_all
     print(

@@ -2,9 +2,12 @@
 
 Simulates the production shape of the stream subsystem: an unbounded
 noisy signal with planted template occurrences arrives in chunks; a
-``StreamMatcher`` ingests each chunk (online envelopes + windowed
-cascade, one batched sweep per window block serves every template) and
-finalized matches are polled and printed as the stream advances.
+``StreamMatcher`` — obtained from a ``repro.api.Database`` session
+whose rows are the template bank, so template envelopes are built once
+and shared across matchers — ingests each chunk (online envelopes +
+windowed cascade, one batched sweep per window block serves every
+template) and finalized matches are polled and printed as the stream
+advances.
 
 With ``--threshold 0`` (the default) each template's threshold is
 calibrated from the head of the stream: half the median exact DTW
@@ -75,7 +78,7 @@ def main():
     ap.add_argument("--hop", type=int, default=4, help="window stride")
     ap.add_argument("--block", type=int, default=64, help="windows per sweep")
     ap.add_argument("--w", type=int, default=0, help="0 = length/10")
-    ap.add_argument("--p", type=_parse_p, default=2, help="1, 2, ... or inf")
+    ap.add_argument("--p", type=_parse_p, default=2, help="1, 2 or inf")
     ap.add_argument(
         "--threshold",
         type=float,
@@ -98,8 +101,8 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    from repro.api import Database, SearchConfig
     from repro.data.synthetic import planted_stream, template_bank
-    from repro.stream import StreamMatcher
 
     rng = np.random.default_rng(args.seed)
     n = args.length
@@ -124,15 +127,21 @@ def main():
         f"thresholds={np.round(thr, 3).tolist()}"
     )
 
-    matcher = StreamMatcher(
+    # session facade: the template bank is the database, its envelopes
+    # are build-once artifacts shared by every matcher the session mints
+    session = Database.build(
         templates,
-        w,
-        thr,
-        p=args.p,
+        SearchConfig(
+            w=w,
+            p=args.p,
+            block=args.block,
+            method=args.method,
+            znorm=args.znorm,
+        ),
+    )
+    matcher = session.stream(
+        threshold=thr,
         hop=args.hop,
-        znorm=args.znorm,
-        block=args.block,
-        method=args.method,
         prefilter=not args.no_prefilter,
     )
     t0 = time.perf_counter()

@@ -76,6 +76,7 @@ class StreamMatcher:
         exclusion: int | None = None,
         capacity: int | None = None,
         eps: float = STD_EPS,
+        envelopes: tuple | None = None,
     ):
         self.scanner = SubsequenceScanner(
             templates,
@@ -88,6 +89,7 @@ class StreamMatcher:
             method=method,
             prefilter=prefilter,
             eps=eps,
+            envelopes=envelopes,
         )
         self.exclusion = (
             int(exclusion) if exclusion is not None else self.scanner.n

@@ -212,6 +212,7 @@ class SubsequenceScanner:
         method: Method = "lb_improved",
         prefilter: bool = True,
         eps: float = STD_EPS,
+        envelopes: tuple[np.ndarray, np.ndarray] | None = None,
     ):
         templates = np.atleast_2d(np.asarray(templates, np.float32))
         if hop <= 0:
@@ -239,7 +240,27 @@ class SubsequenceScanner:
         self.thr_pow = powered_threshold(thr, p)  # float32 powered
         # strict `lb < bound` in the shared staging must keep lb == thr
         self.gate = np.nextafter(self.thr_pow, np.float32(np.inf))
-        u, l = envelope_batch(jnp.asarray(templates), self.w)
+        if envelopes is None:
+            u, l = envelope_batch(jnp.asarray(templates), self.w)
+        else:
+            # prebuilt template envelopes (a repro.api.Database build
+            # artifact): must match the post-znorm templates at band w
+            u_np, l_np = (np.asarray(e, np.float32) for e in envelopes)
+            if u_np.shape != templates.shape or l_np.shape != templates.shape:
+                raise ValueError(
+                    f"prebuilt envelopes shaped {u_np.shape}/{l_np.shape} do "
+                    f"not match the template bank {templates.shape}"
+                )
+            # a valid envelope contains its series; too-tight envelopes
+            # (wrong band, or built pre-znorm for a znorm scanner) would
+            # silently prune true matches — refuse them here
+            if not ((u_np >= templates).all() and (l_np <= templates).all()):
+                raise ValueError(
+                    "prebuilt envelopes do not contain the (post-znorm) "
+                    "templates — they were built at a different band or "
+                    "normalization and would make the LB cascade unsound"
+                )
+            u, l = jnp.asarray(u_np), jnp.asarray(l_np)
         self._qs_j = jnp.asarray(templates)
         self._u_j, self._l_j = u, l
         self._gate_j = jnp.asarray(self.gate)

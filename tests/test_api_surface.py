@@ -1,0 +1,92 @@
+"""Public-API surface snapshot (ISSUE 5 satellite).
+
+``repro.api`` is the one entry point users program against, so its
+surface — ``__all__``, the ``SearchConfig`` fields and defaults, and
+every public ``Database``/``Plan`` signature — is pinned against the
+checked-in ``tests/api_surface_snapshot.json``.  An accidental rename,
+a changed default, or a dropped kwarg fails CI loudly instead of
+breaking downstream callers silently.
+
+Intentional surface changes: regenerate the snapshot and commit it
+alongside the change::
+
+    PYTHONPATH=src python tests/test_api_surface.py --write
+"""
+
+import dataclasses
+import inspect
+import json
+import pathlib
+import sys
+
+SNAPSHOT = pathlib.Path(__file__).with_name("api_surface_snapshot.json")
+
+PUBLIC_DATABASE_METHODS = (
+    "build",
+    "load",
+    "save",
+    "plan",
+    "search",
+    "topk",
+    "classify",
+    "stream",
+    "use_mesh",
+    "row_mean_std",
+)
+
+
+def current_surface() -> dict:
+    import repro.api as api
+
+    cfg_fields = {
+        f.name: repr(f.default)
+        for f in dataclasses.fields(api.SearchConfig)
+    }
+    db_sigs = {
+        name: str(inspect.signature(getattr(api.Database, name)))
+        for name in PUBLIC_DATABASE_METHODS
+    }
+    plan_sigs = {
+        "plan_search": str(inspect.signature(api.plan_search)),
+        "Plan.explain": str(inspect.signature(api.Plan.explain)),
+    }
+    return {
+        "__all__": sorted(api.__all__),
+        "SearchConfig": cfg_fields,
+        "Database": db_sigs,
+        "planner": plan_sigs,
+        "drivers": sorted(api.DRIVERS),
+        "bundle_format_version": api.BUNDLE_FORMAT_VERSION,
+    }
+
+
+def test_api_surface_matches_snapshot():
+    assert SNAPSHOT.exists(), (
+        "missing tests/api_surface_snapshot.json — generate it with "
+        "`PYTHONPATH=src python tests/test_api_surface.py --write`"
+    )
+    want = json.loads(SNAPSHOT.read_text())
+    got = current_surface()
+    assert got == want, (
+        "repro.api public surface changed.  If intentional, regenerate "
+        "the snapshot with `PYTHONPATH=src python "
+        "tests/test_api_surface.py --write` and commit it; the diff "
+        "above is the breaking change."
+    )
+
+
+def test_all_names_resolve():
+    import repro.api as api
+
+    for name in api.__all__:
+        assert getattr(api, name, None) is not None, name
+
+
+if __name__ == "__main__":
+    if "--write" in sys.argv:
+        SNAPSHOT.write_text(
+            json.dumps(current_surface(), indent=1, sort_keys=True) + "\n"
+        )
+        print(f"wrote {SNAPSHOT}")
+    else:
+        print(__doc__)
