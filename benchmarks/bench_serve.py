@@ -1,0 +1,151 @@
+"""Serving-engine throughput/latency under a mixed replayed workload.
+
+The paper's bounds exist so a server can answer more queries per
+second; this module measures that server (DESIGN.md §3.8).  A
+``QueryEngine`` over one build-once ``Database`` session replays a
+mixed workload — exact repeats from a small pool (answer-cache and
+coalescing targets), near-duplicate retrieval queries (the paper's
+regime), and cold scans — from several concurrent client threads, and
+reports **sustained qps** and **p50/p99 latency** (submit -> result,
+queueing included), plus the engine economics: batch occupancy, cache
+hit rate, coalesced lanes.
+
+Baselines on the same session and workload:
+
+* ``direct`` — a sequential single-query ``db.search`` loop (what
+  serving looked like before the engine): no batching, no cache.
+  The engine row must win on qps; answers are bit-identical.
+* ``stream`` — a streaming session multiplexed over the same session's
+  artifacts, reported as samples/sec through the engine wrapper.
+
+Every replayed answer is verified bit-equal to the direct call before
+any number is reported, so the speedups are exactness-free.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.api import Database, SearchConfig
+from repro.data.synthetic import random_walks
+from repro.launch.serve import mixed_workload, replay
+from repro.serve import QueryEngine
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
+
+
+def run(report):
+    rng = np.random.default_rng(13)
+    n_db = 2048 if FAST else 8192
+    length = 128 if FAST else 512
+    n_queries = 64 if FAST else 256
+    clients = 4
+    max_batch = 8
+    w = length // 10
+
+    data = random_walks(rng, n_db, length)
+    cfg = SearchConfig(w=w, p=np.inf, block=128, method="lb_keogh")
+    db = Database.build(data, cfg)
+    workload = mixed_workload(
+        rng, data, n_queries, repeat_frac=0.3, near_frac=0.4
+    )
+
+    engine = QueryEngine(
+        db,
+        max_batch=max_batch,
+        max_wait_ms=2.0,
+        max_queue=4 * n_queries,
+        cache_capacity=64,
+    )
+    # compile the (max_batch, n) serving specialisation out of the
+    # measurement, and the single-query shape for the direct baseline
+    replay(engine, workload[:max_batch], 1)
+    db.search(workload[0])
+
+    t0 = time.perf_counter()
+    served = replay(engine, workload, clients)
+    wall = time.perf_counter() - t0
+    stats = engine.stats()
+    engine.close()
+
+    # parity gate: engine answers == direct answers, bit for bit
+    direct_batch = db.search(workload)
+    for qi, _, ans in served:
+        assert np.array_equal(ans.distances, direct_batch.distances[qi]), qi
+        assert np.array_equal(ans.indices, direct_batch.indices[qi]), qi
+
+    lat_us = np.sort([1e6 * dt for _, dt, _ in served])
+    p50, p99 = np.percentile(lat_us, 50), np.percentile(lat_us, 99)
+    qps = len(served) / wall
+
+    t0 = time.perf_counter()
+    for q in workload:
+        db.search(q)
+    t_direct = time.perf_counter() - t0
+    qps_direct = len(workload) / t_direct
+
+    mix = "30% repeated + 40% near-dup + 30% cold"
+    report(
+        "serve/mixed/qps",
+        1e6 / qps,
+        f"qps={qps:.1f} sustained, {clients} clients, "
+        f"max_batch={max_batch}, {mix}",
+    )
+    report("serve/mixed/p50_latency", p50, f"{p50 / 1e3:.2f} ms submit->result")
+    report("serve/mixed/p99_latency", p99, f"{p99 / 1e3:.2f} ms submit->result")
+    report(
+        "serve/mixed/direct_loop",
+        1e6 / qps_direct,
+        f"qps={qps_direct:.1f} sequential db.search baseline",
+    )
+    report(
+        "serve/mixed/speedup_vs_direct",
+        0.0,
+        f"{qps / qps_direct:.2f}x (answers bit-identical)",
+    )
+    report(
+        "serve/engine/cache_hit_rate",
+        0.0,
+        f"{stats.cache_hit_rate:.2f} ({stats.cache_hits} hits, "
+        f"{stats.coalesced} coalesced riders)",
+    )
+    report(
+        "serve/engine/batch_occupancy",
+        0.0,
+        f"{stats.batch_occupancy:.2f} over {stats.batches} batches, "
+        f"wait_mean={stats.wait_ms_mean:.2f} ms",
+    )
+
+    _stream(report, db, rng)
+
+
+def _stream(report, db, rng):
+    """Streaming traffic multiplexed over the same session: one
+    engine-wrapped session fed chunk by chunk, samples/sec reported
+    (matches are exact — tests pin session == direct matcher)."""
+    n_samples = 8192 if FAST else 65536
+    chunk = 512
+    templates = db.raw[:4]  # a small template bank, serving-shaped
+    signal = random_walks(rng, 1, n_samples)[0]
+
+    engine = QueryEngine(db, max_batch=2, max_wait_ms=0.5, cache_capacity=0)
+    sess = engine.open_stream(templates, threshold=2.0, hop=4)
+    sess.feed(signal[:chunk])  # compile the window-block specialisation
+
+    t0 = time.perf_counter()
+    n_hits = 0
+    for lo in range(chunk, n_samples, chunk):
+        n_hits += len(sess.feed(signal[lo : lo + chunk]))
+    n_hits += len(sess.close())
+    dt = time.perf_counter() - t0
+    engine.close()
+    sps = (n_samples - chunk) / dt
+    report(
+        "serve/stream/samples_per_sec",
+        1e6 / sps,
+        f"{sps:.0f} samples/sec, {n_hits} matches, 4 templates, hop=4, "
+        f"concurrent with the batch worker",
+    )

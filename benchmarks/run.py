@@ -28,6 +28,7 @@ FULL_SUITE = (
     "bench_index",
     "bench_batched",
     "bench_stream",
+    "bench_serve",
     "bench_lb",
     "bench_classify",
     "perf_search",
@@ -44,6 +45,7 @@ FAST_SUITE = (
     "bench_index",
     "bench_batched",
     "bench_stream",
+    "bench_serve",
     "bench_lb",
     "bench_classify",
 )

@@ -138,6 +138,14 @@ class SearchConfig:
 
     # ---------------------------------------------------- serialization
 
+    def stable_hash(self) -> str:
+        """sha256 of the canonical (sorted-keys) JSON form: the config
+        component of serving cache keys (``Database.fingerprint``).
+        Stable across processes, unlike ``hash()``."""
+        import hashlib
+
+        return hashlib.sha256(self.to_json().encode()).hexdigest()
+
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         if math.isinf(d["p"]):

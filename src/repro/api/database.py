@@ -124,6 +124,7 @@ class Database:
         self._axis_names: tuple[str, ...] | None = None
         self._sync_every = 4
         self._db_sharded = None
+        self._fingerprint: str | None = None  # lazy, see fingerprint
 
     # ------------------------------------------------------ constructors
 
@@ -292,6 +293,24 @@ class Database:
         ``self.w`` — computed once at build, persisted in the bundle."""
         return self.upper, self.lower
 
+    @property
+    def fingerprint(self) -> str:
+        """Stable identity of this session's answer space: sha256 over
+        the config's canonical JSON, the resolved band and the raw data
+        bytes.  Two sessions share a fingerprint iff every search
+        answer they could give is identical, so serving caches
+        (``repro.serve``) key on it — a stale config or different data
+        can never alias an entry.  Computed once, on first use."""
+        if self._fingerprint is None:
+            import hashlib
+
+            h = hashlib.sha256()
+            h.update(self.config.stable_hash().encode())
+            h.update(f"|w={self.w}|{self.raw.shape}|{self.raw.dtype}|".encode())
+            h.update(np.ascontiguousarray(self.raw).tobytes())
+            self._fingerprint = h.hexdigest()
+        return self._fingerprint
+
     def row_mean_std(self, eps: float = STD_EPS) -> tuple[np.ndarray, np.ndarray]:
         """Per-row mean and (eps-floored) std of the *raw* rows, derived
         O(1) from the cached powered norms — the scale statistics a
@@ -339,7 +358,13 @@ class Database:
 
     # ----------------------------------------------------------- queries
 
-    def _prep_queries(self, queries) -> np.ndarray:
+    def prepare_queries(self, queries) -> np.ndarray:
+        """The exact query array the drivers consume: precision-cast and
+        (when the session z-norms) z-normalized, shape/length validated.
+        Public because the serving engine digests this canonical form —
+        under z-norm, scaled/shifted copies of one query prepare to
+        identical bytes, which is what makes answer-cache hits on
+        near-duplicate traffic exact rather than approximate."""
         qs = np.asarray(queries, dtype=self.config.precision)
         if qs.ndim not in (1, 2):
             raise ValueError(
@@ -412,7 +437,7 @@ class Database:
         and ``method`` may be overridden per call (none of them touch
         the cached artifacts); everything else is fixed by the config.
         """
-        qs = self._prep_queries(queries)
+        qs = self.prepare_queries(queries)
         k = self.config.validate_k(
             self.config.k if k is None else k, self.n_rows
         )

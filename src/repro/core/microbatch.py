@@ -13,11 +13,36 @@ sharded-serving stack as a side effect.
 from __future__ import annotations
 
 import itertools
-from typing import Callable, Iterable, Iterator
+from typing import Callable, Iterable, Iterator, Sequence
 
 import numpy as np
 
 from repro.core.cascade import BatchSearchResult, SearchResult
+
+
+def pad_rows(
+    rows: Sequence[np.ndarray] | np.ndarray, batch: int
+) -> tuple[np.ndarray, int]:
+    """Stack (n,) rows into one fixed-shape (batch, n) block.
+
+    The microbatching primitive shared by the queue drain below and the
+    serving engine's coalescer (``repro.serve``): a ragged group is
+    padded by repeating its last row, so every dispatch sees the same
+    (batch, n) shape (one jit specialisation) and pad lanes are plain
+    duplicate work whose results the caller drops.  Returns
+    ``(block, n_valid)`` with ``n_valid`` the number of real leading
+    rows.
+    """
+    block = np.asarray(rows)
+    if block.ndim != 2:
+        raise ValueError(f"expected a group of (n,) rows, got shape {block.shape}")
+    n_valid = block.shape[0]
+    if not 1 <= n_valid <= batch:
+        raise ValueError(f"got {n_valid} rows for a batch of {batch}")
+    if n_valid < batch:
+        pad = np.repeat(block[-1:], batch - n_valid, axis=0)
+        block = np.concatenate([block, pad], axis=0)
+    return block, n_valid
 
 
 def iter_query_batches(
@@ -42,12 +67,8 @@ def iter_query_batches(
         block_rows = list(itertools.islice(it, batch))
         if not block_rows:
             return
-        block = np.asarray(block_rows)
-        n_valid = block.shape[0]
-        if n_valid < batch:  # ragged tail: pad, results are dropped later
-            pad = np.repeat(block[-1:], batch - n_valid, axis=0)
-            block = np.concatenate([block, pad], axis=0)
-        yield block, n_valid
+        # ragged tail: pad, results are dropped later
+        yield pad_rows(block_rows, batch)
 
 
 def drain_queries(

@@ -51,7 +51,7 @@ from repro.launch.policy import apply_overrides, optimizer_for_cell, parallel_fo
 from repro.models.common import _nest
 from repro.models.model_zoo import Model, batch_specs, build_model
 from repro.optim import OptimizerConfig, optimizer_init
-from repro.serve.engine import make_serve_step
+from repro.models.lm_serve import make_serve_step
 from repro.train.train_step import make_train_step
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "../../../benchmarks/artifacts")

@@ -1,0 +1,61 @@
+"""LM decode loop: prefill + decode with a shared KV cache.
+
+Relocated from ``repro.serve.engine`` (which now serves DTW queries —
+DESIGN.md §3.8): this is the language-model decode consumer the dry-run
+and the LM example drive, and it lives under ``repro.models`` because
+that is the stack it exercises.  ``make_serve_step`` is the unit the
+dry-run lowers for decode shapes: one new token for every sequence in
+the batch against a seq_len KV cache.  The ``ServeEngine`` drives it:
+greedy sampling, per-request position counters, token streaming.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model_zoo import Model
+
+
+def make_serve_step(model: Model):
+    """(params, cache, tokens (B,1), pos) -> (next_tokens (B,1), cache)."""
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+
+    return serve_step
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: Model
+    params: dict
+    max_len: int
+    temperature: float = 0.0
+
+    def __post_init__(self):
+        self._step = jax.jit(make_serve_step(self.model))
+
+    def generate(
+        self, prompts: np.ndarray, n_new: int, rng: jax.Array | None = None
+    ) -> np.ndarray:
+        """prompts (B, Tp) int32 -> generated (B, n_new)."""
+        b, tp = prompts.shape
+        cache = self.model.init_cache(b, self.max_len, jnp.bfloat16)
+        # prefill token-by-token through the decode path (cache-exact);
+        # bulk prefill_step is used by the dry-run/benchmarks instead
+        tok = None
+        for t in range(tp):
+            tok, cache = self._step(
+                self.params, cache, jnp.asarray(prompts[:, t : t + 1]), jnp.int32(t)
+            )
+        out = []
+        for i in range(n_new):
+            out.append(np.asarray(tok))
+            tok, cache = self._step(self.params, cache, tok, jnp.int32(tp + i))
+        return np.concatenate(out, axis=1)

@@ -1,3 +1,41 @@
-from repro.serve.engine import ServeEngine, make_serve_step
+"""Multi-tenant query serving over one Database session (DESIGN.md §3.8).
 
-__all__ = ["ServeEngine", "make_serve_step"]
+    from repro.api import Database, SearchConfig
+    from repro.serve import QueryEngine
+
+    db = Database.build(data, SearchConfig(p="inf"))
+    with QueryEngine(db, max_batch=8, max_wait_ms=2.0) as engine:
+        futures = [engine.submit(q, tenant="web") for q in queries]
+        answers = [f.result() for f in futures]   # bit-match db.search
+        sess = engine.open_stream(threshold=3.0)  # same artifacts
+        print(engine.stats())                     # occupancy, hits, qps
+
+The engine is the serving layer the paper's bounds exist for: admission
+with backpressure and deadlines, round-robin microbatch coalescing onto
+the §3.4 query-major drivers, an LRU answer cache over z-normed query
+digests, and concurrent streaming sessions — all over one set of
+build-once artifacts, adding zero numeric surface (every answer is
+bit-identical to the direct ``Database`` call).
+"""
+
+from repro.serve.cache import AnswerCache, query_digest, stable_digest
+from repro.serve.engine import (
+    AdmissionFull,
+    Answer,
+    DeadlineExceeded,
+    EngineStats,
+    QueryEngine,
+    StreamSession,
+)
+
+__all__ = [
+    "AdmissionFull",
+    "Answer",
+    "AnswerCache",
+    "DeadlineExceeded",
+    "EngineStats",
+    "QueryEngine",
+    "StreamSession",
+    "query_digest",
+    "stable_digest",
+]

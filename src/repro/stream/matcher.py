@@ -202,6 +202,13 @@ class StreamMatcher:
         self._live_acc = live
         self._pending = pend
 
+    def feed(self, samples) -> list[Match]:
+        """``push`` + ``poll`` in one call: the chunk-at-a-time serving
+        step (``repro.serve.StreamSession`` drives the matcher this
+        way).  Returns the matches the chunk finalized."""
+        self.push(samples)
+        return self.poll()
+
     def poll(self) -> list[Match]:
         """Newly finalized matches since the last poll, in stream order.
         (A late-resolving suppression chain can finalize a hit that

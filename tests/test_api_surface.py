@@ -1,11 +1,13 @@
-"""Public-API surface snapshot (ISSUE 5 satellite).
+"""Public-API surface snapshot (ISSUE 5 satellite; serve added in ISSUE 6).
 
-``repro.api`` is the one entry point users program against, so its
-surface — ``__all__``, the ``SearchConfig`` fields and defaults, and
-every public ``Database``/``Plan`` signature — is pinned against the
-checked-in ``tests/api_surface_snapshot.json``.  An accidental rename,
-a changed default, or a dropped kwarg fails CI loudly instead of
-breaking downstream callers silently.
+``repro.api`` and ``repro.serve`` are the entry points users program
+against, so their surface — ``__all__``, the ``SearchConfig`` fields
+and defaults, every public ``Database``/``Plan`` signature, and the
+serving engine's ``QueryEngine``/``AnswerCache``/``Answer``/
+``EngineStats`` contract — is pinned against the checked-in
+``tests/api_surface_snapshot.json``.  An accidental rename, a changed
+default, or a dropped kwarg fails CI loudly instead of breaking
+downstream callers silently.
 
 Intentional surface changes: regenerate the snapshot and commit it
 alongside the change::
@@ -32,11 +34,32 @@ PUBLIC_DATABASE_METHODS = (
     "stream",
     "use_mesh",
     "row_mean_std",
+    "prepare_queries",
+)
+
+PUBLIC_ENGINE_METHODS = (
+    "start",
+    "close",
+    "submit",
+    "search",
+    "open_stream",
+    "queue_depth",
+    "stats",
+)
+
+PUBLIC_STREAM_SESSION_METHODS = (
+    "push",
+    "poll",
+    "feed",
+    "flush",
+    "matches",
+    "close",
 )
 
 
 def current_surface() -> dict:
     import repro.api as api
+    import repro.serve as serve
 
     cfg_fields = {
         f.name: repr(f.default)
@@ -50,6 +73,15 @@ def current_surface() -> dict:
         "plan_search": str(inspect.signature(api.plan_search)),
         "Plan.explain": str(inspect.signature(api.Plan.explain)),
     }
+    engine_sigs = {
+        name: str(inspect.signature(getattr(serve.QueryEngine, name)))
+        for name in PUBLIC_ENGINE_METHODS
+    }
+    engine_sigs["__init__"] = str(inspect.signature(serve.QueryEngine.__init__))
+    session_sigs = {
+        name: str(inspect.signature(getattr(serve.StreamSession, name)))
+        for name in PUBLIC_STREAM_SESSION_METHODS
+    }
     return {
         "__all__": sorted(api.__all__),
         "SearchConfig": cfg_fields,
@@ -57,6 +89,18 @@ def current_surface() -> dict:
         "planner": plan_sigs,
         "drivers": sorted(api.DRIVERS),
         "bundle_format_version": api.BUNDLE_FORMAT_VERSION,
+        "serve": {
+            "__all__": sorted(serve.__all__),
+            "QueryEngine": engine_sigs,
+            "StreamSession": session_sigs,
+            "AnswerCache": str(
+                inspect.signature(serve.AnswerCache.__init__)
+            ),
+            "Answer": [f.name for f in dataclasses.fields(serve.Answer)],
+            "EngineStats": [
+                f.name for f in dataclasses.fields(serve.EngineStats)
+            ],
+        },
     }
 
 

@@ -41,7 +41,7 @@ def test_serving_generates():
     from repro.configs.base import ParallelConfig
     from repro.configs.registry import get_config
     from repro.models.model_zoo import build_model
-    from repro.serve import ServeEngine
+    from repro.models.lm_serve import ServeEngine
 
     cfg = get_config("granite-3-2b", reduced=True)
     model = build_model(cfg, ParallelConfig(remat="none", compute_dtype="float32"))

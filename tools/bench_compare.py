@@ -1,0 +1,121 @@
+"""Warn-only perf-trajectory diff: fresh BENCH_*.json vs a baseline.
+
+CI's bench-smoke job has archived machine-readable ``BENCH_<module>.json``
+artifacts since PR 4, but nothing ever *compared* them — the perf
+trajectory was recorded, not watched.  This tool closes half that loop:
+it diffs a directory of freshly produced artifacts against the
+checked-in baseline in ``benchmarks/baselines/`` and prints per-row
+deltas, flagging rows slower than the threshold with WARN.
+
+It is deliberately **warn-only** (exit 0): timing noise across CI
+machines makes a hard gate at this granularity flaky, so the goal is a
+visible trend line in every bench-smoke log, with ``--strict`` available
+for local use or a future pinned-runner gate.
+
+Usage:
+  python tools/bench_compare.py bench-artifacts          # compare, warn
+  python tools/bench_compare.py bench-artifacts --update # re-baseline
+  python tools/bench_compare.py bench-artifacts --strict # exit 1 on WARN
+
+Rows are matched by (module, row name); ratio-style rows (us_per_call
+== 0, e.g. speedup summaries) are compared by presence only.  Rows or
+modules present on one side only are reported as NEW / GONE, never
+warned — adding a benchmark must not turn the step red.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import sys
+
+BASELINE_DIR = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "benchmarks", "baselines"
+)
+
+
+def load_rows(path: str) -> dict[str, float]:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in payload.get("rows", [])}
+
+
+def compare_dir(
+    fresh_dir: str, baseline_dir: str, threshold: float
+) -> tuple[int, int]:
+    """Print the diff table; returns (rows_compared, rows_warned)."""
+    fresh_files = sorted(glob.glob(os.path.join(fresh_dir, "BENCH_*.json")))
+    if not fresh_files:
+        print(f"no BENCH_*.json artifacts under {fresh_dir!r} — nothing to compare")
+        return 0, 0
+    compared = warned = 0
+    for path in fresh_files:
+        name = os.path.basename(path)
+        base_path = os.path.join(baseline_dir, name)
+        if not os.path.exists(base_path):
+            print(f"[NEW ] {name}: no baseline yet (run with --update to pin)")
+            continue
+        fresh, base = load_rows(path), load_rows(base_path)
+        for row, us in sorted(fresh.items()):
+            if row not in base:
+                print(f"[NEW ] {name}:{row}")
+                continue
+            base_us = base[row]
+            if us == 0.0 or base_us == 0.0:  # ratio/summary rows: presence only
+                continue
+            compared += 1
+            delta = us / base_us - 1.0
+            if delta > threshold:
+                warned += 1
+                print(
+                    f"[WARN] {name}:{row}: {base_us:.1f} -> {us:.1f} us "
+                    f"(+{100 * delta:.1f}% slower than baseline)"
+                )
+            else:
+                print(
+                    f"[ ok ] {name}:{row}: {base_us:.1f} -> {us:.1f} us "
+                    f"({'+' if delta >= 0 else ''}{100 * delta:.1f}%)"
+                )
+        for row in sorted(set(base) - set(fresh)):
+            print(f"[GONE] {name}:{row} (in baseline, not in fresh run)")
+    return compared, warned
+
+
+def update_baseline(fresh_dir: str, baseline_dir: str) -> None:
+    os.makedirs(baseline_dir, exist_ok=True)
+    for path in sorted(glob.glob(os.path.join(fresh_dir, "BENCH_*.json"))):
+        shutil.copy(path, os.path.join(baseline_dir, os.path.basename(path)))
+        print(f"pinned {os.path.basename(path)} -> {baseline_dir}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh_dir", nargs="?", default=".",
+                    help="directory holding freshly produced BENCH_*.json")
+    ap.add_argument("--baseline", default=BASELINE_DIR)
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="relative slowdown that triggers a WARN (0.15 = 15%%)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the fresh artifacts into the baseline dir")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero when any row warned")
+    args = ap.parse_args()
+
+    if args.update:
+        update_baseline(args.fresh_dir, args.baseline)
+        return 0
+    compared, warned = compare_dir(args.fresh_dir, args.baseline, args.threshold)
+    print(
+        f"# compared {compared} timed rows against {args.baseline}: "
+        f"{warned} warned (threshold +{100 * args.threshold:.0f}%)"
+    )
+    if warned and args.strict:
+        return 1
+    return 0  # warn-only by default: the trajectory is watched, not gated
+
+
+if __name__ == "__main__":
+    sys.exit(main())
