@@ -3,6 +3,21 @@ power, LB_Keogh (Algo 2) vs LB_Improved (Algo 3) vs full scan, over the
 paper's data families at container-friendly sizes.
 
 Emits rows: dataset, db_frac, method, ms_per_query, pruning_pct, speedup.
+
+Two DESIGN.md §3.9 studies ride along:
+
+* ``bounds/<regime>/p<p>/<stage>`` — per-stage tightness ratio
+  (mean bound/DTW in the powered domain) and pruning power at the
+  nearest-neighbour threshold, for the whole registered bound family
+  (LB_Kim, LB_Keogh, LB_Improved, LB_Webb) on a self-similar retrieval
+  regime vs an i.i.d. cold-scan regime (ratio rows: us_per_call = 0,
+  compared by presence only in tools/bench_compare.py);
+* ``planner/retrieval/*`` — wall time of the calibrated ``auto``
+  cascade vs the fixed ``lb_improved`` cascade in the FAST retrieval
+  regime, with a bit-parity gate before any number is reported.  The
+  timed rows land in BENCH_bench_lb.json, so bench-smoke's warn-only
+  ``tools/bench_compare.py`` diff flags a planner regression against
+  the pinned baseline.
 """
 
 from __future__ import annotations
@@ -12,6 +27,8 @@ import time
 
 import numpy as np
 
+from repro.api import Database, SearchConfig
+from repro.api.planner import calibrate
 from repro.core.cascade import nn_search_host
 from repro.data.synthetic import (
     control_charts,
@@ -38,7 +55,73 @@ def datasets(rng):
         yield "shape_arrow", shape_dataset(rng, 15_000, 251, harmonics=6)
 
 
+def bounds_study(report):
+    """Tightness + pruning power of every calibrated bound, per regime."""
+    rng = np.random.default_rng(1)
+    n = 128 if FAST else 512
+    rows_n = 400 if FAST else 4000
+    regimes = {
+        # self-similar: near neighbours exist, thresholds are tight
+        "retrieval": random_walks(rng, rows_n, n),
+        # i.i.d. noise: every candidate is equally far, bounds are loose
+        "coldscan": rng.standard_normal((rows_n, n)).astype(np.float32),
+    }
+    for regime, rows in regimes.items():
+        w = max(n // 10, 1)
+        for p in (1, 2):
+            cal = calibrate(rows, w, p)
+            # k=2 skips the probe's own row among the sampled candidates
+            thr = np.sort(cal.dtw, axis=1)[:, 1][:, None]
+            pos = cal.dtw > 0  # self-matches have no defined ratio
+            for s, name in enumerate(cal.stage_names):
+                b = cal.bounds[s]
+                tight = float(np.mean(b[pos] / cal.dtw[pos]))
+                pruned = float(np.mean(b >= thr))
+                report(
+                    f"bounds/{regime}/p{p}/{name}",
+                    0.0,  # ratio row: presence-only in bench_compare
+                    f"tightness={tight:.3f} pruned_at_k2={100 * pruned:.1f}%",
+                )
+
+
+def planner_study(report):
+    """Calibrated auto cascade vs the fixed lb_improved cascade, timed
+    on the retrieval regime — exactness gated before reporting."""
+    rng = np.random.default_rng(2)
+    n = 256 if FAST else 1000
+    rows = random_walks(rng, 600 if FAST else 5000, n)
+    w = max(n // 10, 1)
+    n_queries = 3 if FAST else 10
+    queries = rows[rng.integers(0, rows.shape[0], n_queries)]
+    queries = queries + 0.05 * rng.standard_normal(queries.shape).astype(
+        np.float32
+    )
+    times, results = {}, {}
+    for method in ("lb_improved", "auto"):
+        db = Database.build(rows, SearchConfig(w=w, k=1, method=method))
+        db.search(queries)  # warmup compile at the timed batch shape
+        t0 = time.perf_counter()
+        results[method] = db.search(queries)
+        times[method] = (time.perf_counter() - t0) / n_queries
+        resolved = db.plan(n_queries).config.method
+        report(
+            f"planner/retrieval/{method}",
+            times[method] * 1e6,
+            f"resolved={resolved}",
+        )
+    assert np.array_equal(
+        results["auto"].indices, results["lb_improved"].indices
+    ), "planner cascade changed results — refusing to report timings"
+    report(
+        "planner/retrieval/auto_vs_fixed",
+        0.0,
+        f"speedup={times['lb_improved'] / times['auto']:.2f}x",
+    )
+
+
 def run(report):
+    bounds_study(report)
+    planner_study(report)
     rng = np.random.default_rng(0)
     n_queries = 3 if FAST else 10
     fractions = (0.5, 1.0) if FAST else (0.25, 0.5, 0.75, 1.0)

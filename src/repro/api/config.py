@@ -62,7 +62,11 @@ class SearchConfig:
       via ``Database.topk``).
     * ``block``  — candidates per cascade block sweep.
     * ``method`` — stage pipeline (``repro.core.pipeline.PIPELINES``):
-      ``"lb_improved"`` (paper Algorithm 3), ``"lb_keogh"`` or ``"full"``.
+      ``"lb_improved"`` (paper Algorithm 3), ``"lb_keogh"``,
+      ``"lb_webb"``, ``"kim_improved"``, ``"kim_webb"`` or ``"full"`` —
+      or ``"auto"``, which defers the stage order to the calibration-
+      driven cascade planner (``repro.api.planner.choose_cascade``);
+      all pipelines return bit-identical results, only cost differs.
     * ``znorm``  — z-normalize database rows at build and queries per
       call (per-window for streaming).
     * ``precision`` — dtype of the stored artifacts: ``"float32"``
@@ -96,10 +100,10 @@ class SearchConfig:
                 f"lanes per sweep (32-256 are typical; it only affects "
                 f"performance, never results)"
             )
-        if self.method not in PIPELINES:
+        if self.method != "auto" and self.method not in PIPELINES:
             raise ValueError(
                 f"method={self.method!r} unknown; available stage pipelines: "
-                f"{sorted(PIPELINES)}"
+                f"{sorted(PIPELINES)} (or 'auto' for the calibrated planner)"
             )
         if self.precision not in SUPPORTED_PRECISION:
             raise ValueError(

@@ -36,7 +36,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.config import SearchConfig
-from repro.api.planner import Plan, plan_search
+from repro.api.planner import (
+    Calibration,
+    CascadePlan,
+    Plan,
+    calibrate,
+    choose_cascade,
+    plan_search,
+)
 from repro.core.cascade import (
     BatchSearchResult,
     SearchResult,
@@ -104,6 +111,7 @@ class Database:
         row_sums: np.ndarray,
         row_sumsq: np.ndarray,
         index: TriangleIndex | None,
+        calibration: Calibration | None = None,
     ):
         self.raw = raw  # as given (precision-cast), what save() persists
         self.data = data  # znormed when config.znorm, else raw itself
@@ -119,6 +127,9 @@ class Database:
         self.row_sums = row_sums
         self.row_sumsq = row_sumsq
         self.index = index
+        # per-stage selectivity probe for the cascade planner; built
+        # once per session (lazily when a legacy bundle lacks one)
+        self._calibration = calibration
         self._db_j = jnp.asarray(self.data)  # device-resident, uploaded once
         self.mesh = None
         self._axis_names: tuple[str, ...] | None = None
@@ -191,6 +202,7 @@ class Database:
                 f"index must be a bool or a prebuilt TriangleIndex, got "
                 f"{type(index).__name__}"
             )
+        cal = calibrate(rows, w, config.p)
         return cls(
             raw=raw,
             data=rows,
@@ -201,6 +213,7 @@ class Database:
             row_sums=row_sums,
             row_sumsq=row_sumsq,
             index=tri,
+            calibration=cal,
         )
 
     # ------------------------------------------------------- persistence
@@ -224,6 +237,15 @@ class Database:
         if self.index is not None:
             arrays.update(
                 {f"idx_{k}": v for k, v in index_arrays(self.index).items()}
+            )
+        if self._calibration is not None:
+            # optional keys: absent in pre-planner bundles, recomputed
+            # lazily on first use — the format version stays the same
+            arrays.update(
+                {
+                    f"cal_{k}": v
+                    for k, v in self._calibration.to_arrays().items()
+                }
             )
         np.savez_compressed(path, **arrays)
         return path
@@ -261,6 +283,15 @@ class Database:
                         if k.startswith("idx_")
                     }
                 )
+            cal = None
+            if "cal_stage_names" in z:
+                cal = Calibration.from_arrays(
+                    {
+                        k[len("cal_"):]: z[k]
+                        for k in z.files
+                        if k.startswith("cal_")
+                    }
+                )
             return cls(
                 raw=raw,
                 data=rows,
@@ -271,6 +302,7 @@ class Database:
                 row_sums=z["row_sums"],
                 row_sumsq=z["row_sumsq"],
                 index=tri,
+                calibration=cal,
             )
 
     # -------------------------------------------------------- properties
@@ -394,16 +426,41 @@ class Database:
             return self.config
         return dataclasses.replace(self.config, method=method)
 
+    @property
+    def calibration(self) -> Calibration:
+        """The per-stage selectivity probe the cascade planner consumes
+        — built at :meth:`build`, persisted in the bundle; a legacy
+        bundle without one gets it measured here, once."""
+        if self._calibration is None:
+            self._calibration = calibrate(self.data, self.w, self.config.p)
+        return self._calibration
+
+    def _resolve_method(
+        self, cfg: SearchConfig, k: int | None = None
+    ) -> tuple[SearchConfig, CascadePlan | None]:
+        """``method="auto"`` -> the calibration-chosen stage order; any
+        concrete method passes through untouched.  The choice affects
+        cost only — every pipeline bit-matches (tier-1 exactness)."""
+        if cfg.method != "auto":
+            return cfg, None
+        cascade = choose_cascade(
+            self.calibration, k=cfg.k if k is None else int(k)
+        )
+        return dataclasses.replace(cfg, method=cascade.method), cascade
+
     def plan(
         self,
         queries=None,
         *,
         driver: str | None = None,
         method: str | None = None,
+        k: int | None = None,
     ) -> Plan:
         """The routing decision ``search`` would take for ``queries``
-        (shape only — nothing is computed).  ``Plan.explain()`` renders
-        the chosen driver, stage list and reasons."""
+        (shape only — nothing but a possible first-use calibration of a
+        legacy bundle is computed).  ``Plan.explain()`` renders the
+        chosen driver, stage order and reasons; under ``method="auto"``
+        it additionally shows the calibrated cascade cost model."""
         if queries is None:
             n_queries = 1
         elif isinstance(queries, (int, np.integer)):
@@ -411,13 +468,15 @@ class Database:
         else:
             arr = np.asarray(queries)
             n_queries = 1 if arr.ndim == 1 else int(arr.shape[0])
+        cfg, cascade = self._resolve_method(self._config_for(method), k)
         return plan_search(
-            self._config_for(method),
+            cfg,
             self.n_rows,
             n_queries,
             has_index=self.index is not None,
             has_mesh=self.mesh is not None,
             driver=driver,
+            cascade=cascade,
         )
 
     def search(
@@ -441,8 +500,8 @@ class Database:
         k = self.config.validate_k(
             self.config.k if k is None else k, self.n_rows
         )
-        cfg = self._config_for(method)
-        plan = self.plan(qs, driver=driver, method=method)
+        plan = self.plan(qs, driver=driver, method=method, k=k)
+        cfg = plan.config  # "auto" resolved to the calibrated cascade
         if plan.driver == "scan":
             return nn_search_scan(
                 qs, self._db_j, w=self.w, p=cfg.p, k=k,
@@ -519,6 +578,7 @@ class Database:
         """
         from repro.stream.matcher import StreamMatcher
 
+        cfg, _ = self._resolve_method(self.config)
         envelopes = None
         if templates is None:
             templates = self.raw
@@ -537,7 +597,7 @@ class Database:
             hop=hop,
             znorm=self.config.znorm,
             block=self.config.block,
-            method=self.config.method,
+            method=cfg.method,
             prefilter=prefilter,
             exclusion=exclusion,
             capacity=capacity,

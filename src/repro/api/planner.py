@@ -1,4 +1,4 @@
-"""Driver planner: pick one of the four search pipelines, explainably.
+"""Planner: pick a driver AND a stage order, explainably.
 
 ``Database.search`` routes every query batch through ``plan_search``,
 which inspects what the session actually has — a stage-0 index, an
@@ -7,11 +7,28 @@ indexed / sharded pipeline.  The decision is deterministic and cheap
 (no measurement, no state), and :meth:`Plan.explain` prints the chosen
 driver, the stage list straight from ``repro.core.pipeline.PIPELINES``,
 and the reasons, so "why did my query take this path" is one call.
+
+Since the bound family became pluggable (LB_Kim before the envelope
+stages, LB_Webb after LB_Keogh — ``repro.core.lb``), *which stages to
+run in which order* is a second planning axis.  The paper answers it
+analytically for the fixed pair LB_Keogh -> LB_Improved; here the
+answer comes from data: ``calibrate`` runs every registered bound over
+a small probe sample at ``Database.build`` time (a few rows as stand-in
+queries against a candidate subsample, plus their true banded DTWs),
+and ``choose_cascade`` simulates each registered pipeline over those
+measurements — per-stage survivor fractions against the sample's k-th
+best distance, times analytic per-stage unit costs — and picks the
+cheapest predicted cascade (``method="auto"``).  Every candidate
+pipeline ends in the exact DP and every bound is sound (tier-1's
+``test_bound_soundness``), so the choice affects *cost only*: any
+chosen cascade returns bit-identical top-k values and indices.
 """
 
 from __future__ import annotations
 
 import dataclasses
+
+import numpy as np
 
 from repro.core.pipeline import PIPELINES
 from repro.api.config import SearchConfig
@@ -29,16 +46,221 @@ DRIVERS = {
 #: dominates tiny sweeps); measured on the FAST bench sizes.
 SMALL_DB_ROWS = 1024
 
+#: LB stages the calibration probe measures, in tightness order.
+CALIBRATED_STAGES = ("lb_kim", "lb_keogh", "lb_improved", "lb_webb")
+
+#: analytic per-candidate unit costs, in units of one O(n) elementwise
+#: sweep over the series: LB_Kim reads four scalars per lane (well under
+#: a sweep, but the lane still pays dispatch + load); LB_Keogh is one
+#: clamp-project-accumulate pass; LB_Improved pass 2 builds a
+#: per-(query, candidate) envelope on top of pass 1; LB_Webb adds the
+#: candidate envelope + two-sided correction to pass 1.  The exact DP
+#: costs one band row per sample: ``2w + 1`` sweeps (``full_dp_cost``).
+STAGE_UNIT_COST = {
+    "lb_kim": 1.0,
+    "lb_keogh": 3.0,
+    "lb_improved": 8.0,
+    "lb_webb": 9.0,
+}
+
+
+def full_dp_cost(w: int) -> float:
+    """Banded-DP cost per candidate, in O(n)-sweep units: one band row
+    of ``2w + 1`` cells per series sample."""
+    return 2.0 * float(w) + 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Measured probe: every registered bound over a (q, c) row sample.
+
+    ``bounds[s, i, j]`` is the powered ``stage_names[s]`` bound between
+    probe query ``i`` and sampled candidate ``j``; ``dtw[i, j]`` the
+    true powered banded DTW.  Built once at ``Database.build``
+    (``calibrate``), persisted in the bundle, consumed by
+    ``choose_cascade`` — planning never re-measures.
+    """
+
+    stage_names: tuple[str, ...]
+    bounds: np.ndarray  # (S, q, c) powered stage bounds
+    dtw: np.ndarray  # (q, c) powered banded DTW
+    w: int  # band the probe ran at (pins full_dp_cost)
+
+    def to_arrays(self) -> dict[str, np.ndarray]:
+        """Bundle serialization (``cal_*`` keys in ``Database.save``)."""
+        return {
+            "stage_names": np.asarray(self.stage_names),
+            "bounds": self.bounds,
+            "dtw": self.dtw,
+            "w": np.int64(self.w),
+        }
+
+    @classmethod
+    def from_arrays(cls, arrays: dict[str, np.ndarray]) -> "Calibration":
+        return cls(
+            stage_names=tuple(str(s) for s in arrays["stage_names"]),
+            bounds=np.asarray(arrays["bounds"], np.float64),
+            dtw=np.asarray(arrays["dtw"], np.float64),
+            w=int(arrays["w"]),
+        )
+
+
+def calibrate(
+    rows: np.ndarray,
+    w: int,
+    p,
+    sample_q: int = 4,
+    sample_c: int = 128,
+) -> Calibration:
+    """Measure every registered bound on a small sample of ``rows``.
+
+    Evenly-spaced rows stand in for queries (``sample_q`` of them)
+    against an evenly-spaced candidate subsample (``sample_c``); all
+    four powered bounds plus the true powered DTW are computed for every
+    probe pair.  Cost is O(sample_q * sample_c) bound evaluations plus
+    as many banded DPs — for the defaults, 512 pairs, a once-per-build
+    blip next to the stage-0 index.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import lb as lb_mod
+    from repro.core.dtw import dtw_qbatch
+    from repro.core.envelope import envelope_batch
+
+    n_db = rows.shape[0]
+    qi = np.unique(
+        np.linspace(0, n_db - 1, min(sample_q, n_db)).astype(np.int64)
+    )
+    ci = np.unique(
+        np.linspace(0, n_db - 1, min(sample_c, n_db)).astype(np.int64)
+    )
+    qs = jnp.asarray(rows[qi])
+    cs = jnp.asarray(rows[ci])
+    upper, lower = envelope_batch(qs, w)
+    bounds = np.stack(
+        [
+            np.asarray(lb_mod.lb_kim_powered_qbatch(cs, qs, p), np.float64),
+            np.asarray(
+                lb_mod.lb_keogh_powered_qbatch(cs, upper, lower, p),
+                np.float64,
+            ),
+            np.asarray(
+                lb_mod.lb_improved_powered_qbatch(cs, qs, upper, lower, w, p),
+                np.float64,
+            ),
+            np.asarray(
+                lb_mod.lb_webb_powered_qbatch(cs, qs, upper, lower, w, p),
+                np.float64,
+            ),
+        ]
+    )
+    dtw = np.asarray(dtw_qbatch(qs, cs, w, p, powered=True), np.float64)
+    return Calibration(CALIBRATED_STAGES, bounds, dtw, int(w))
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadePlan:
+    """One stage-order decision: the chosen pipeline + its cost model.
+
+    ``enter_frac[j]`` is the predicted fraction of candidates that
+    reach ``stages[j]`` (survivors of every earlier bound at the probe
+    sample's k-th best threshold); ``stage_cost[j]`` the per-candidate
+    unit cost of running it; ``cost_per_candidate`` their dot product —
+    the objective ``choose_cascade`` minimized.  ``predicted`` maps
+    every candidate pipeline to its predicted cost, so "why not X" is
+    answered by the same object.
+    """
+
+    method: str  # the chosen PIPELINES key
+    stages: tuple[str, ...]
+    enter_frac: tuple[float, ...]
+    stage_cost: tuple[float, ...]
+    cost_per_candidate: float
+    k: int
+    predicted: tuple[tuple[str, float], ...]  # (method, cost), sorted
+
+    def explain(self) -> str:
+        lines = [
+            f"cascade: {' -> '.join(self.stages)} (method={self.method}, "
+            f"calibrated at k={self.k})",
+            f"predicted cost/candidate: {self.cost_per_candidate:.2f} "
+            f"O(n)-sweep units",
+        ]
+        for s, f, c in zip(self.stages, self.enter_frac, self.stage_cost):
+            lines.append(
+                f"  {s:<12} enter {100 * f:6.2f}%  unit cost {c:5.1f}  "
+                f"-> {f * c:6.2f}"
+            )
+        others = ", ".join(
+            f"{m}={c:.2f}" for m, c in self.predicted if m != self.method
+        )
+        if others:
+            lines.append(f"rejected: {others}")
+        return "\n".join(lines)
+
+
+def choose_cascade(
+    cal: Calibration, k: int = 1, methods=None
+) -> CascadePlan:
+    """Pick the cheapest predicted stage order from the calibration.
+
+    For each candidate pipeline the probe sample is pushed through its
+    stages: a pair survives stage ``s`` iff ``bound_s < t_i`` where
+    ``t_i`` is probe query ``i``'s k-th smallest sampled powered DTW
+    (the cascade's steady-state pruning threshold).  Predicted cost per
+    candidate is ``sum_j unit_cost_j * enter_frac_j`` plus the banded
+    DP on whatever survives every bound.  Deterministic: ties break on
+    (cost, stage count, name).
+    """
+    if methods is None:
+        methods = sorted(
+            m
+            for m, stages in PIPELINES.items()
+            if all(s in cal.stage_names or s == "full" for s in stages)
+        )
+    bound_of = {s: cal.bounds[i] for i, s in enumerate(cal.stage_names)}
+    kk = min(int(k), cal.dtw.shape[1])
+    thr = np.sort(cal.dtw, axis=1)[:, kk - 1][:, None]  # (q, 1)
+
+    scored = []
+    for m in methods:
+        stages = PIPELINES[m]
+        alive = np.ones_like(cal.dtw, dtype=bool)
+        fracs, costs = [], []
+        for s in stages:
+            fracs.append(float(alive.mean()))
+            if s == "full":
+                costs.append(full_dp_cost(cal.w))
+            else:
+                costs.append(STAGE_UNIT_COST[s])
+                alive = alive & (bound_of[s] < thr)
+        total = float(np.dot(fracs, costs))
+        scored.append((total, len(stages), m, tuple(fracs), tuple(costs)))
+    scored.sort(key=lambda t: (t[0], t[1], t[2]))
+    total, _, method, fracs, costs = scored[0]
+    return CascadePlan(
+        method=method,
+        stages=PIPELINES[method],
+        enter_frac=fracs,
+        stage_cost=costs,
+        cost_per_candidate=total,
+        k=kk,
+        predicted=tuple(
+            (m, t) for t, _, m, _, _ in sorted(scored, key=lambda t: t[0])
+        ),
+    )
+
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
-    """One routing decision: driver + stage list + why."""
+    """One routing decision: driver + stage order + why."""
 
     driver: str  # "scan" | "host" | "indexed" | "sharded"
     stages: tuple[str, ...]  # cascade stages, stage-0 filters included
     reasons: tuple[str, ...]
     n_queries: int
     config: SearchConfig
+    cascade: CascadePlan | None = None  # set when the planner chose the order
 
     def explain(self) -> str:
         lines = [
@@ -50,6 +272,8 @@ class Plan:
             "because:",
         ]
         lines += [f"  - {r}" for r in self.reasons]
+        if self.cascade is not None:
+            lines.append(self.cascade.explain())
         return "\n".join(lines)
 
 
@@ -61,15 +285,28 @@ def plan_search(
     has_index: bool,
     has_mesh: bool,
     driver: str | None = None,
+    cascade: CascadePlan | None = None,
 ) -> Plan:
     """Choose the pipeline for a query batch against one database session.
 
     Priority: an explicit ``driver`` override wins; then the stage-0
     index (the most specific prebuilt artifact); then an attached mesh
     (the caller asked for sharded serving); then scan-vs-host on the
-    database size and stage structure.
+    database size and stage structure.  ``cascade`` carries the
+    calibration-driven stage-order decision when the session resolved
+    ``method="auto"`` (``Database._resolve_method``) — it rides the
+    plan so ``explain()`` shows *both* axes of the decision.
     """
     stages = PIPELINES[config.method]
+    cascade_reason = (
+        (
+            f"stage order chosen by calibration: method="
+            f"{config.method!r} predicts "
+            f"{cascade.cost_per_candidate:.2f} sweep units/candidate",
+        )
+        if cascade is not None
+        else ()
+    )
     if driver is not None:
         if driver not in DRIVERS:
             raise ValueError(
@@ -88,7 +325,14 @@ def plan_search(
             )
         if driver == "indexed":
             stages = ("lb_tri",) + stages
-        return Plan(driver, stages, ("caller override",), n_queries, config)
+        return Plan(
+            driver,
+            stages,
+            ("caller override",) + cascade_reason,
+            n_queries,
+            config,
+            cascade,
+        )
 
     if has_index:
         return Plan(
@@ -99,9 +343,11 @@ def plan_search(
                 "arithmetic per candidate kills most lanes before any "
                 "envelope work, and the reference distances seed the "
                 "top-k exactly",
-            ),
+            )
+            + cascade_reason,
             n_queries,
             config,
+            cascade,
         )
     if has_mesh:
         return Plan(
@@ -111,9 +357,11 @@ def plan_search(
                 "mesh attached via Database.use_mesh: the database is "
                 "sharded over its devices and per-query best bounds are "
                 "pmin-exchanged between block rounds",
-            ),
+            )
+            + cascade_reason,
             n_queries,
             config,
+            cascade,
         )
     if config.method == "full":
         return Plan(
@@ -122,9 +370,11 @@ def plan_search(
             (
                 "method='full' has no LB stages to compact, so the dense "
                 "jitted block scan is the fastest layout",
-            ),
+            )
+            + cascade_reason,
             n_queries,
             config,
+            cascade,
         )
     if n_rows < SMALL_DB_ROWS:
         return Plan(
@@ -134,9 +384,11 @@ def plan_search(
                 f"database has {n_rows} rows (< {SMALL_DB_ROWS}): one "
                 f"jitted device sweep beats host orchestration overhead "
                 f"at this size",
-            ),
+            )
+            + cascade_reason,
             n_queries,
             config,
+            cascade,
         )
     return Plan(
         "host",
@@ -146,7 +398,9 @@ def plan_search(
             f"driver gathers LB survivors into pooled fixed-size DP "
             f"chunks, so post-LB wall-clock tracks surviving work "
             f"(the driver benchmarked against the paper's figures)",
-        ),
+        )
+        + cascade_reason,
         n_queries,
         config,
+        cascade,
     )

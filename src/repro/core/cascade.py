@@ -63,18 +63,30 @@ __all__ = [
 class SearchStats:
     """Per-candidate stage counts (paper semantics: Figs 6-10 'pruning').
 
-    ``lb1_pruned + lb2_pruned + full_dtw (+ lb0_pruned) == n_candidates``
-    holds on every search path.  In a query batch the per-candidate
-    counters stay per-query (each query lane decides prune/keep against
-    its own bound — DESIGN.md §3.4) while the ``blocks_*`` counters are
-    execution counts of the shared batched sweep, so a per-query stats
-    object inside a batch reports the batch-level block counts.
+    ``stage_pruned`` carries one pruned count per LB stage the method's
+    pipeline declared (``stage_names`` holds the matching registry
+    names, in cascade order), so arbitrarily deep cascades are counted
+    exactly; the invariant
+
+    ``sum(stage_pruned) + full_dtw (+ lb0_pruned) == n_candidates``
+
+    holds on every search path.  The historical two-slot view stays
+    available read-only: ``lb1_pruned`` is the first stage's count and
+    ``lb2_pruned`` the sum of every later stage's, so the documented
+    ``lb1_pruned + lb2_pruned + full_dtw (+ lb0_pruned) ==
+    n_candidates`` identity keeps holding verbatim.
+
+    In a query batch the per-candidate counters stay per-query (each
+    query lane decides prune/keep against its own bound — DESIGN.md
+    §3.4) while the ``blocks_*`` counters are execution counts of the
+    shared batched sweep, so a per-query stats object inside a batch
+    reports the batch-level block counts.
     """
 
     n_candidates: int
-    lb1_pruned: int  # discarded by LB_Keogh
-    lb2_pruned: int  # discarded by LB_Improved's second pass
     full_dtw: int  # candidates that reached the O(nw) DP
+    stage_names: tuple[str, ...] = ()  # LB stages, cascade order
+    stage_pruned: tuple[int, ...] = ()  # discarded per LB stage
     blocks_total: int = 0
     blocks_lb2: int = 0  # blocks where pass 2 actually executed
     blocks_dtw: int = 0  # blocks where the DP actually executed
@@ -92,6 +104,21 @@ class SearchStats:
     #                   one band-w and one band-2w sweep per reference)
     clusters_total: int = 0
     clusters_pruned: int = 0  # clusters discarded wholesale at stage 0
+
+    @property
+    def lb1_pruned(self) -> int:
+        """Back-compat view: candidates discarded by the first LB stage."""
+        return int(self.stage_pruned[0]) if self.stage_pruned else 0
+
+    @property
+    def lb2_pruned(self) -> int:
+        """Back-compat view: candidates discarded by every later LB stage."""
+        return int(sum(self.stage_pruned[1:]))
+
+    @property
+    def pruned_by(self) -> dict[str, int]:
+        """Per-stage pruned counts keyed by registry stage name."""
+        return dict(zip(self.stage_names, self.stage_pruned))
 
     @property
     def pruning_ratio(self) -> float:
@@ -188,7 +215,8 @@ def make_block_step(
     envelopes; a single query is the ``Q = 1`` special case.
 
     carry = (top_v (Q, k), top_i (Q, k), gbound (Q,),
-             lb1_pruned (Q,), lb2_pruned (Q,), dtw_count (Q,),
+             stage_pruned (S, Q) — one row per LB stage of the method's
+             pipeline, dtw_count (Q,),
              lb2_blocks, dtw_blocks, dp_lane_work, dp_lane_useful)
     input = (block_array, lane_indices[, entry_mask])
     where ``lane_indices`` is the (block,) vector of candidate ids — a
@@ -206,9 +234,10 @@ def make_block_step(
     it at BIG).  All values powered (no l_p root).
     """
     nq = qs.shape[0]
+    n_lb = len(pipe.lb_stage_names(method))
 
     def body(carry, inp):
-        (top_v, top_i, gbound, c_lb1, c_lb2, c_dtw,
+        (top_v, top_i, gbound, c_stage, c_dtw,
          b_lb2, b_dtw, w_dp, u_dp) = carry
         if masked:
             blk, cand_i, mask0 = inp
@@ -235,14 +264,23 @@ def make_block_step(
         top_v = -neg_v
         top_i = jnp.take_along_axis(all_i, sel, axis=1)
 
-        c_lb1 += jnp.sum(mask0 & ~st.alive1, axis=1)
-        c_lb2 += jnp.sum(st.alive1 & ~st.alive2, axis=1)
-        c_dtw += jnp.sum(st.alive2, axis=1)
+        if n_lb:
+            # masks[s] & ~masks[s+1]: lanes LB stage s+1 pruned (§3.6)
+            c_stage += jnp.stack(
+                [
+                    jnp.sum(
+                        st.masks[s] & ~st.masks[s + 1], axis=1,
+                        dtype=jnp.int32,
+                    )
+                    for s in range(n_lb)
+                ]
+            )
+        c_dtw += jnp.sum(st.masks[-1], axis=1, dtype=jnp.int32)
         b_lb2 += jnp.int32(st.need_lb2)
         b_dtw += jnp.int32(st.need_dtw)
         w_dp += st.dp_lane_work
         u_dp += st.dp_lane_useful
-        return (top_v, top_i, gbound, c_lb1, c_lb2, c_dtw,
+        return (top_v, top_i, gbound, c_stage, c_dtw,
                 b_lb2, b_dtw, w_dp, u_dp), None
 
     return body
@@ -253,18 +291,19 @@ def init_carry(
     top_v: jax.Array | None = None,
     top_i: jax.Array | None = None,
     nq: int = 1,
+    n_lb: int = 0,
 ):
-    """Fresh query-major scan carry for ``nq`` query lanes; optionally
-    seeded with an already-known (Q, k) top-k (the indexed search seeds
-    it with the exact reference distances)."""
+    """Fresh query-major scan carry for ``nq`` query lanes and a
+    pipeline with ``n_lb`` LB stages; optionally seeded with an
+    already-known (Q, k) top-k (the indexed search seeds it with the
+    exact reference distances)."""
     return (
         jnp.full((nq, k), BIG) if top_v is None else jnp.asarray(top_v),
         jnp.full((nq, k), -1, jnp.int32)
         if top_i is None
         else jnp.asarray(top_i, jnp.int32),
         jnp.full((nq,), BIG),
-        jnp.zeros((nq,), jnp.int32),
-        jnp.zeros((nq,), jnp.int32),
+        jnp.zeros((n_lb, nq), jnp.int32),  # stage_pruned, one row/LB stage
         jnp.zeros((nq,), jnp.int32),
         jnp.int32(0),
         jnp.int32(0),
@@ -297,15 +336,18 @@ def _scan_search(
     body = make_block_step(
         qs, upper, lower, w, p, k, block, method, n_real=n_real
     )
-    carry, _ = jax.lax.scan(body, init_carry(k, nq=nq), (blocks, idx))
-    top_v, top_i, _gbound, c1, c2, c3, b2, b3, w_dp, u_dp = carry
-    return top_v, top_i, c1, c2, c3, b2, b3, w_dp, u_dp
+    n_lb = len(pipe.lb_stage_names(method))
+    carry, _ = jax.lax.scan(
+        body, init_carry(k, nq=nq, n_lb=n_lb), (blocks, idx)
+    )
+    top_v, top_i, _gbound, cs, c3, b2, b3, w_dp, u_dp = carry
+    return top_v, top_i, cs, c3, b2, b3, w_dp, u_dp
 
 
 def _batch_stats(
     n_db: int,
-    c1: np.ndarray,
-    c2: np.ndarray,
+    stage_names: tuple[str, ...],
+    stage_pruned: np.ndarray,
     c3: np.ndarray,
     b2: int,
     b3: int,
@@ -314,22 +356,25 @@ def _batch_stats(
     dp_lane_work: int = 0,
     dp_lane_useful: int = 0,
 ) -> tuple[SearchStats, tuple[SearchStats, ...]]:
-    """Per-query + aggregated stats from the (Q,) counter vectors.
+    """Per-query + aggregated stats from the per-stage counter vectors.
 
-    Every driver masks or slices padded lanes out of its counters, so no
-    pad corrections are needed here.  ``per_query_stage0`` optionally
-    carries each query's stage-0 counter dict (lb0_pruned / ref_dtw /
-    clusters_*) from the indexed path.  The DP lane counters are
-    batch-level (survivor pairs are pooled across queries), so per-query
-    stats carry the batch values, like ``blocks_*``.
+    ``stage_pruned`` is (S, Q) — one row per LB stage of the method's
+    pipeline, in ``stage_names`` order.  Every driver masks or slices
+    padded lanes out of its counters, so no pad corrections are needed
+    here.  ``per_query_stage0`` optionally carries each query's stage-0
+    counter dict (lb0_pruned / ref_dtw / clusters_*) from the indexed
+    path.  The DP lane counters are batch-level (survivor pairs are
+    pooled across queries), so per-query stats carry the batch values,
+    like ``blocks_*``.
     """
-    nq = len(c1)
+    nq = len(c3)
+    stage_pruned = np.asarray(stage_pruned).reshape(len(stage_names), nq)
     s0_per = per_query_stage0 if per_query_stage0 is not None else [{}] * nq
     per_query = tuple(
         SearchStats(
             n_candidates=n_db,
-            lb1_pruned=int(c1[i]),
-            lb2_pruned=int(c2[i]),
+            stage_names=tuple(stage_names),
+            stage_pruned=tuple(int(v) for v in stage_pruned[:, i]),
             full_dtw=int(c3[i]),
             blocks_total=blocks_total,
             blocks_lb2=int(b2),
@@ -342,8 +387,8 @@ def _batch_stats(
     )
     agg = SearchStats(
         n_candidates=nq * n_db,
-        lb1_pruned=sum(s.lb1_pruned for s in per_query),
-        lb2_pruned=sum(s.lb2_pruned for s in per_query),
+        stage_names=tuple(stage_names),
+        stage_pruned=tuple(int(v) for v in stage_pruned.sum(axis=1)),
         full_dtw=sum(s.full_dtw for s in per_query),
         blocks_total=blocks_total,
         blocks_lb2=int(b2),
@@ -380,13 +425,13 @@ def nn_search_scan(
     db = jnp.asarray(db)
     n_db = db.shape[0]
     dbp, _ = _pad_db(db, block)
-    top_v, top_i, c1, c2, c3, b2, b3, w_dp, u_dp = _scan_search(
+    top_v, top_i, cs, c3, b2, b3, w_dp, u_dp = _scan_search(
         qs, dbp, jnp.int32(n_db), int(w), p, int(k), int(block), method
     )
     agg, per_query = _batch_stats(
         n_db,
-        np.asarray(c1),
-        np.asarray(c2),
+        pipe.lb_stage_names(method),
+        np.asarray(cs),
         np.asarray(c3),
         int(b2),
         int(b3),
@@ -476,12 +521,7 @@ def nn_search_host(
     top_v = np.full((nq, k), BIG)
     top_i = np.full((nq, k), -1, np.int64)
     lb_names = pipe.lb_stage_names(method)
-    lb_pruned = np.zeros((2, nq), np.int64)  # SearchStats has lb1/lb2 slots
-    if len(lb_names) > 2:
-        raise ValueError(
-            f"SearchStats tracks at most two LB stages, pipeline for "
-            f"{method!r} declares {len(lb_names)}"
-        )
+    lb_pruned = np.zeros((len(lb_names), nq), np.int64)  # per LB stage
     c3 = np.zeros(nq, np.int64)
     blocks_lb2 = blocks_dtw = 0
     dp_lane_work = dp_lane_useful = 0
@@ -508,7 +548,8 @@ def nn_search_host(
             if si > 0:
                 if not alive.any():
                     break
-                blocks_lb2 += 1
+                if si == 1:  # once per block, however deep the cascade
+                    blocks_lb2 += 1
             lb = np.asarray(
                 _dense_stage_qblock(name, qs, upper, lower, blk, w, p)
             )[:, : hi - lo]
@@ -550,8 +591,8 @@ def nn_search_host(
 
     agg, per_query = _batch_stats(
         n_db,
-        lb_pruned[0],
-        lb_pruned[1],
+        lb_names,
+        lb_pruned,
         c3,
         blocks_lb2,
         blocks_dtw,
@@ -606,11 +647,14 @@ def _scan_search_compact(
     body = make_block_step(
         qs, upper, lower, w, p, k, block, method, masked=True
     )
+    n_lb = len(pipe.lb_stage_names(method))
     carry, _ = jax.lax.scan(
-        body, init_carry(k, top_v0, top_i0, nq=nq), (blocks, idxb, maskb)
+        body,
+        init_carry(k, top_v0, top_i0, nq=nq, n_lb=n_lb),
+        (blocks, idxb, maskb),
     )
-    top_v, top_i, _gbound, c1, c2, c3, b2, b3, w_dp, u_dp = carry
-    return top_v, top_i, c1, c2, c3, b2, b3, w_dp, u_dp
+    top_v, top_i, _gbound, cs, c3, b2, b3, w_dp, u_dp = carry
+    return top_v, top_i, cs, c3, b2, b3, w_dp, u_dp
 
 
 def nn_search_indexed(
@@ -757,11 +801,12 @@ def nn_search_indexed(
             per_query=per_query,
         )
 
+    lb_names = pipe.lb_stage_names(method)
     if len(survivors) == 0:
         agg, per_query = _batch_stats(
             n_db,
-            np.zeros(nq, np.int64),
-            np.zeros(nq, np.int64),
+            lb_names,
+            np.zeros((len(lb_names), nq), np.int64),
             np.full(nq, n_refs, np.int64),
             0,
             0,
@@ -785,7 +830,7 @@ def nn_search_indexed(
     mask = np.concatenate(
         [alive[:, survivors], np.zeros((nq, pad), bool)], axis=1
     )
-    top_vj, top_ij, c1, c2, c3, b2, b3, w_dp, u_dp = _scan_search_compact(
+    top_vj, top_ij, cs, c3, b2, b3, w_dp, u_dp = _scan_search_compact(
         qs,
         sub,
         jnp.asarray(idx, jnp.int32),
@@ -803,8 +848,8 @@ def nn_search_indexed(
     # count as full_dtw (they seed the top-k with true distances)
     agg, per_query = _batch_stats(
         n_db,
-        np.asarray(c1),
-        np.asarray(c2),
+        lb_names,
+        np.asarray(cs),
         np.asarray(c3) + n_refs,
         int(b2),
         int(b3),

@@ -40,6 +40,7 @@ from repro.core.cascade import (
 )
 from repro.core.dtw import BIG, PNorm, finish_cost
 from repro.core.envelope import envelope_batch
+from repro.core import pipeline as pipe
 
 
 def _sharded_search_fn(
@@ -99,19 +100,25 @@ def _sharded_search_fn(
             gbound = jax.lax.pmin(gbound, axis_names)
             return (top_v, top_i, gbound, *stats), None
 
-        carry, _ = jax.lax.scan(round_body, init_carry(k, nq=nq), (blocks, idx))
-        top_v, top_i, _gbound, c1, c2, c3, b2, b3, w_dp, u_dp = carry
+        carry, _ = jax.lax.scan(
+            round_body,
+            init_carry(k, nq=nq, n_lb=len(pipe.lb_stage_names(method))),
+            (blocks, idx),
+        )
+        top_v, top_i, _gbound, cs, c3, b2, b3, w_dp, u_dp = carry
         # gather per-shard per-query top-k along the k axis and merge
         all_v = jax.lax.all_gather(top_v, axis_names, axis=1, tiled=True)
         all_i = jax.lax.all_gather(top_i, axis_names, axis=1, tiled=True)
         neg, sel = jax.lax.top_k(-all_v, k)
         merged_i = jnp.take_along_axis(all_i, sel, axis=1)
-        cand_stats = jnp.stack(  # (3, Q) per-query candidate counters
+        # (S+1, Q) per-query candidate counters: one row per LB stage,
+        # then the DP row — summed over shards
+        cand_stats = jnp.concatenate(
             [
-                jax.lax.psum(c1, axis_names),
-                jax.lax.psum(c2, axis_names),
-                jax.lax.psum(c3, axis_names),
-            ]
+                jax.lax.psum(cs, axis_names),
+                jax.lax.psum(c3, axis_names)[None, :],
+            ],
+            axis=0,
         )
         block_stats = jnp.stack(  # summed over shards, like blocks_total
             [
@@ -171,11 +178,12 @@ def sharded_nn_search(
     top_v, top_i, cand_stats, block_stats = fn(qs, db)
     cand_stats = np.asarray(cand_stats)
     b2, b3, w_dp, u_dp = (int(v) for v in np.asarray(block_stats))
+    lb_names = pipe.lb_stage_names(method)
     agg, per_query = _batch_stats(
         int(db.shape[0]),
-        cand_stats[0],
-        cand_stats[1],
-        cand_stats[2],
+        lb_names,
+        cand_stats[: len(lb_names)],
+        cand_stats[-1],
         b2,
         b3,
         blocks_total=int(db.shape[0]) // block,

@@ -1,4 +1,4 @@
-"""LB_Keogh and LB_Improved — paper Sections 10-11.
+"""The lower-bound family: LB_Kim, LB_Keogh, LB_Improved, LB_Webb.
 
 Conventions follow the paper's Algorithm 2/3: the *query* ``q`` has a
 precomputed envelope (U, L); each *candidate* ``c`` is checked against it.
@@ -7,6 +7,49 @@ precomputed envelope (U, L); each *candidate* ``c`` is checked against it.
   LB_Keogh_p(c, q)   = || c - H(c, q) ||_p                      (Cor. 3)
   LB_Improved_p(c,q)^p = LB_Keogh_p(c,q)^p
                         + LB_Keogh_p(q, H(c,q))^p               (Cor. 4)
+
+Two more bounds bracket those (DESIGN.md §3.9):
+
+* **LB_Kim** — the constant-work first/last/extremum bound (Kim, Park &
+  Chu 2001), *envelope-free*: every warping path must align the first
+  cells with each other and the last cells with each other, and the
+  global extrema of the two series must each align with *some* cell of
+  the other, so each of
+  ``|q_0 - c_0|``, ``|q_{n-1} - c_{n-1}|``, ``|max q - max c|``,
+  ``|min q - min c|`` lower-bounds an aligned cell cost.  First and
+  last cells are distinct path cells (n >= 2), so their powered costs
+  *add*; the extremum terms may alias them, so they join by max::
+
+      LB_Kim_p^p = max(|q_0-c_0|^p + |q_{n-1}-c_{n-1}|^p,
+                       |max q - max c|^p, |min q - min c|^p)
+
+  (all four max-combined for p = inf).  It needs no envelope and only
+  four scalars per series, so it runs *before* LB_Keogh in a cascade.
+
+* **LB_Webb** — the two-sided tightening from the elastic-bands
+  framework (Webb & Petitjean, "Tighter bounds for the elastic bands
+  across the path"): on top of the candidate-side LB_Keogh sum it adds
+  a query-side term wherever ``q`` leaves the *candidate's* band-w
+  envelope (U^c, L^c), corrected with the query's envelopes-of-
+  envelopes ``UL^q = upper_env(L^q)`` / ``LU^q = lower_env(U^q)`` so a
+  path cell charged by both sides never pays more than its true cost:
+
+      f_q(i) = (q_i - max(U^c_i, UL^q_i))_+   if q_i > U^c_i
+             = (min(L^c_i, LU^q_i) - q_i)_+   if q_i < L^c_i
+             = 0                               otherwise
+      LB_Webb_p^p = LB_Keogh_p(c, q)^p + sum_i f_q(i)^p
+
+  Soundness: charge each path a candidate-side cell per column and a
+  query-side cell per row.  A cell (i, j), |i - j| <= w, charged by
+  both sides satisfies charge_row + charge_col <= |q_i - c_j| — when
+  ``q_i > U^c_i`` the column charge can only be ``(L^q_j - c_j)_+``
+  (the same-side double charge is contradictory: q_i > U^c_i >= c_j >
+  U^q_j >= q_i), and ``UL^q_i >= L^q_j`` hands the row exactly the
+  remainder ``q_i - L^q_j``; symmetrically below.  With
+  ``x^p + y^p <= (x + y)^p`` the powered charges sum under the cell's
+  powered cost, so the two sums add for finite p.  For p = inf the
+  query-side term is the plain two-sided max distance to (U^c, L^c)
+  and joins by max (no correction needed under max-combine).
 
 Internally the cascade works with *powered* values (sum |.|^p, no root)
 so thresholds compare without transcendentals; public helpers return the
@@ -118,6 +161,156 @@ def lb_keogh_powered_qbatch(
     every query lane of the batch in a single sweep.
     """
     return lb_keogh_powered(cs[None, :, :], upper[:, None, :], lower[:, None, :], p)
+
+
+# ---------------------------------------------------------------- LB_Kim
+
+
+def lb_kim_powered(c: jax.Array, q: jax.Array, p: PNorm = 1) -> jax.Array:
+    """Powered LB_Kim for one (c, q) pair of 1-D arrays (module docstring:
+    first + last powered costs add, extremum terms join by max)."""
+    d_first = elem_cost(jnp.abs(c[..., 0] - q[..., 0]), p)
+    d_last = elem_cost(jnp.abs(c[..., -1] - q[..., -1]), p)
+    d_max = elem_cost(
+        jnp.abs(jnp.max(c, axis=-1) - jnp.max(q, axis=-1)), p
+    )
+    d_min = elem_cost(
+        jnp.abs(jnp.min(c, axis=-1) - jnp.min(q, axis=-1)), p
+    )
+    if p == jnp.inf:
+        return jnp.maximum(jnp.maximum(d_first, d_last), jnp.maximum(d_max, d_min))
+    return jnp.maximum(d_first + d_last, jnp.maximum(d_max, d_min))
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def lb_kim(c: jax.Array, q: jax.Array, p: PNorm = 1) -> jax.Array:
+    return finish_cost(lb_kim_powered(c, q, p), p)
+
+
+def lb_kim_powered_batch(cs: jax.Array, q: jax.Array, p: PNorm = 1) -> jax.Array:
+    """(B, n) candidates vs one query -> (B,) powered LB_Kim bounds."""
+    return lb_kim_powered(cs, q[None, :], p)
+
+
+def lb_kim_powered_qbatch(cs: jax.Array, qs: jax.Array, p: PNorm = 1) -> jax.Array:
+    """(B, n) candidates vs (Q, n) queries -> (Q, B) powered LB_Kim bounds.
+
+    Envelope-free: only the first/last samples and global extrema of each
+    side enter, so the whole (Q, B) tile costs O((Q + B) n) reductions
+    plus O(Q B) combines — the cheapest registered stage by far.
+    """
+    return lb_kim_powered(cs[None, :, :], qs[:, None, :], p)
+
+
+# --------------------------------------------------------------- LB_Webb
+
+
+def _webb_qside(
+    q: jax.Array,
+    cand_u: jax.Array,
+    cand_l: jax.Array,
+    q_ul: jax.Array,
+    q_lu: jax.Array,
+    p: PNorm,
+) -> jax.Array:
+    """Powered query-side Webb term (module docstring): per-sample
+    corrected distances summed (maxed for p = inf) over the last axis.
+    All inputs broadcast; ``cand_u``/``cand_l`` are the *candidate's*
+    band-w envelope, ``q_ul``/``q_lu`` the query's envelopes-of-envelopes
+    (ignored at p = inf where the uncorrected two-sided max is sound)."""
+    if p == jnp.inf:
+        d = jnp.maximum(q - cand_u, 0.0) + jnp.maximum(cand_l - q, 0.0)
+        return jnp.max(elem_cost(d, p), axis=-1)
+    over = jnp.where(
+        q > cand_u, jnp.maximum(q - jnp.maximum(cand_u, q_ul), 0.0), 0.0
+    )
+    under = jnp.where(
+        q < cand_l, jnp.maximum(jnp.minimum(cand_l, q_lu) - q, 0.0), 0.0
+    )
+    return jnp.sum(elem_cost(over + under, p), axis=-1)
+
+
+def envelope_of_envelopes(
+    upper: jax.Array, lower: jax.Array, w: int
+) -> tuple[jax.Array, jax.Array]:
+    """(UL, LU) for LB_Webb's correction: the upper envelope of the lower
+    envelope and the lower envelope of the upper envelope, band ``w``.
+    Accepts (n,) or batched (Q, n) envelopes."""
+    single = upper.ndim == 1
+    u2 = upper[None, :] if single else upper
+    l2 = lower[None, :] if single else lower
+    ul = envelope_batch(l2, w)[0]  # upper envelope of L
+    lu = envelope_batch(u2, w)[1]  # lower envelope of U
+    if single:
+        return ul[0], lu[0]
+    return ul, lu
+
+
+def lb_webb_powered(
+    c: jax.Array,
+    q: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    w: int,
+    p: PNorm = 1,
+) -> jax.Array:
+    """Powered LB_Webb for a single (c, q) pair (1-D arrays): the
+    candidate-side LB_Keogh sum plus the corrected query-side term."""
+    pass1 = lb_keogh_powered(c, upper, lower, p)
+    cand_u, cand_l = envelope(c, w)
+    q_ul, q_lu = envelope_of_envelopes(upper, lower, w)
+    qside = _webb_qside(q, cand_u, cand_l, q_ul, q_lu, p)
+    if p == jnp.inf:
+        return jnp.maximum(pass1, qside)
+    return pass1 + qside
+
+
+@functools.partial(jax.jit, static_argnames=("w", "p"))
+def lb_webb(c: jax.Array, q: jax.Array, w: int, p: PNorm = 1) -> jax.Array:
+    upper, lower = envelope(q, w)
+    return finish_cost(lb_webb_powered(c, q, upper, lower, w, p), p)
+
+
+def lb_webb_powered_qbatch(
+    cs: jax.Array,
+    qs: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    w: int,
+    p: PNorm = 1,
+    q_ul: jax.Array | None = None,
+    q_lu: jax.Array | None = None,
+    cand_u: jax.Array | None = None,
+    cand_l: jax.Array | None = None,
+) -> jax.Array:
+    """(B, n) candidates vs (Q, n) queries -> (Q, B) powered LB_Webb.
+
+    The candidate envelopes (B, n) are shared across the query batch and
+    the query-side correction envelopes (Q, n) are shared across the
+    block, so unlike LB_Improved's pass 2 no per-(query, candidate)
+    envelope is ever built — the tile costs one candidate envelope sweep
+    plus elementwise work.  Precomputed ``q_ul``/``q_lu`` (cached per
+    query batch) and ``cand_u``/``cand_l`` may be passed to skip the
+    envelope sweeps.
+    """
+    pass1 = lb_keogh_powered_qbatch(cs, upper, lower, p)
+    if cand_u is None or cand_l is None:
+        cand_u, cand_l = envelope_batch(cs, w)
+    if p == jnp.inf:
+        q_ul = q_lu = jnp.zeros_like(qs)  # unused under max-combine
+    elif q_ul is None or q_lu is None:
+        q_ul, q_lu = envelope_of_envelopes(upper, lower, w)
+    qside = _webb_qside(
+        qs[:, None, :],
+        cand_u[None, :, :],
+        cand_l[None, :, :],
+        q_ul[:, None, :],
+        q_lu[:, None, :],
+        p,
+    )
+    if p == jnp.inf:
+        return jnp.maximum(pass1, qside)
+    return pass1 + qside
 
 
 def lb_improved_powered_qbatch(

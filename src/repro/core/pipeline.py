@@ -54,7 +54,9 @@ from repro.core.dtw import (
 from repro.core.envelope import envelope_batch
 from repro.core import lb as lb_mod
 
-Method = Literal["full", "lb_keogh", "lb_improved"]
+Method = Literal[
+    "full", "lb_keogh", "lb_improved", "lb_webb", "kim_improved", "kim_webb"
+]
 
 #: lanes per compacted gather; also the unit dp_lane_work is counted in
 LANE_CHUNK = 32
@@ -62,13 +64,22 @@ LANE_CHUNK = 32
 
 class PipeContext(NamedTuple):
     """Per-call constants every stage closes over: the query batch, its
-    envelopes, and the (static) band half-width and norm order."""
+    envelopes, and the (static) band half-width and norm order.
+
+    ``q_ul`` / ``q_lu`` are the query envelopes-of-envelopes LB_Webb's
+    correction needs (upper env of L, lower env of U — DESIGN.md §3.9);
+    ``run_block_stages`` fills them only when the method's pipeline
+    contains ``lb_webb`` at finite p, so every other cascade pays
+    nothing for the field.
+    """
 
     qs: jax.Array  # (Q, n)
     upper: jax.Array  # (Q, n)
     lower: jax.Array  # (Q, n)
     w: int
     p: PNorm
+    q_ul: jax.Array | None = None  # (Q, n) upper envelope of lower
+    q_lu: jax.Array | None = None  # (Q, n) lower envelope of upper
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +104,14 @@ class Stage:
 
 
 # --------------------------------------------------------------- stages
+
+
+def _lb_kim_dense(ctx: PipeContext, blk: jax.Array) -> jax.Array:
+    return lb_mod.lb_kim_powered_qbatch(blk, ctx.qs, ctx.p)
+
+
+def _lb_kim_pair(ctx, blk, qi, ci, bound, prev):
+    return lb_mod.lb_kim_powered(blk[ci], ctx.qs[qi], ctx.p)
 
 
 def _lb_keogh_dense(ctx: PipeContext, blk: jax.Array) -> jax.Array:
@@ -126,6 +145,30 @@ def _lb_improved_pair(ctx, blk, qi, ci, bound, prev):
     return prev + pass2
 
 
+def _lb_webb_dense(ctx: PipeContext, blk: jax.Array) -> jax.Array:
+    return lb_mod.lb_webb_powered_qbatch(
+        blk, ctx.qs, ctx.upper, ctx.lower, ctx.w, ctx.p,
+        q_ul=ctx.q_ul, q_lu=ctx.q_lu,
+    )
+
+
+def _lb_webb_pair(ctx, blk, qi, ci, bound, prev):
+    """Webb query-side term per compacted lane pair, added to the
+    gathered LB_Keogh values (``prev``): the candidate envelopes are
+    row-independent, so per-lane `envelope_batch` on the gathered rows
+    bit-matches the dense tile computation."""
+    c = blk[ci]  # (chunk, n)
+    cand_u, cand_l = envelope_batch(c, ctx.w)
+    q = ctx.qs[qi]
+    if ctx.p == jnp.inf:
+        qside = lb_mod._webb_qside(q, cand_u, cand_l, 0.0, 0.0, ctx.p)
+        return jnp.maximum(prev, qside)
+    qside = lb_mod._webb_qside(
+        q, cand_u, cand_l, ctx.q_ul[qi], ctx.q_lu[qi], ctx.p
+    )
+    return prev + qside
+
+
 def _dtw_dense(ctx: PipeContext, blk: jax.Array) -> jax.Array:
     return dtw_qbatch(ctx.qs, blk, ctx.w, ctx.p, powered=True)
 
@@ -146,22 +189,30 @@ def _dtw_pair(ctx, blk, qi, ci, bound, prev):
 
 
 STAGES: dict[str, Stage] = {
+    "lb_kim": Stage("lb_kim", _lb_kim_dense, _lb_kim_pair),
     "lb_keogh": Stage("lb_keogh", _lb_keogh_dense, _lb_keogh_pair),
     "lb_improved": Stage("lb_improved", _lb_improved_dense, _lb_improved_pair),
+    "lb_webb": Stage("lb_webb", _lb_webb_dense, _lb_webb_pair),
     "full": Stage("full", _dtw_dense, _dtw_pair, exact=True),
 }
 
 #: the cascade per method: LB stages in tightening order, terminal DP last.
 #: A new bound slots into these lists (and STAGES) once and every driver
-#: — scan, host, indexed, sharded, stream — picks it up.  Caveat:
-#: ``SearchStats`` exposes two LB prune slots (lb1/lb2), so a pipeline
-#: may declare at most two LB stages until the stats grow per-stage
-#: vectors (the host driver raises on more; the scan drivers fold any
-#: later LB stage's prunes into the lb2 slot).
+#: — scan, host, indexed, sharded, stream — picks it up; ``SearchStats``
+#: carries one pruned counter per declared LB stage (``stage_pruned``),
+#: so pipelines may be arbitrarily deep.  ``lb_improved`` and ``lb_webb``
+#: are mutually exclusive post-Keogh tighteners (both charge query-side
+#: path cells on top of the candidate-side sum — stacking them would
+#: double-count), which is why no pipeline lists both.  The planner
+#: (``repro.api.planner``) chooses among these keys from measured
+#: selectivity; the fixed defaults remain the paper's.
 PIPELINES: dict[Method, tuple[str, ...]] = {
     "full": ("full",),
     "lb_keogh": ("lb_keogh", "full"),
     "lb_improved": ("lb_keogh", "lb_improved", "full"),
+    "lb_webb": ("lb_keogh", "lb_webb", "full"),
+    "kim_improved": ("lb_kim", "lb_keogh", "lb_improved", "full"),
+    "kim_webb": ("lb_kim", "lb_keogh", "lb_webb", "full"),
 }
 
 
@@ -254,23 +305,35 @@ class BlockStages(NamedTuple):
 
     ``d``        — (Q, B) distances; BIG on lanes that never reached the DP
                    (abandoned DP lanes hold a value >= their bound).
-    ``alive1``   — mask after the first LB stage (== entry mask for
-                   method "full").
-    ``alive2``   — mask after the last LB stage (== alive1 for
-                   single-LB methods); the lanes the DP ran on.
-    ``need_lb2`` — whether any lane entered the second LB stage.
+    ``masks``    — per-stage alive masks: ``masks[0]`` is the entry mask,
+                   ``masks[s]`` the lanes alive after LB stage ``s``
+                   (one entry per LB stage the method's pipeline
+                   declares, so ``masks[s-1] & ~masks[s]`` are the lanes
+                   stage ``s`` pruned and ``masks[-1]`` the lanes the DP
+                   ran on).  Length is static per method.
+    ``need_lb2`` — whether any lane entered a post-first LB stage.
     ``need_dtw`` — whether any lane entered the DP.
     ``dp_lane_work``   — DP lanes actually executed (chunk-padded).
     ``dp_lane_useful`` — DP lanes that were alive (== full_dtw increment).
+
+    ``alive1`` / ``alive2`` (mask after the first / last LB stage) are
+    kept as properties for the two-stage readers.
     """
 
     d: jax.Array
-    alive1: jax.Array
-    alive2: jax.Array
+    masks: tuple[jax.Array, ...]
     need_lb2: jax.Array
     need_dtw: jax.Array
     dp_lane_work: jax.Array
     dp_lane_useful: jax.Array
+
+    @property
+    def alive1(self) -> jax.Array:
+        return self.masks[1] if len(self.masks) > 1 else self.masks[0]
+
+    @property
+    def alive2(self) -> jax.Array:
+        return self.masks[-1]
 
 
 def run_block_stages(
@@ -302,26 +365,29 @@ def run_block_stages(
     ctx = PipeContext(qs, upper, lower, w, p)
     names = PIPELINES[method]
     stages = [STAGES[nm] for nm in names]
+    if "lb_webb" in names and p != jnp.inf:
+        # Webb's correction envelopes depend only on the query batch;
+        # computed here (not per stage) so the compacted pair form can
+        # gather them per lane
+        q_ul, q_lu = lb_mod.envelope_of_envelopes(upper, lower, w)
+        ctx = ctx._replace(q_ul=q_ul, q_lu=q_lu)
 
     alive = mask0
-    masks = []
+    masks = [mask0]
     vals = jnp.full((nq, block), BIG)  # no prior bound before stage 1
     for si, stage in enumerate(stages):
         if stage.exact:
             # any lane that entered a tightening stage past the first LB
-            # (SearchStats tracks two LB slots; the host driver guards)
             need_lb2 = (
-                jnp.any(masks[0]) if len(stages) > 2 else jnp.bool_(False)
+                jnp.any(masks[1]) if len(stages) > 2 else jnp.bool_(False)
             )
             need_dtw = jnp.any(alive)
             d, dp_work = _run_stage_compacted(
                 ctx, stage, blk, alive, bound, vals, lane_chunk
             )
             dp_useful = jnp.sum(alive).astype(jnp.int32)
-            alive1 = masks[0] if masks else mask0
-            alive2 = masks[-1] if masks else mask0
             return BlockStages(
-                d, alive1, alive2, need_lb2, need_dtw, dp_work, dp_useful
+                d, tuple(masks), need_lb2, need_dtw, dp_work, dp_useful
             )
         if si == 0:
             vals = stage.dense(ctx, blk)

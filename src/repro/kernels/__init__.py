@@ -8,6 +8,8 @@ TPU kernel here, with the layout rethought for VMEM/VPU execution
 
 * ``envelope``    — van Herk–Gil–Werman sliding min/max (replaces the
   sequential deque of the paper's Algorithm 1).
+* ``lb_kim``      — constant-time first/last/extremum bound (Kim); runs
+  before the envelope stages, needs no envelopes, four scalars per lane.
 * ``lb_keogh``    — fused clamp-project-accumulate; emits the powered bound
   AND the projection H(c, q) in one VMEM pass (feeds LB_Improved pass 2).
 * ``lb_improved`` — fused pass 2: envelope of the projection + second
@@ -48,6 +50,7 @@ from repro.kernels.lb_improved import (
     lb_improved_stream_qbatch_op,
     lb_improved_stream_qbatch_ref,
 )
+from repro.kernels.lb_kim import lb_kim_qbatch_op, lb_kim_qbatch_ref
 from repro.kernels.lb_keogh import (
     lb_keogh_op,
     lb_keogh_qbatch_op,
@@ -74,6 +77,8 @@ __all__ = [
     "lb_improved_qbatch_ref",
     "lb_improved_stream_qbatch_op",
     "lb_improved_stream_qbatch_ref",
+    "lb_kim_qbatch_op",
+    "lb_kim_qbatch_ref",
     "lb_keogh_op",
     "lb_keogh_qbatch_op",
     "lb_keogh_ref",

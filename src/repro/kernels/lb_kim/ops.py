@@ -1,0 +1,45 @@
+"""Public wrapper for the LB_Kim kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import PAD_VALUE, interpret_default, round_up
+from repro.kernels.lb_kim.kernel import lb_kim_qbatch_pallas
+
+
+def lb_kim_qbatch_op(
+    cands: jax.Array,
+    qs: jax.Array,
+    mask: jax.Array | None = None,
+    p=1,
+    tile_b: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Query-major powered LB_Kim: candidates (B, n) vs queries (Q, n)
+    -> lb (Q, B) in one launch (DESIGN.md §3.4).
+
+    ``mask`` (Q, B), optional: the cascade's entry mask — lanes with a
+    falsy entry emit BIG.  A ragged final block is padded up to
+    ``tile_b`` internally; pad lanes ride through masked-dead and are
+    sliced off before returning.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    cands = jnp.asarray(cands)
+    qs = jnp.asarray(qs)
+    b, n = cands.shape
+    nq = qs.shape[0]
+    if mask is None:
+        mask_f = jnp.ones((nq, b), cands.dtype)
+    else:
+        mask_f = jnp.asarray(mask).astype(cands.dtype)
+    bp = round_up(b, tile_b)
+    if bp != b:
+        cands = jnp.pad(
+            cands, ((0, bp - b), (0, 0)), constant_values=PAD_VALUE
+        )
+        mask_f = jnp.pad(mask_f, ((0, 0), (0, bp - b)))
+    lb = lb_kim_qbatch_pallas(cands, qs, mask_f, p, tile_b, interpret)
+    return lb[:, :b]

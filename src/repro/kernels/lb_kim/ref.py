@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the LB_Kim kernel."""
+
+import jax.numpy as jnp
+
+from repro.core.lb import lb_kim_powered_qbatch
+from repro.kernels.common import BIG
+
+
+def lb_kim_qbatch_ref(cands, qs, mask=None, p=1):
+    """(B, n) candidates vs (Q, n) queries -> lb (Q, B); lanes where
+    ``mask`` (Q, B) is falsy emit BIG, like the kernel."""
+    lb = lb_kim_powered_qbatch(cands, qs, p)
+    if mask is None:
+        return lb
+    return jnp.where(jnp.asarray(mask) > 0, lb, BIG)

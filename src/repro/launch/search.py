@@ -60,7 +60,9 @@ def load_session(args) -> Database | None:
         return None
     db = Database.load(args.db_path)
     print(f"loaded session bundle from {args.db_path}: {db!r}")
-    config = SearchConfig(w=args.w, p=args.p, k=args.k, block=args.block)
+    config = SearchConfig(
+        w=args.w, p=args.p, k=args.k, block=args.block, method=args.method
+    )
     diffs = [
         f"--{f}: bundle={getattr(db.config, f)!r} flag={getattr(config, f)!r}"
         for f in ("w", "p", "block", "method", "znorm", "precision")
@@ -93,7 +95,9 @@ def build_session(args, db_data: np.ndarray) -> Database:
     from repro.index import load_index, save_index
     from repro.index.store import npz_path
 
-    config = SearchConfig(w=args.w, p=args.p, k=args.k, block=args.block)
+    config = SearchConfig(
+        w=args.w, p=args.p, k=args.k, block=args.block, method=args.method
+    )
     index: object = False
     if args.index:
         if args.index_path and os.path.exists(npz_path(args.index_path)):
@@ -134,6 +138,13 @@ def main():
     ap.add_argument("--p", type=_parse_p, default=1, help="1, 2 or inf")
     ap.add_argument("--k", type=int, default=1)
     ap.add_argument("--block", type=int, default=32)
+    ap.add_argument(
+        "--method",
+        type=str,
+        default="lb_improved",
+        help="stage pipeline (repro.core.pipeline.PIPELINES), or 'auto' "
+        "to let the calibrated cascade planner order the bounds",
+    )
     ap.add_argument("--sync-every", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
@@ -193,10 +204,13 @@ def main():
             if indexed
             else ""
         )
+        per_stage = " ".join(
+            f"pruned_{name}={n}" for name, n in s.pruned_by.items()
+        )
         print(
             f"query {qi}: nn={res.index} dist={res.distance:.3f} "
             f"{extra}"
-            f"pruned_lb1={s.lb1_pruned} pruned_lb2={s.lb2_pruned} "
+            f"{per_stage + ' ' if per_stage else ''}"
             f"dtw={s.full_dtw} ({100*s.pruning_ratio:.1f}% pruned)"
         )
     dt = time.perf_counter() - t_all

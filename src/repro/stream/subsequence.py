@@ -52,7 +52,7 @@ import numpy as np
 
 from repro.core.cascade import Method
 from repro.core.dtw import PNorm
-from repro.core.pipeline import run_block_stages
+from repro.core.pipeline import lb_stage_names, run_block_stages
 from repro.core.envelope import envelope_batch
 from repro.stream.state import STD_EPS, StreamState
 
@@ -142,9 +142,12 @@ def _match_block_jit(qs, upper, lower, blk, bound, mask0, w, p, method):
 class StreamStats:
     """Per-stage window accounting, one counter lane per template.
 
-    ``env_pruned + lb1_pruned + lb2_pruned + full_dtw == n_windows``
+    ``env_pruned + stage_pruned.sum(axis=0) + full_dtw == n_windows``
     holds per template (the streaming analogue of ``SearchStats``'
-    invariant); ``blocks_*`` count executions of the shared batched
+    invariant); ``stage_pruned`` is (S, Q), one row per LB stage of the
+    method's pipeline in cascade order, and ``lb1_pruned``/
+    ``lb2_pruned`` are back-compat views (first stage / all later
+    stages).  ``blocks_*`` count executions of the shared batched
     sweep.  ``env_pruned`` depends on how much of the stream had arrived
     when a block was processed (right-truncated tail envelopes are
     tighter), so it may shift between S0 and S1 across different
@@ -152,10 +155,10 @@ class StreamStats:
     """
 
     n_templates: int
+    stage_names: tuple[str, ...]  # LB stages of the method, cascade order
     n_windows: np.ndarray  # (Q,) windows evaluated per template
     env_pruned: np.ndarray  # (Q,) killed by the S0 stream-envelope bound
-    lb1_pruned: np.ndarray  # (Q,) killed by LB_Keogh
-    lb2_pruned: np.ndarray  # (Q,) killed by LB_Improved pass 2
+    stage_pruned: np.ndarray  # (S, Q) killed by each LB stage
     full_dtw: np.ndarray  # (Q,) windows that reached the banded DP
     matched: np.ndarray  # (Q,) raw hits below threshold (pre-exclusion)
     blocks_total: int = 0
@@ -167,9 +170,31 @@ class StreamStats:
     dp_lane_useful: int = 0
 
     @classmethod
-    def zeros(cls, n_templates: int) -> "StreamStats":
+    def zeros(
+        cls,
+        n_templates: int,
+        stage_names: tuple[str, ...] = ("lb_keogh", "lb_improved"),
+    ) -> "StreamStats":
         z = lambda: np.zeros(n_templates, np.int64)
-        return cls(n_templates, z(), z(), z(), z(), z(), z())
+        sp = np.zeros((len(stage_names), n_templates), np.int64)
+        return cls(n_templates, stage_names, z(), z(), sp, z(), z())
+
+    @property
+    def lb1_pruned(self) -> np.ndarray:
+        """(Q,) windows killed by the first LB stage (back-compat view)."""
+        if len(self.stage_names) == 0:
+            return np.zeros(self.n_templates, np.int64)
+        return self.stage_pruned[0]
+
+    @property
+    def lb2_pruned(self) -> np.ndarray:
+        """(Q,) windows killed by any later LB stage (back-compat view)."""
+        return self.stage_pruned[1:].sum(axis=0)
+
+    @property
+    def pruned_by(self) -> dict[str, np.ndarray]:
+        """Per-stage (Q,) kill counts keyed by stage name."""
+        return dict(zip(self.stage_names, self.stage_pruned))
 
     @property
     def pruned_before_dtw(self) -> float:
@@ -264,7 +289,7 @@ class SubsequenceScanner:
         self._qs_j = jnp.asarray(templates)
         self._u_j, self._l_j = u, l
         self._gate_j = jnp.asarray(self.gate)
-        self.stats = StreamStats.zeros(self.nq)
+        self.stats = StreamStats.zeros(self.nq, lb_stage_names(method))
 
     @property
     def span(self) -> int:
@@ -338,14 +363,13 @@ class SubsequenceScanner:
             self.method,
         )
         d = np.asarray(res.d)
-        a1 = np.asarray(res.alive1)
-        a2 = np.asarray(res.alive2)
+        masks = [np.asarray(m) for m in res.masks]
 
         st = self.stats
         st.n_windows += n_valid
-        st.lb1_pruned += (mask0 & ~a1).sum(axis=1)
-        st.lb2_pruned += (a1 & ~a2).sum(axis=1)
-        st.full_dtw += a2.sum(axis=1)
+        for s in range(len(st.stage_names)):
+            st.stage_pruned[s] += (masks[s] & ~masks[s + 1]).sum(axis=1)
+        st.full_dtw += masks[-1].sum(axis=1)
         st.blocks_total += 1
         st.blocks_lb2 += int(res.need_lb2)
         st.blocks_dtw += int(res.need_dtw)

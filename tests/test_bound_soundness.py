@@ -1,0 +1,134 @@
+"""Automatic bound-soundness harness over the stage registry.
+
+Every non-exact :class:`repro.core.pipeline.Stage` must be a true DTW
+lower bound — ``stage(q, c) <= DTW_p(q, c)`` in the powered domain — or
+the cascade silently drops true neighbours.  This harness discovers the
+registry at collection time, so registering a new bound automatically
+puts it under test: an unsound registration fails tier-1 without anyone
+writing a test for it.  (``hypothesis`` is not available in this
+environment, so the property is exercised as a seeded random sweep:
+random lengths, bands, z-normalization, and a mixture of independent
+and near-duplicate series — near-dups are where an unsound bound would
+actually bite, since bound and DTW are close.)
+
+Also pinned here: the terminal ``full`` stage equals the O(n^2) numpy
+oracle, and each stage's compacted per-lane-pair form agrees with its
+dense tile form (the bit-match contract the drivers rely on).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import lb as lb_mod
+from repro.core import pipeline as pipe
+from repro.core.dtw import dtw_reference
+from repro.core.envelope import envelope_batch
+
+#: discovered, not listed: a new Stage registration lands here by itself
+LB_STAGE_NAMES = sorted(n for n, s in pipe.STAGES.items() if not s.exact)
+EXACT_STAGE_NAMES = sorted(n for n, s in pipe.STAGES.items() if s.exact)
+
+N_TRIALS = 5  # random (length, band, data) draws per parameter cell
+Q, B = 2, 5  # queries x candidates per draw
+
+
+def _znorm_rows(x):
+    mean = x.mean(axis=1, keepdims=True)
+    std = np.maximum(x.std(axis=1, keepdims=True), 1e-8)
+    return (x - mean) / std
+
+
+def _draw(rng, znorm):
+    """One random problem: lengths 8..64, band 0..n//2, near-dup mixed in."""
+    n = int(rng.integers(8, 65))
+    w = int(rng.integers(0, n // 2 + 1))
+    qs = rng.standard_normal((Q, n))
+    cs = rng.standard_normal((B, n))
+    # near-duplicates: the regime where bound ~ DTW and unsoundness shows
+    cs[0] = qs[0] + 0.01 * rng.standard_normal(n)
+    cs[1] = qs[-1]  # exact duplicate: bound must be <= DTW == 0 + cost ties
+    if znorm:
+        qs, cs = _znorm_rows(qs), _znorm_rows(cs)
+    return qs.astype(np.float32), cs.astype(np.float32), w
+
+
+def _ctx(qs, w, p):
+    """A PipeContext with every optional field filled, so any stage runs."""
+    u, l = envelope_batch(jnp.asarray(qs), w)
+    q_ul, q_lu = lb_mod.envelope_of_envelopes(u, l, w)
+    return pipe.PipeContext(jnp.asarray(qs), u, l, w, p, q_ul, q_lu)
+
+
+def _powered_ref(q, c, w, p):
+    ref = dtw_reference(q, c, w, p)  # rooted
+    return ref if p in (1, np.inf) else ref**p
+
+
+@pytest.mark.parametrize("znorm", [False, True], ids=["raw", "znorm"])
+@pytest.mark.parametrize("p", [1, 2, np.inf], ids=["p1", "p2", "pinf"])
+@pytest.mark.parametrize("stage_name", LB_STAGE_NAMES)
+def test_every_registered_stage_is_a_lower_bound(stage_name, p, znorm):
+    stage = pipe.STAGES[stage_name]
+    seed = abs(hash((stage_name, str(p), znorm))) % 2**32
+    rng = np.random.default_rng(seed)
+    for _ in range(N_TRIALS):
+        qs, cs, w = _draw(rng, znorm)
+        vals = np.asarray(stage.dense(_ctx(qs, w, p), jnp.asarray(cs)))
+        for i in range(Q):
+            for j in range(B):
+                ref = _powered_ref(qs[i], cs[j], w, p)
+                eps = 1e-4 * max(1.0, abs(ref))
+                assert vals[i, j] <= ref + eps, (
+                    f"{stage_name} is not a lower bound: "
+                    f"lb={vals[i, j]} > dtw={ref} "
+                    f"(p={p}, w={w}, n={qs.shape[1]}, znorm={znorm})"
+                )
+
+
+@pytest.mark.parametrize("p", [1, 2, np.inf], ids=["p1", "p2", "pinf"])
+@pytest.mark.parametrize("stage_name", EXACT_STAGE_NAMES)
+def test_exact_stage_matches_reference(stage_name, p):
+    stage = pipe.STAGES[stage_name]
+    rng = np.random.default_rng(7)
+    qs, cs, w = _draw(rng, znorm=False)
+    vals = np.asarray(stage.dense(_ctx(qs, w, p), jnp.asarray(cs)))
+    for i in range(Q):
+        for j in range(B):
+            ref = _powered_ref(qs[i], cs[j], w, p)
+            np.testing.assert_allclose(vals[i, j], ref, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("p", [1, 2, np.inf], ids=["p1", "p2", "pinf"])
+@pytest.mark.parametrize("stage_name", LB_STAGE_NAMES)
+def test_pair_form_matches_dense_form(stage_name, p):
+    """The compacted per-lane-pair form must agree with the dense tile
+    form on alive lanes — the drivers' bit-match contract.  ``prev`` is
+    the gathered LB_Keogh tile, exactly what the pipeline supplies to
+    the post-Keogh tighteners."""
+    stage = pipe.STAGES[stage_name]
+    rng = np.random.default_rng(11)
+    qs, cs, w = _draw(rng, znorm=False)
+    ctx = _ctx(qs, w, p)
+    blk = jnp.asarray(cs)
+    dense = np.asarray(stage.dense(ctx, blk))
+    prev_tile = pipe.STAGES["lb_keogh"].dense(ctx, blk)
+    qi, ci = np.divmod(np.arange(Q * B), B)
+    qi_j, ci_j = jnp.asarray(qi), jnp.asarray(ci)
+    prev = prev_tile[qi_j, ci_j]
+    bound = jnp.full((Q * B,), 1e30)
+    got = np.asarray(stage.pair(ctx, blk, qi_j, ci_j, bound, prev))
+    np.testing.assert_array_equal(got.reshape(Q, B), dense)
+
+
+def test_every_pipeline_stage_is_registered():
+    """PIPELINES can only reference registered stages, each pipeline
+    ends in the exact stage, and the mutually-exclusive post-Keogh
+    tighteners never stack (they both charge query-side path cells)."""
+    for method, stages in pipe.PIPELINES.items():
+        assert stages[-1] == "full", method
+        for s in stages:
+            assert s in pipe.STAGES, (method, s)
+        assert not (
+            "lb_improved" in stages and "lb_webb" in stages
+        ), f"{method}: lb_improved and lb_webb double-count query-side cells"

@@ -27,6 +27,8 @@ from repro.kernels import (
     lb_keogh_ref,
     lb_keogh_stream_qbatch_op,
     lb_keogh_stream_qbatch_ref,
+    lb_kim_qbatch_op,
+    lb_kim_qbatch_ref,
     materialize_windows,
 )
 
@@ -258,6 +260,39 @@ def test_lb_fused_kernel_matches_unfused_chain():
     _, lb = lb_fused_qbatch_op(xs, qs, u, l, w, bounds, p, interpret=True)
     chain = lb_improved_qbatch_op(xs, qs, u, l, w, p, interpret=True)
     np.testing.assert_allclose(np.asarray(lb), np.asarray(chain), rtol=1e-5)
+
+
+@pytest.mark.parametrize("nq,b,n,w", QBATCH_SHAPES)
+@pytest.mark.parametrize("p", [1, 2, np.inf])
+def test_lb_kim_qbatch_kernel(nq, b, n, w, p):
+    """Constant-time LB_Kim stage-0 kernel vs the core/lb oracle —
+    including the ragged final block (b not a multiple of tile_b, the
+    op pads candidates with PAD_VALUE and slices back)."""
+    del w  # LB_Kim is band-free
+    xs = jnp.asarray(RNG.normal(size=(b, n)).astype(np.float32).cumsum(axis=1))
+    qs = jnp.asarray(RNG.normal(size=(nq, n)).astype(np.float32).cumsum(axis=1))
+    got = lb_kim_qbatch_op(xs, qs, p=p, tile_b=8, interpret=True)
+    want = lb_kim_qbatch_ref(xs, qs, p=p)
+    assert got.shape == (nq, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4)
+
+
+@pytest.mark.parametrize("p", [1, 2, np.inf])
+def test_lb_kim_qbatch_kernel_entry_mask(p):
+    """Masked-out lanes (already pruned upstream, or poison padding)
+    must come back as BIG and never contribute their data; alive lanes
+    must be untouched by their dead neighbours."""
+    nq, b, n = 3, 13, 40  # ragged: 13 lanes over tile_b=8
+    xs = jnp.asarray(RNG.normal(size=(b, n)).astype(np.float32).cumsum(axis=1))
+    qs = jnp.asarray(RNG.normal(size=(nq, n)).astype(np.float32).cumsum(axis=1))
+    mask = jnp.asarray(RNG.integers(0, 2, size=(nq, b)).astype(np.float32))
+    got = np.asarray(lb_kim_qbatch_op(xs, qs, mask=mask, p=p, tile_b=8, interpret=True))
+    want = np.asarray(lb_kim_qbatch_ref(xs, qs, mask=mask, p=p))
+    np.testing.assert_allclose(got, want, rtol=2e-4)
+    m = np.asarray(mask) > 0
+    assert (got[~m] >= 1e29).all()  # dead lanes carry the BIG sentinel
+    bare = np.asarray(lb_kim_qbatch_op(xs, qs, p=p, tile_b=8, interpret=True))
+    np.testing.assert_array_equal(got[m], bare[m])
 
 
 def test_envelope_kernel_odd_batch_padding():

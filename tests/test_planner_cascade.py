@@ -1,0 +1,193 @@
+"""Cascade-planner golden tests: the stage-order decision is a pure,
+deterministic function of the calibration stats.
+
+Three regimes are pinned by constructing :class:`Calibration` objects
+with hand-written bound/DTW samples (so the goldens cannot drift with
+RNG or numerics):
+
+* **tight retrieval** — near-duplicate neighbours, bounds prune almost
+  everything: the cheap pre-filter cascade wins and LB_Kim pays for
+  itself;
+* **cold scan** — i.i.d. noise, no bound prunes anything: every LB
+  stage is pure overhead and the planner chooses the bare DP;
+* **tiny db** — a handful of rows, k covers most of them: thresholds
+  are loose, pruning is marginal, the planner stays with a shallow
+  cascade rather than paying deep-stage costs.
+
+Also covered: end-to-end ``method="auto"`` through ``Database`` —
+every planner-chosen cascade bit-matches the fixed ``lb_improved``
+cascade (the tentpole's exactness bar), and ``plan().explain()``
+carries the cascade cost model.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import Database, SearchConfig
+from repro.api.planner import (
+    CALIBRATED_STAGES,
+    Calibration,
+    CascadePlan,
+    choose_cascade,
+)
+from repro.core.pipeline import PIPELINES
+
+
+def _cal(kim, keogh, improved, webb, dtw, w=5):
+    """A Calibration from per-stage (q, c) bound samples."""
+    bounds = np.stack(
+        [np.asarray(b, np.float64) for b in (kim, keogh, improved, webb)]
+    )
+    return Calibration(
+        CALIBRATED_STAGES, bounds, np.asarray(dtw, np.float64), w
+    )
+
+
+def _regime_tight():
+    """Near-dup retrieval: the k-th best DTW is tiny, every bound kills
+    almost all of the sample.  q=2 probe queries, c=8 candidates; the
+    first candidate of each row is the near-duplicate (dtw 1.0), the
+    rest are far (dtw 100) and already over-threshold at LB_Kim."""
+    dtw = np.array([[1.0, 100, 100, 100, 100, 100, 100, 100]] * 2)
+    kim = np.array([[0.2, 50, 50, 50, 50, 50, 50, 8]] * 2)
+    keogh = np.array([[0.5, 80, 80, 80, 80, 80, 80, 40]] * 2)
+    improved = np.array([[0.8, 90, 90, 90, 90, 90, 90, 60]] * 2)
+    webb = np.array([[0.8, 90, 90, 90, 90, 90, 90, 60]] * 2)
+    return _cal(kim, keogh, improved, webb, dtw)
+
+
+def _regime_cold():
+    """Cold scan: bounds are far below every DTW (i.i.d. noise, wide
+    band) — nothing prunes, LB work is pure overhead."""
+    dtw = np.full((2, 8), 50.0)
+    low = np.full((2, 8), 1.0)
+    return _cal(low, low * 2, low * 3, low * 3, dtw)
+
+
+def _regime_tiny():
+    """Tiny db: k=2 of 3 sampled candidates — the threshold is the
+    2nd-best DTW, so only the single worst candidate can ever be
+    pruned, and only LB_Keogh's bound clears it."""
+    dtw = np.array([[1.0, 5.0, 100.0]] * 2)
+    kim = np.array([[0.1, 0.2, 0.3]] * 2)
+    keogh = np.array([[0.5, 2.0, 60.0]] * 2)
+    improved = np.array([[0.8, 3.0, 70.0]] * 2)
+    webb = np.array([[0.8, 3.0, 70.0]] * 2)
+    return _cal(kim, keogh, improved, webb, dtw)
+
+
+GOLDEN = {
+    "tight": (
+        1,
+        "kim_improved",
+        "cascade: lb_kim -> lb_keogh -> lb_improved -> full "
+        "(method=kim_improved, calibrated at k=1)\n"
+        "predicted cost/candidate: 3.75 O(n)-sweep units\n"
+        "  lb_kim       enter 100.00%  unit cost   1.0  ->   1.00\n"
+        "  lb_keogh     enter  12.50%  unit cost   3.0  ->   0.38\n"
+        "  lb_improved  enter  12.50%  unit cost   8.0  ->   1.00\n"
+        "  full         enter  12.50%  unit cost  11.0  ->   1.38\n"
+        "rejected: kim_webb=3.88, lb_keogh=4.38, lb_improved=5.38, "
+        "lb_webb=5.50, full=11.00",
+    ),
+    "cold": (
+        1,
+        "full",
+        "cascade: full (method=full, calibrated at k=1)\n"
+        "predicted cost/candidate: 11.00 O(n)-sweep units\n"
+        "  full         enter 100.00%  unit cost  11.0  ->  11.00\n"
+        "rejected: lb_keogh=14.00, lb_improved=22.00, lb_webb=23.00, "
+        "kim_improved=23.00, kim_webb=24.00",
+    ),
+    "tiny": (
+        2,
+        "lb_keogh",
+        "cascade: lb_keogh -> full (method=lb_keogh, calibrated at k=2)\n"
+        "predicted cost/candidate: 10.33 O(n)-sweep units\n"
+        "  lb_keogh     enter 100.00%  unit cost   3.0  ->   3.00\n"
+        "  full         enter  66.67%  unit cost  11.0  ->   7.33\n"
+        "rejected: full=11.00, lb_improved=15.67, lb_webb=16.33, "
+        "kim_improved=16.67, kim_webb=17.33",
+    ),
+}
+
+REGIMES = {
+    "tight": _regime_tight,
+    "cold": _regime_cold,
+    "tiny": _regime_tiny,
+}
+
+
+@pytest.mark.parametrize("regime", sorted(REGIMES))
+def test_cascade_choice_golden(regime):
+    k, want_method, want_explain = GOLDEN[regime]
+    plan = choose_cascade(REGIMES[regime](), k=k)
+    assert plan.method == want_method
+    assert plan.stages == PIPELINES[want_method]
+    assert plan.explain() == want_explain
+
+
+@pytest.mark.parametrize("regime", sorted(REGIMES))
+def test_cascade_choice_deterministic(regime):
+    k = GOLDEN[regime][0]
+    cal = REGIMES[regime]()
+    plans = [choose_cascade(cal, k=k) for _ in range(3)]
+    assert all(p == plans[0] for p in plans)
+
+
+def test_every_pipeline_costed():
+    plan = choose_cascade(_regime_cold(), k=1)
+    assert sorted(m for m, _ in plan.predicted) == sorted(PIPELINES)
+    costs = [c for _, c in plan.predicted]
+    assert costs == sorted(costs)  # ascending, chosen first
+    assert plan.predicted[0][0] == plan.method
+
+
+def test_tie_breaks_are_stable():
+    """Identical predicted costs resolve by (stage count, name) — the
+    choice can never flip between runs on equal stats."""
+    dtw = np.full((2, 4), 50.0)
+    z = np.zeros((2, 4))
+    cal = _cal(z, z, z, z, dtw)  # no bound ever prunes
+    plan = choose_cascade(cal, k=1)
+    assert plan.method == "full"  # cheapest; ties would prefer fewer stages
+
+
+def test_auto_method_end_to_end_bit_matches():
+    """The exactness bar: whatever cascade the planner picks, results
+    bit-match the fixed lb_improved cascade."""
+    rng = np.random.default_rng(4)
+    rows = rng.standard_normal((120, 40)).astype(np.float32).cumsum(axis=1)
+    qs = rows[:5] + 0.05 * rng.standard_normal((5, 40)).astype(np.float32)
+    for p in (1, 2, np.inf):
+        db = Database.build(rows, SearchConfig(w=4, p=p, k=3, method="auto"))
+        plan = db.plan(qs)
+        assert plan.cascade is not None
+        assert plan.config.method in PIPELINES
+        assert "predicted cost/candidate" in plan.explain()
+        res = db.search(qs)
+        ref = db.search(qs, method="lb_improved")
+        assert np.array_equal(res.indices, ref.indices), p
+        assert np.array_equal(res.distances, ref.distances), p
+
+
+def test_calibration_rides_the_bundle(tmp_path):
+    rng = np.random.default_rng(6)
+    rows = rng.standard_normal((64, 32)).astype(np.float32)
+    db = Database.build(rows, SearchConfig(w=3, method="auto"))
+    path = db.save(str(tmp_path / "s.npz"))
+    db2 = Database.load(path)
+    assert db2._calibration is not None
+    np.testing.assert_array_equal(
+        db2.calibration.bounds, db.calibration.bounds
+    )
+    np.testing.assert_array_equal(db2.calibration.dtw, db.calibration.dtw)
+    assert db2.plan(5).config.method == db.plan(5).config.method
+
+
+def test_plan_is_dataclass_with_cascade_field():
+    plan = choose_cascade(_regime_tight(), k=1)
+    assert isinstance(plan, CascadePlan)
+    assert plan.cost_per_candidate == pytest.approx(
+        sum(f * c for f, c in zip(plan.enter_frac, plan.stage_cost))
+    )

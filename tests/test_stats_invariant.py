@@ -1,0 +1,149 @@
+"""Per-stage counter invariants across every driver and stage order.
+
+The generic ``stage_pruned`` counters (one slot per LB stage the
+method's pipeline declares) must account for every candidate exactly
+once on every driver:
+
+    sum(stage_pruned) + full_dtw (+ lb0_pruned) == n_candidates
+
+and the historical two-slot view must keep satisfying the documented
+identity in ``core/cascade.py`` verbatim:
+
+    lb1_pruned + lb2_pruned + full_dtw (+ lb0_pruned) == n_candidates
+
+with ``lb1_pruned == stage_pruned[0]`` and ``lb2_pruned ==
+sum(stage_pruned[1:])``.  Parametrized over every registered pipeline
+(arbitrary depth: 0 LB stages for ``full`` up to 3 for the kim_*
+cascades) times the scan / host / indexed / sharded drivers, plus the
+streaming scanner's per-template analogue.
+"""
+
+import numpy as np
+import jax
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import pipeline as pipe
+from repro.core.cascade import (
+    nn_search_host,
+    nn_search_indexed,
+    nn_search_scan,
+)
+from repro.core.distributed import pad_database, sharded_nn_search
+from repro.index.build import build_index
+from repro.stream.state import StreamState
+from repro.stream.subsequence import SubsequenceScanner, num_windows
+
+METHODS = sorted(pipe.PIPELINES)
+N_DB, N, W, K, BLOCK = 96, 40, 5, 3, 32
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(3)
+    db = rng.standard_normal((N_DB, N)).astype(np.float32).cumsum(axis=1)
+    qs = rng.standard_normal((3, N)).astype(np.float32).cumsum(axis=1)
+    return db, qs
+
+
+def _check(stats, n_candidates, method, extra=0):
+    lb_names = pipe.lb_stage_names(method)
+    assert stats.stage_names == lb_names
+    assert len(stats.stage_pruned) == len(lb_names)
+    assert (
+        sum(stats.stage_pruned) + stats.full_dtw + extra == n_candidates
+    ), (method, stats)
+    # documented back-compat identity, verbatim
+    assert (
+        stats.lb1_pruned + stats.lb2_pruned + stats.full_dtw + extra
+        == n_candidates
+    ), (method, stats)
+    assert stats.lb1_pruned == (
+        stats.stage_pruned[0] if stats.stage_pruned else 0
+    )
+    assert stats.lb2_pruned == sum(stats.stage_pruned[1:])
+    assert stats.pruned_by == dict(zip(lb_names, stats.stage_pruned))
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_scan_driver_counters(data, method):
+    db, qs = data
+    res = nn_search_scan(qs, db, w=W, k=K, block=BLOCK, method=method)
+    _check(res.stats, res.stats.n_candidates, method)
+    for s in res.per_query:
+        _check(s, N_DB, method)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_host_driver_counters(data, method):
+    db, qs = data
+    res = nn_search_host(qs, db, w=W, k=K, block=BLOCK, method=method)
+    _check(res.stats, res.stats.n_candidates, method)
+    for s in res.per_query:
+        _check(s, N_DB, method)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_indexed_driver_counters(data, method):
+    db, qs = data
+    idx = build_index(db, w=W)
+    res = nn_search_indexed(qs, db, idx, k=K, block=BLOCK, method=method)
+    for s in (res.stats,) + res.per_query:
+        n_cand = s.n_candidates
+        lb_names = pipe.lb_stage_names(method)
+        assert s.stage_names == lb_names
+        assert (
+            s.lb0_pruned + sum(s.stage_pruned) + s.full_dtw == n_cand
+        ), (method, s)
+        assert (
+            s.lb0_pruned + s.lb1_pruned + s.lb2_pruned + s.full_dtw
+            == n_cand
+        ), (method, s)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_sharded_driver_counters(data, method):
+    db, qs = data
+    mesh = Mesh(np.array(jax.devices()[:1]), ("x",))
+    dbp, _ = pad_database(db, mesh, block=BLOCK)
+    sync_every = 4
+    res = sharded_nn_search(
+        qs, dbp, mesh, w=W, k=K, block=BLOCK, method=method,
+        sync_every=sync_every,
+    )
+    # poison lanes (block padding up to whole sync rounds) are swept and
+    # counted like real ones: the invariant closes over every lane the
+    # driver actually processed
+    nb = dbp.shape[0] // BLOCK
+    lanes = -(-nb // sync_every) * sync_every * BLOCK
+    _check(res.stats, qs.shape[0] * lanes, method)
+    for s in res.per_query:
+        _check(s, lanes, method)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_stream_scanner_counters(data, method):
+    _, qs = data
+    rng = np.random.default_rng(9)
+    sig = rng.standard_normal(500).astype(np.float32)
+    st = StreamState(1024, W)
+    st.push(sig)
+    sc = SubsequenceScanner(
+        qs, w=W, threshold=4.0, p=2, hop=2, block=16, method=method
+    )
+    total = num_windows(len(sig), N, 2)
+    done = 0
+    while done < total:
+        nv = min(16, total - done)
+        sc.process_block(st, done * 2, nv)
+        done += nv
+    s = sc.stats
+    assert s.stage_names == pipe.lb_stage_names(method)
+    assert np.all(
+        s.env_pruned + s.stage_pruned.sum(axis=0) + s.full_dtw
+        == s.n_windows
+    ), (method, s)
+    assert np.all(
+        s.env_pruned + s.lb1_pruned + s.lb2_pruned + s.full_dtw
+        == s.n_windows
+    ), (method, s)
