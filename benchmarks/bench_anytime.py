@@ -1,0 +1,124 @@
+"""Anytime tier: recall@budget, residual error-bound curve and qps vs
+the exact subsequence sweep (DESIGN.md §3.10).
+
+One database, one query batch, three exploration budgets.  For each
+budget the row reports
+
+* ``recall@k``   — fraction of the exact top-k window ids recovered,
+* ``err_mean``   — mean reported residual error bound (the sound
+  per-answer gap certificate; must hit 0 once exploration covers the
+  bank),
+* ``qps``        — drained queries/sec through ``db.search`` at that
+  budget, with the exact sweep's qps as the denominator of ``speedup``.
+
+Contract tracked by the rows (asserted here so the bench doubles as a
+regression check, like bench_batched's ratio rows): recall is monotone
+non-decreasing in budget, reaches 1.0 at unlimited budget (where the
+answers bit-match ``mode="exact"``), and the lowest budget point is
+>= 2x faster than exact in the FAST regime.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.api import Database, SearchConfig
+from repro.data.synthetic import random_walks
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
+
+
+def _qps(db, queries, *, k, mode, budget=None, reps=3):
+    kw = {"k": k, "mode": mode}
+    if budget is not None:
+        kw["budget"] = budget
+    db.search(queries, **kw)  # warm the jit cache
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        res = db.search(queries, **kw)
+    dt = (time.perf_counter() - t0) / reps
+    return len(queries) / dt, res
+
+
+def run(report):
+    rng = np.random.default_rng(5)
+    n_db, length = (256, 128) if FAST else (1024, 512)
+    m = length // 2
+    hop = 4 if FAST else 8
+    n_queries = 16 if FAST else 48
+    k = 5
+    budgets = (64, 256, 1024) if FAST else (256, 1024, 4096)
+
+    data = random_walks(rng, n_db, length)
+    cfg = SearchConfig(w=length // 10, p=2, k=k)
+    db = Database.build(
+        data, cfg, anytime={"lengths": (m,), "hop": hop, "leaf_size": 16}
+    )
+    li = db.anytime.tier(m)
+    # near-duplicate subsequence queries (the retrieval regime): noisy
+    # copies of actual database windows, so pruning has something to find
+    picks = rng.integers(0, li.n_windows, n_queries)
+    queries = np.asarray(
+        li.wins[picks]
+        + rng.normal(scale=0.25, size=(n_queries, m)).astype(np.float32)
+    )
+
+    exact_qps, exact = _qps(db, queries, k=k, mode="exact")
+    report(
+        "anytime/exact/qps",
+        1e6 / exact_qps,
+        f"qps={exact_qps:.1f} windows={li.n_windows} "
+        f"clusters={li.tree.n_leaves} k={k}",
+    )
+
+    recalls = []
+    for budget in budgets:
+        qps, res = _qps(db, queries, k=k, mode="anytime", budget=budget)
+        hits = sum(
+            len(set(res.indices[i]) & set(exact.indices[i]))
+            for i in range(n_queries)
+        )
+        recall = hits / (n_queries * k)
+        recalls.append(recall)
+        err_mean = float(
+            np.mean(np.where(np.isfinite(res.error_bounds),
+                             res.error_bounds, 0.0))
+        )
+        report(
+            f"anytime/budget{budget}/qps",
+            1e6 / qps,
+            f"qps={qps:.1f} recall@{k}={recall:.3f} err_mean={err_mean:.3f} "
+            f"refined/query={res.stats.refined / n_queries:.0f} "
+            f"speedup_vs_exact={qps / exact_qps:.2f}x",
+        )
+
+    unlimited_qps, unlimited = _qps(db, queries, k=k, mode="anytime")
+    assert np.array_equal(unlimited.distances, exact.distances)
+    assert np.array_equal(unlimited.indices, exact.indices)
+    assert np.all(unlimited.error_bounds == 0.0)
+    report(
+        "anytime/unlimited/qps",
+        1e6 / unlimited_qps,
+        f"qps={unlimited_qps:.1f} recall@{k}=1.000 err_mean=0.000 "
+        f"(bit-matches exact)",
+    )
+
+    # the two contract ratios, tracked as presence rows like
+    # batched/retrieval/speedup: monotone recall + the low-budget speedup
+    assert all(
+        b >= a - 1e-9 for a, b in zip(recalls, recalls[1:])
+    ), f"recall not monotone in budget: {recalls}"
+    low_qps, _ = _qps(db, queries, k=k, mode="anytime", budget=budgets[0])
+    report(
+        "anytime/recall_curve",
+        0.0,
+        " ".join(f"b{b}={r:.3f}" for b, r in zip(budgets, recalls)),
+    )
+    report(
+        "anytime/speedup_low_budget_vs_exact",
+        0.0,
+        f"{low_qps / exact_qps:.2f}x",
+    )

@@ -1,235 +1,157 @@
-"""Roofline table builder: reads the dry-run artifacts and derives the
-three terms per (arch x shape x mesh) cell.
+"""Per-kernel roofline: achieved vs peak for the live pipeline kernels.
 
-Terms (per the assignment; v5e constants):
-  compute    = dot_flops_per_device / 197e12            [s]
-  memory     = hbm_byte_proxy_per_device / 819e9        [s]  (upper bound;
-               see EXPERIMENTS.md for the proxy definition + CPU-backend
-               bf16->f32 legalization caveat)
-  collective = collective_bytes_per_device / 50e9       [s]
+Times every cascade kernel through its *current* entry point — envelope
+construction, the four lower bounds (Kim / Keogh / Improved / Webb),
+the anytime tier's cluster box bound and the banded DP — then derives
+achieved FLOP/s and HBM-traffic rates from an analytic per-kernel
+work/byte model and reports each as a fraction of machine peak.
 
-MODEL_FLOPS = 6*N*D (train) / 2*N*D (fwd-only), N = active params; the
-ratio MODEL_FLOPS / HLO_FLOPs exposes remat/causal-waste/dispatch
-overhead.  Bottleneck = argmax term; roofline fraction = compute /
-dominant (1.0 = compute-bound at peak).
+Peaks default to container-CPU estimates and are overridable for real
+hardware:
+
+* ``REPRO_PEAK_FLOPS`` — peak elementwise FLOP/s (VPU-style; the
+  cascade is elementwise/compare work, not MXU dots)
+* ``REPRO_PEAK_BW``    — peak memory bandwidth, bytes/s
+
+``bound`` per row is the roofline verdict at the kernel's arithmetic
+intensity: ``compute`` when achievable FLOPs dominate the traffic term,
+else ``memory``.  FULL-suite only (paper-scale shapes; the FAST shrink
+would time dispatch overhead, not kernels).
 """
 
 from __future__ import annotations
 
-import glob
-import json
 import os
+import time
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-LINK_BW = 50e9
+import jax
+import jax.numpy as jnp
+import numpy as np
 
-ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+from repro.core.dtw import dtw_batch
+from repro.core.envelope import envelope, envelope_batch
+from repro.core.lb import (
+    lb_box_powered,
+    lb_improved_powered_batch,
+    lb_keogh_powered_batch,
+    lb_kim_powered_batch,
+    lb_webb_powered_qbatch,
+)
 
-_ACTIVE_CACHE: dict[str, tuple[int, int]] = {}
+FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
 
+#: elementwise-peak defaults: a modern server core sustains a few
+#: GFLOP/s of scalar-ish numpy/XLA CPU elementwise work per core; these
+#: are deliberately conservative so container runs read as fractions,
+#: not multiples.  Set the env vars on real hardware (e.g. v5e:
+#: REPRO_PEAK_FLOPS=7.4e12 REPRO_PEAK_BW=819e9).
+PEAK_FLOPS = float(os.environ.get("REPRO_PEAK_FLOPS", 5e10))
+PEAK_BW = float(os.environ.get("REPRO_PEAK_BW", 2e10))
 
-def active_params(arch: str) -> tuple[int, int]:
-    """(total, active) parameter counts."""
-    if arch in _ACTIVE_CACHE:
-        return _ACTIVE_CACHE[arch]
-    from repro.configs.registry import get_config
-    from repro.models.model_zoo import build_model
-    import numpy as np
-
-    cfg = get_config(arch)
-    model = build_model(cfg)
-    total = 0
-    expert = 0
-    for path, spec in model.specs.items():
-        n = int(np.prod(spec.shape))
-        total += n
-        if "/moe/w" in path:
-            expert += n
-    active = total - expert
-    if cfg.moe is not None and expert:
-        active += expert * cfg.moe.top_k // cfg.moe.n_experts
-    _ACTIVE_CACHE[arch] = (total, active)
-    return total, active
+F32 = 4  # bytes per element everywhere in the cascade
 
 
-def model_flops_per_device(arch: str, shape_name: str, chips: int) -> float:
-    from repro.configs.base import SHAPES
-
-    shape = SHAPES[shape_name]
-    _, n_active = active_params(arch)
-    if shape.kind == "train":
-        tokens = shape.global_batch * shape.seq_len
-        return 6.0 * n_active * tokens / chips
-    if shape.kind == "prefill":
-        tokens = shape.global_batch * shape.seq_len
-        return 2.0 * n_active * tokens / chips
-    # decode: one token per sequence
-    return 2.0 * n_active * shape.global_batch / chips
+def _time(fn, *args, iters: int = 5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
 
 
-def analytic_hbm_bytes(cell: dict, chips: int = 256, model_shards: int = 16) -> float:
-    """Napkin HBM-traffic model per device per step (the roofline memory
-    term; the HLO output-bytes proxy in the artifact is kept as an upper
-    bound but overcounts loop-carry rewrites).
-
-    train:   2 x gathered-params per microbatch (fwd+bwd reads of the
-             FSDP-gathered copy) + optimizer (3x local shard r/w)
-             + activations (~12 x L x tokens_dev x d, x2 with remat)
-             + loss logits chunk traffic
-    prefill: gathered params once + activations + cache write
-    decode:  local param shard read + KV cache read (the classic
-             bandwidth bound) + cache write
-    """
-    from repro.configs.base import SHAPES
-    from repro.configs.registry import get_config
-
-    shape = SHAPES[cell["shape"]]
-    cfg = get_config(cell["arch"])
-    n_total, n_active = active_params(cell["arch"])
-    pol = cell.get("policy") or {}
-    psize = 2 if pol.get("param_dtype") == "bfloat16" else 4
-    micro = max(int(pol.get("microbatch") or 1), 1)
-    act_size = 2  # bf16 activations
-
-    d, L = cfg.d_model, cfg.n_layers
-    tokens_dev = shape.global_batch * shape.seq_len / chips
-
-    def cache_bytes_dev() -> float:
-        t = shape.seq_len
-        if cfg.family == "ssm":
-            per = L * (cfg.d_model // cfg.d_head) * cfg.d_head**2 * 4
-            return per * shape.global_batch / chips
-        if cfg.family == "hybrid":
-            apps = cfg.n_layers // cfg.hybrid.shared_every
-            kv = apps * t * cfg.hybrid.shared_n_kv * cfg.d_head * 2 * 2
-            ssm = L * 2 * cfg.d_model * cfg.ssm.d_state * 4
-            return (kv + ssm) * shape.global_batch / chips
-        # window layers cache only `window`
-        per_tok = 0
-        for i in range(L):
-            win = cfg.window_for_layer(i)
-            lc = min(win, t) if win > 0 else t
-            per_tok += lc * cfg.n_kv_heads * cfg.d_head * 2 * 2
-        if cfg.family == "audio":
-            per_tok += cfg.encoder_layers * 0  # cross-cache counted via enc len
-            per_tok += L * cfg.encoder_len * cfg.n_kv_heads * cfg.d_head * 2 * 2
-        return per_tok * shape.global_batch / chips
-
-    if shape.kind == "train":
-        gathered = n_total * psize / model_shards
-        params_traffic = 2.0 * gathered * micro + 5.0 * n_total * psize / chips
-        acts = 12.0 * L * tokens_dev * d * act_size * 2
-        loss = 2.0 * tokens_dev * cfg.vocab_padded / model_shards * 4
-        return params_traffic + acts + loss
-    if shape.kind == "prefill":
-        gathered = n_total * psize / model_shards
-        acts = 8.0 * L * tokens_dev * d * act_size
-        return gathered + acts + cache_bytes_dev()
-    # decode
-    return n_total * psize / chips + 1.02 * cache_bytes_dev()
-
-
-def load_cells(mesh: str = "pod"):
-    rows = []
-    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, f"*__{mesh}.json"))):
-        with open(path) as f:
-            rows.append(json.load(f))
-    return rows
-
-
-def roofline_row(cell: dict, chips: int = 256) -> dict | None:
-    if cell.get("skipped"):
-        return {
-            "arch": cell["arch"],
-            "shape": cell["shape"],
-            "skipped": True,
-            "reason": cell.get("reason", ""),
-        }
-    if not cell.get("ok"):
-        return None
-    if cell["arch"].startswith("dtw-search"):
-        # paper cell: VPU (elementwise) work, not MXU dots
-        vpu_peak = 7.4e12  # ~v5e VPU ops/s (documented estimate)
-        compute = cell["flops"] / vpu_peak
-        memory = cell["memory"].get("argument_size_in_bytes", 0) / HBM_BW
-        coll = cell["collective_bytes"] / LINK_BW
-        terms = {"compute": compute, "memory": memory, "collective": coll}
-        dom = max(terms, key=terms.get)
-        return {
-            "arch": cell["arch"],
-            "shape": cell["shape"][:12],
-            "mesh": cell["mesh"],
-            "compute_s": compute,
-            "memory_s": memory,
-            "memory_hlo_ub_s": 0.0,
-            "collective_s": coll,
-            "bottleneck": dom,
-            "roofline_fraction": compute / max(terms[dom], 1e-30),
-            "model_flops_dev": cell["flops"],
-            "hlo_flops_dev": cell["flops"],
-            "useful_ratio": 1.0,
-            "step_s_est": terms[dom],
-            "skipped": False,
-        }
-    compute = cell["flops"] / PEAK_FLOPS
-    memory = analytic_hbm_bytes(cell, chips) / HBM_BW
-    memory_hlo_ub = cell["bytes_accessed"] / HBM_BW  # proxy upper bound
-    coll = cell["collective_bytes"] / LINK_BW
-    terms = {"compute": compute, "memory": memory, "collective": coll}
-    dom = max(terms, key=terms.get)
-    mf = model_flops_per_device(cell["arch"], cell["shape"], chips)
-    return {
-        "arch": cell["arch"],
-        "shape": cell["shape"],
-        "mesh": cell["mesh"],
-        "compute_s": compute,
-        "memory_s": memory,
-        "memory_hlo_ub_s": memory_hlo_ub,
-        "collective_s": coll,
-        "bottleneck": dom,
-        "roofline_fraction": compute / max(terms[dom], 1e-30),
-        "model_flops_dev": mf,
-        "hlo_flops_dev": cell["flops"],
-        "useful_ratio": mf / max(cell["flops"], 1e-30),
-        "step_s_est": terms[dom],
-        "skipped": False,
-    }
+def _row(report, name: str, secs: float, flops: float, bytes_: float):
+    """One roofline verdict: achieved rates vs peak at this kernel's
+    arithmetic intensity."""
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_ / PEAK_BW
+    bound = "compute" if t_compute >= t_memory else "memory"
+    t_roof = max(t_compute, t_memory)
+    report(
+        f"roofline/{name}",
+        secs * 1e6,
+        f"gflops={flops / secs / 1e9:.2f} gbs={bytes_ / secs / 1e9:.2f} "
+        f"intensity={flops / max(bytes_, 1.0):.2f} bound={bound} "
+        f"peak_frac={t_roof / secs:.3f}",
+    )
 
 
 def run(report):
-    rows = [r for c in load_cells("pod") if (r := roofline_row(c))]
-    for r in rows:
-        if r.get("skipped"):
-            report(f"roofline/{r['arch']}/{r['shape']}", 0.0, f"SKIP({r['reason'][:40]})")
-            continue
-        report(
-            f"roofline/{r['arch']}/{r['shape']}",
-            r["step_s_est"] * 1e6,
-            f"bottleneck={r['bottleneck']} frac={r['roofline_fraction']:.3f} "
-            f"useful={r['useful_ratio']:.2f}",
-        )
-
-
-def table(mesh="pod", chips=256):
-    rows = [r for c in load_cells(mesh) if (r := roofline_row(c, chips))]
-    hdr = (
-        f"{'arch':<20} {'shape':<12} {'compute_s':>10} {'memory_s':>10} "
-        f"{'coll_s':>10} {'bottleneck':>11} {'frac':>6} {'useful':>7}"
+    rng = np.random.default_rng(3)
+    b, n = (256, 256) if FAST else (1024, 1000)
+    w = n // 10
+    db = jnp.asarray(
+        rng.normal(size=(b, n)).astype(np.float32).cumsum(axis=1)
     )
-    lines = [hdr, "-" * len(hdr)]
-    for r in rows:
-        if r.get("skipped"):
-            lines.append(f"{r['arch']:<20} {r['shape']:<12} SKIPPED: {r['reason']}")
-            continue
-        lines.append(
-            f"{r['arch']:<20} {r['shape']:<12} {r['compute_s']:>10.4f} "
-            f"{r['memory_s']:>10.4f} {r['collective_s']:>10.4f} "
-            f"{r['bottleneck']:>11} {r['roofline_fraction']:>6.3f} "
-            f"{r['useful_ratio']:>7.3f}"
-        )
-    return "\n".join(lines)
+    q = jnp.asarray(rng.normal(size=n).astype(np.float32).cumsum())
+    u, l = envelope(q, w)
+
+    # envelope: per element one window max + one window min over 2w+1
+    # candidates (monotonic-deque model: amortized ~4 compare-ops), reads
+    # the series once, writes u and l
+    t = _time(jax.jit(lambda xs: envelope_batch(xs, w)), db)
+    _row(report, "envelope_batch", t, 4.0 * b * n, 3.0 * b * n * F32)
+
+    # LB_Kim: boundary-element costs only — O(1) per series on top of
+    # reading the first/last elements; model charges the full row read
+    # (that is what the fused pipeline pays)
+    t = _time(jax.jit(lambda c: lb_kim_powered_batch(c, q, 1)), db)
+    _row(report, "lb_kim_batch", t, 10.0 * b, (2.0 * b * n + n) * F32)
+
+    # LB_Keogh: per element clip-above/clip-below (2 cmp) + |.|^p (1) +
+    # the reduction add (1); reads candidate rows + the two envelopes
+    t = _time(jax.jit(lambda c: lb_keogh_powered_batch(c, u, l, 1)), db)
+    _row(
+        report, "lb_keogh_batch", t,
+        4.0 * b * n, (b * n + 2 * n + b) * F32,
+    )
+
+    # LB_Improved: Keogh + the reflected second pass (projection,
+    # candidate-side envelope of the projection, reverse Keogh) — ~3x
+    # the elementwise work, reads everything Keogh reads plus q
+    t = _time(
+        jax.jit(lambda c: lb_improved_powered_batch(c, q, u, l, w, 1)), db
+    )
+    _row(
+        report, "lb_improved_batch", t,
+        12.0 * b * n, (b * n + 3 * n + b) * F32,
+    )
+
+    # LB_Webb: envelope-of-envelope refinements, two bounding passes
+    nq = 8
+    qs = jnp.asarray(
+        rng.normal(size=(nq, n)).astype(np.float32).cumsum(axis=1)
+    )
+    uq, lq = envelope_batch(qs, w)
+    t = _time(
+        jax.jit(lambda c: lb_webb_powered_qbatch(c, qs, uq, lq, w, 1)), db
+    )
+    _row(
+        report, "lb_webb_qbatch", t,
+        16.0 * nq * b * n, (b * n + nq * n + nq * b) * F32,
+    )
+
+    # anytime cluster box bound (stage 0 of the §3.10 tier): per cluster
+    # element 2 subtract + 2 max + add against the query envelope
+    n_clusters = max(b // 8, 1)
+    cmin = jnp.asarray(np.sort(rng.normal(size=(n_clusters, n)), axis=0))
+    cmax = cmin + 0.5
+    t = _time(
+        jax.jit(lambda lo, hi: lb_box_powered(lo, hi, u, l, 1)), cmin, cmax
+    )
+    _row(
+        report, "lb_box_clusters", t,
+        6.0 * n_clusters * n, (2 * n_clusters * n + 2 * n) * F32,
+    )
+
+    # banded DP: 3 candidate cells per band cell (min of 3 + add + cost);
+    # traffic model reads each row once per wavefront step (band-local)
+    small = db[:32]
+    t = _time(jax.jit(lambda c: dtw_batch(q, c, w, 1, True)), small)
+    cells = 32.0 * n * (2 * w + 1)
+    _row(report, "dtw_banded_batch32", t, 6.0 * cells, cells * F32)
 
 
 if __name__ == "__main__":
-    print(table())
+    run(lambda name, us, derived="": print(f"{name},{us:.1f},{derived}"))

@@ -31,6 +31,7 @@ FULL_SUITE = (
     "bench_serve",
     "bench_lb",
     "bench_classify",
+    "bench_anytime",
     "perf_search",
     "roofline",
 )
@@ -48,6 +49,7 @@ FAST_SUITE = (
     "bench_serve",
     "bench_lb",
     "bench_classify",
+    "bench_anytime",
 )
 
 

@@ -1,0 +1,47 @@
+"""Anytime subsequence-database tier (DESIGN.md §3.10).
+
+Build phase: slice the database into length-of-interest windows
+(``slices``), sketch with PAA, cluster hierarchically with
+representatives, DTW radii and envelope boxes (``cluster``, ``build``).
+Query phase: best-first budgeted exploration returning best-so-far
+top-k with sound, monotonically-tightening error bounds (``search``).
+
+The public entry point is the :class:`repro.api.Database` session:
+``Database.build(data, config, anytime=...)`` then
+``db.search(query, mode="anytime", budget=...)``.
+"""
+
+from repro.anytime.build import (
+    AnytimeIndex,
+    LengthIndex,
+    anytime_arrays,
+    anytime_from_arrays,
+    build_anytime_index,
+)
+from repro.anytime.cluster import ClusterTree, build_tree, farthest_first
+from repro.anytime.search import (
+    AnytimeBatchResult,
+    AnytimeResult,
+    AnytimeStats,
+    anytime_search,
+    exact_subsequence_search,
+)
+from repro.anytime.slices import paa_sketch, slice_windows
+
+__all__ = [
+    "AnytimeIndex",
+    "LengthIndex",
+    "AnytimeBatchResult",
+    "AnytimeResult",
+    "AnytimeStats",
+    "ClusterTree",
+    "anytime_arrays",
+    "anytime_from_arrays",
+    "anytime_search",
+    "build_anytime_index",
+    "build_tree",
+    "exact_subsequence_search",
+    "farthest_first",
+    "paa_sketch",
+    "slice_windows",
+]

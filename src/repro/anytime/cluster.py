@@ -1,0 +1,240 @@
+"""Hierarchical similarity clusters over a window bank (DESIGN.md §3.10).
+
+Two levels, BrainEx-style:
+
+* **Coarse clusters** — farthest-first traversal on the PAA sketches
+  picks ``n_coarse`` representative windows; every other window joins
+  its nearest representative.  Each cluster stores its representative's
+  global window id, two DTW radii (max rooted ``DTW_p^w`` and min rooted
+  ``DTW_p^{2w}`` from the representative to its members, computed like
+  ``index.build`` computes reference distances) for the Theorem 1
+  triangle bound, and an elementwise bounding *box* over its members
+  for the envelope-box bound (``core.lb.lb_box_powered``).
+* **Leaves** — each coarse cluster's members are re-split farthest-first
+  into leaves of ~``leaf_size`` windows; leaves store only their box.
+  A leaf box nests inside its parent's box, so the leaf bound is at
+  least as tight — the best-first frontier only ever tightens as it
+  descends (the monotonicity §3.10's error bound relies on).
+
+Representatives are **not** members of any leaf: the query phase always
+refines them exactly first (they seed best-so-far), so radii and boxes
+only need to cover the remaining windows — which is also what lets the
+min-wide radius feed side B of the triangle bound without the rep's
+zero self-distance collapsing it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dtw import PNorm, dtw_qbatch
+from repro.index.triangle_lb import wide_band
+
+__all__ = ["ClusterTree", "farthest_first", "build_tree"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterTree:
+    """Flat-array two-level cluster tree over ``W`` windows of length m.
+
+    CSR layout: coarse cluster ``c`` owns leaves
+    ``leaf_start[c]:leaf_start[c+1]``; leaf ``l`` owns member window ids
+    ``members[member_start[l]:member_start[l+1]]``.  Radii are rooted
+    distances (like ``TriangleIndex``); boxes are in window space.
+    """
+
+    rep_gid: np.ndarray  # (C,) int64 — representative window ids
+    radii_w: np.ndarray  # (C,) float32 — max DTW^w(rep, member), rooted
+    min_radii_wide: np.ndarray  # (C,) float32 — min DTW^{2w}(rep, member)
+    cmin0: np.ndarray  # (C, m) float32 — coarse member boxes
+    cmax0: np.ndarray  # (C, m)
+    leaf_start: np.ndarray  # (C+1,) int64
+    cmin1: np.ndarray  # (L, m) float32 — leaf boxes
+    cmax1: np.ndarray  # (L, m)
+    member_start: np.ndarray  # (L+1,) int64
+    members: np.ndarray  # (W - C,) int64 — gids grouped by leaf
+
+    @property
+    def n_coarse(self) -> int:
+        return int(self.rep_gid.shape[0])
+
+    @property
+    def n_leaves(self) -> int:
+        return int(self.cmin1.shape[0])
+
+    @property
+    def n_members(self) -> int:
+        return int(self.members.shape[0])
+
+    def leaf_members(self, leaf: int) -> np.ndarray:
+        return self.members[self.member_start[leaf] : self.member_start[leaf + 1]]
+
+    def coarse_leaves(self, c: int) -> range:
+        return range(int(self.leaf_start[c]), int(self.leaf_start[c + 1]))
+
+
+def farthest_first(x: np.ndarray, k: int, seed: int = 0) -> np.ndarray:
+    """k-center farthest-first traversal on rows of ``x`` (L2).
+
+    The classic 2-approximation seeding (Gonzalez 1985) — the same
+    family as the index builder's ``maxmin`` reference strategy, here on
+    PAA sketches.  Deterministic given ``seed`` (which picks the start).
+    """
+    n = x.shape[0]
+    k = int(min(k, n))
+    rng = np.random.default_rng(seed)
+    first = int(rng.integers(n))
+    centers = np.empty(k, dtype=np.int64)
+    centers[0] = first
+    d = np.linalg.norm(x - x[first], axis=-1)
+    for i in range(1, k):
+        nxt = int(np.argmax(d))
+        centers[i] = nxt
+        d = np.minimum(d, np.linalg.norm(x - x[nxt], axis=-1))
+    return centers
+
+
+def _assign(x: np.ndarray, centers: np.ndarray, chunk: int = 4096) -> np.ndarray:
+    """Nearest-center label per row of ``x`` (L2 on sketches), chunked."""
+    labels = np.empty(x.shape[0], dtype=np.int64)
+    cx = x[centers]
+    for s in range(0, x.shape[0], chunk):
+        blk = x[s : s + chunk]
+        d2 = ((blk[:, None, :] - cx[None, :, :]) ** 2).sum(-1)
+        labels[s : s + chunk] = np.argmin(d2, axis=-1)
+    return labels
+
+
+def _box(wins: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    if wins.shape[0] == 0:  # empty cluster: +inf/-inf sentinel, never queried
+        m = wins.shape[-1]
+        return (
+            np.full(m, np.inf, dtype=np.float32),
+            np.full(m, -np.inf, dtype=np.float32),
+        )
+    return (
+        wins.min(axis=0).astype(np.float32),
+        wins.max(axis=0).astype(np.float32),
+    )
+
+
+def _rep_dists(
+    reps: np.ndarray, wins: np.ndarray, w: int, p: PNorm, chunk: int = 2048
+) -> np.ndarray:
+    """Rooted DTW^w from every representative to every window: (C, W).
+
+    Chunked over windows at a fixed block shape (last block padded with
+    its own final row) so the doubly-vmapped DP compiles once.
+    """
+    n_win = wins.shape[0]
+    chunk = int(min(chunk, n_win))
+    out = np.empty((reps.shape[0], n_win), dtype=np.float32)
+    reps_j = jnp.asarray(reps)
+    for s in range(0, n_win, chunk):
+        blk = wins[s : s + chunk]
+        valid = blk.shape[0]
+        if valid < chunk:
+            blk = np.concatenate(
+                [blk, np.repeat(blk[-1:], chunk - valid, axis=0)]
+            )
+        d = np.asarray(dtw_qbatch(reps_j, jnp.asarray(blk), w, p, powered=False))
+        out[:, s : s + valid] = d[:, :valid]
+    return out
+
+
+def build_tree(
+    wins: np.ndarray,
+    sketch: np.ndarray,
+    *,
+    n_coarse: int,
+    leaf_size: int,
+    w: int,
+    p: PNorm,
+    radii: bool = True,
+    seed: int = 0,
+) -> ClusterTree:
+    """Cluster the window bank into the two-level tree.
+
+    ``radii=False`` skips the 2·C·W DTW sweeps of the radius
+    computation (vacuous radii: ``+inf`` / ``0`` disable the triangle
+    bound, leaving box bounds only) — a build-speed escape hatch.
+    """
+    n_win, m = wins.shape
+    if n_win < 1:
+        raise ValueError("cannot cluster an empty window bank")
+    n_coarse = int(min(max(1, n_coarse), n_win))
+    leaf_size = max(1, int(leaf_size))
+    rep_gid = farthest_first(sketch, n_coarse, seed)
+    n_coarse = rep_gid.shape[0]
+    labels = _assign(sketch, rep_gid)
+    labels[rep_gid] = np.arange(n_coarse)  # reps own their cluster
+    is_rep = np.zeros(n_win, dtype=bool)
+    is_rep[rep_gid] = True
+
+    if radii:
+        d_w = _rep_dists(wins[rep_gid], wins, w, p)
+        d_wide = _rep_dists(wins[rep_gid], wins, wide_band(w, m), p)
+    radii_w = np.zeros(n_coarse, dtype=np.float32)
+    min_radii_wide = np.full(n_coarse, np.inf, dtype=np.float32)
+    if not radii:  # vacuous: side A prunes nothing, side B prunes nothing
+        radii_w[:] = np.inf
+        min_radii_wide[:] = 0.0
+
+    cmin0 = np.empty((n_coarse, m), dtype=np.float32)
+    cmax0 = np.empty((n_coarse, m), dtype=np.float32)
+    leaf_start = np.zeros(n_coarse + 1, dtype=np.int64)
+    leaf_boxes_min: list[np.ndarray] = []
+    leaf_boxes_max: list[np.ndarray] = []
+    member_lists: list[np.ndarray] = []
+    for c in range(n_coarse):
+        mem = np.nonzero((labels == c) & ~is_rep)[0].astype(np.int64)
+        cmin0[c], cmax0[c] = _box(wins[mem])
+        if radii and mem.shape[0]:
+            radii_w[c] = d_w[c, mem].max()
+            min_radii_wide[c] = d_wide[c, mem].min()
+        if mem.shape[0] == 0:
+            leaf_start[c + 1] = leaf_start[c]
+            continue
+        n_leaves = -(-mem.shape[0] // leaf_size)
+        if n_leaves <= 1:
+            groups = [mem]
+        else:
+            sub = farthest_first(sketch[mem], n_leaves, seed + c + 1)
+            sub_labels = _assign(sketch[mem], sub)
+            groups = [
+                mem[sub_labels == i]
+                for i in range(sub.shape[0])
+                if np.any(sub_labels == i)
+            ]
+        leaf_start[c + 1] = leaf_start[c] + len(groups)
+        for g in groups:
+            lo, hi = _box(wins[g])
+            leaf_boxes_min.append(lo)
+            leaf_boxes_max.append(hi)
+            member_lists.append(g)
+
+    member_start = np.zeros(len(member_lists) + 1, dtype=np.int64)
+    if member_lists:
+        member_start[1:] = np.cumsum([g.shape[0] for g in member_lists])
+        members = np.concatenate(member_lists)
+        cmin1 = np.stack(leaf_boxes_min)
+        cmax1 = np.stack(leaf_boxes_max)
+    else:  # every window is a representative
+        members = np.empty(0, dtype=np.int64)
+        cmin1 = np.empty((0, m), dtype=np.float32)
+        cmax1 = np.empty((0, m), dtype=np.float32)
+    return ClusterTree(
+        rep_gid=rep_gid,
+        radii_w=radii_w,
+        min_radii_wide=min_radii_wide,
+        cmin0=cmin0,
+        cmax0=cmax0,
+        leaf_start=leaf_start,
+        cmin1=cmin1,
+        cmax1=cmax1,
+        member_start=member_start,
+        members=members,
+    )

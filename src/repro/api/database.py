@@ -112,6 +112,7 @@ class Database:
         row_sumsq: np.ndarray,
         index: TriangleIndex | None,
         calibration: Calibration | None = None,
+        anytime=None,
     ):
         self.raw = raw  # as given (precision-cast), what save() persists
         self.data = data  # znormed when config.znorm, else raw itself
@@ -127,9 +128,16 @@ class Database:
         self.row_sums = row_sums
         self.row_sumsq = row_sumsq
         self.index = index
+        # the anytime subsequence tier (repro.anytime.AnytimeIndex):
+        # window banks + cluster trees per length of interest
+        self.anytime = anytime
         # per-stage selectivity probe for the cascade planner; built
         # once per session (lazily when a legacy bundle lacks one)
         self._calibration = calibration
+        # method="auto" cascade choices, memoized per k — the choice is
+        # a pure function of (calibration, k), so one sweep serves every
+        # plan()/search() of the session (tests pin the count)
+        self._cascade_cache: dict[int, CascadePlan] = {}
         self._db_j = jnp.asarray(self.data)  # device-resident, uploaded once
         self.mesh = None
         self._axis_names: tuple[str, ...] | None = None
@@ -150,6 +158,7 @@ class Database:
         n_clusters: int | None = None,
         strategy: str = "maxmin",
         seed: int = 0,
+        anytime: bool | dict = False,
     ) -> "Database":
         """Precompute every database-side artifact for ``data`` (N, n).
 
@@ -158,6 +167,14 @@ class Database:
         the bundle exists to amortize); pass a prebuilt
         :class:`TriangleIndex` to attach one instead (it is validated
         against the data and config).
+
+        ``anytime=True`` builds the anytime subsequence tier
+        (DESIGN.md §3.10) over the whole-row length; pass a dict to
+        customize, e.g. ``anytime=dict(lengths=(64, n), hop=8,
+        n_coarse=32, leaf_size=32)`` — see
+        :func:`repro.anytime.build_anytime_index` for every knob.  The
+        tier enables ``search(..., mode="anytime", budget=...)`` and
+        exact search at the built subsequence lengths.
         """
         config = config if config is not None else SearchConfig()
         _require_x64_for(config)
@@ -202,6 +219,22 @@ class Database:
                 f"index must be a bool or a prebuilt TriangleIndex, got "
                 f"{type(index).__name__}"
             )
+        any_idx = None
+        if anytime:
+            from repro.anytime import build_anytime_index
+
+            opts = dict(anytime) if isinstance(anytime, dict) else {}
+            any_idx = build_anytime_index(
+                raw,
+                rows,
+                p=config.p,
+                znorm=config.znorm,
+                resolved_w=w,
+                w_config=config.w,
+                precision=config.precision,
+                seed=opts.pop("seed", seed),
+                **opts,
+            )
         cal = calibrate(rows, w, config.p)
         return cls(
             raw=raw,
@@ -214,6 +247,7 @@ class Database:
             row_sumsq=row_sumsq,
             index=tri,
             calibration=cal,
+            anytime=any_idx,
         )
 
     # ------------------------------------------------------- persistence
@@ -246,6 +280,12 @@ class Database:
                     f"cal_{k}": v
                     for k, v in self._calibration.to_arrays().items()
                 }
+            )
+        if self.anytime is not None:
+            from repro.anytime import anytime_arrays
+
+            arrays.update(
+                {f"any_{k}": v for k, v in anytime_arrays(self.anytime).items()}
             )
         np.savez_compressed(path, **arrays)
         return path
@@ -292,6 +332,17 @@ class Database:
                         if k.startswith("cal_")
                     }
                 )
+            any_idx = None
+            if "any_meta" in z:
+                from repro.anytime import anytime_from_arrays
+
+                any_idx = anytime_from_arrays(
+                    {
+                        k[len("any_"):]: z[k]
+                        for k in z.files
+                        if k.startswith("any_")
+                    }
+                )
             return cls(
                 raw=raw,
                 data=rows,
@@ -303,6 +354,7 @@ class Database:
                 row_sumsq=z["row_sumsq"],
                 index=tri,
                 calibration=cal,
+                anytime=any_idx,
             )
 
     # -------------------------------------------------------- properties
@@ -361,6 +413,7 @@ class Database:
             f"Database({self.n_rows} x {self.length}, w={self.w}, "
             f"p={self.config.p}, method={self.config.method!r}, "
             f"index={'R=%d' % self.index.n_refs if self.index else 'none'}, "
+            f"anytime={list(self.anytime.lengths) if self.anytime else 'none'}, "
             f"mesh={'attached' if self.mesh is not None else 'none'})"
         )
 
@@ -390,24 +443,32 @@ class Database:
 
     # ----------------------------------------------------------- queries
 
-    def prepare_queries(self, queries) -> np.ndarray:
+    def prepare_queries(self, queries, length: int | None = None) -> np.ndarray:
         """The exact query array the drivers consume: precision-cast and
         (when the session z-norms) z-normalized, shape/length validated.
         Public because the serving engine digests this canonical form —
         under z-norm, scaled/shifted copies of one query prepare to
         identical bytes, which is what makes answer-cache hits on
-        near-duplicate traffic exact rather than approximate."""
+        near-duplicate traffic exact rather than approximate.
+        ``length`` overrides the expected query length for sessions with
+        an anytime subsequence tier (default: the whole-row length)."""
         qs = np.asarray(queries, dtype=self.config.precision)
         if qs.ndim not in (1, 2):
             raise ValueError(
                 f"queries must be one (n,) series or a (Q, n) batch, got "
                 f"shape {qs.shape}"
             )
-        if qs.shape[-1] != self.length:
+        expected = self.length if length is None else int(length)
+        if qs.shape[-1] != expected:
+            tiers = (
+                f" (anytime tier lengths: {list(self.anytime.lengths)})"
+                if self.anytime is not None
+                else ""
+            )
             raise ValueError(
-                f"query length {qs.shape[-1]} != database series length "
-                f"{self.length}: the paper's DTW bounds assume equal "
-                f"lengths"
+                f"query length {qs.shape[-1]} != expected series length "
+                f"{expected}: the paper's DTW bounds assume equal "
+                f"lengths{tiers}"
             )
         if self.config.znorm:
             single = qs.ndim == 1
@@ -443,10 +504,23 @@ class Database:
         cost only — every pipeline bit-matches (tier-1 exactness)."""
         if cfg.method != "auto":
             return cfg, None
-        cascade = choose_cascade(
-            self.calibration, k=cfg.k if k is None else int(k)
-        )
+        kk = cfg.k if k is None else int(k)
+        cascade = self._cascade_cache.get(kk)
+        if cascade is None:
+            cascade = choose_cascade(self.calibration, k=kk)
+            self._cascade_cache[kk] = cascade
         return dataclasses.replace(cfg, method=cascade.method), cascade
+
+    def _anytime_info(self, qlen: int | None = None) -> dict | None:
+        """Tier summary for the planner (None when no tier is built)."""
+        if self.anytime is None:
+            return None
+        return {
+            "lengths": list(self.anytime.lengths),
+            "windows": self.anytime.n_windows,
+            "clusters": self.anytime.n_clusters,
+            "subsequence": qlen is not None and qlen != self.length,
+        }
 
     def plan(
         self,
@@ -455,12 +529,17 @@ class Database:
         driver: str | None = None,
         method: str | None = None,
         k: int | None = None,
+        mode: str = "exact",
+        budget: int | None = None,
+        length: int | None = None,
     ) -> Plan:
         """The routing decision ``search`` would take for ``queries``
         (shape only — nothing but a possible first-use calibration of a
         legacy bundle is computed).  ``Plan.explain()`` renders the
         chosen driver, stage order and reasons; under ``method="auto"``
-        it additionally shows the calibrated cascade cost model."""
+        it additionally shows the calibrated cascade cost model, and
+        under ``mode="anytime"`` the tier route and budget."""
+        qlen = length
         if queries is None:
             n_queries = 1
         elif isinstance(queries, (int, np.integer)):
@@ -468,6 +547,8 @@ class Database:
         else:
             arr = np.asarray(queries)
             n_queries = 1 if arr.ndim == 1 else int(arr.shape[0])
+            if arr.ndim in (1, 2) and qlen is None:
+                qlen = int(arr.shape[-1])
         cfg, cascade = self._resolve_method(self._config_for(method), k)
         return plan_search(
             cfg,
@@ -477,6 +558,9 @@ class Database:
             has_mesh=self.mesh is not None,
             driver=driver,
             cascade=cascade,
+            mode=mode,
+            budget=budget,
+            anytime_info=self._anytime_info(qlen),
         )
 
     def search(
@@ -486,8 +570,10 @@ class Database:
         k: int | None = None,
         driver: str | None = None,
         method: str | None = None,
-    ) -> SearchResult | BatchSearchResult:
-        """Exact nearest-neighbour search through the planned pipeline.
+        mode: str = "exact",
+        budget: int | None = None,
+    ):
+        """Nearest-neighbour search through the planned pipeline.
 
         ``queries`` is one (n,) series -> ``SearchResult`` or a (Q, n)
         batch -> ``BatchSearchResult`` (one query-major sweep).  Results
@@ -495,7 +581,34 @@ class Database:
         facade only amortizes the database-side work.  ``k``, ``driver``
         and ``method`` may be overridden per call (none of them touch
         the cached artifacts); everything else is fixed by the config.
+
+        On a session built with ``anytime=...``, two more routes open
+        (both return :class:`repro.anytime.AnytimeResult` /
+        ``AnytimeBatchResult`` with window provenance):
+
+        * ``mode="anytime"`` — budgeted best-first cluster exploration:
+          best-so-far top-k plus a sound per-answer error bound that
+          tightens to 0; ``budget`` caps refined windows per query
+          (``None`` = unlimited, at which point the answer bit-matches
+          ``mode="exact"``).
+        * queries shorter than the whole-row length — served exactly
+          (or anytime) against the matching subsequence tier.
         """
+        if mode not in ("exact", "anytime"):
+            raise ValueError(f"mode={mode!r} unknown; use 'exact' or 'anytime'")
+        qlen = int(np.asarray(queries).shape[-1])
+        if mode == "anytime" or (
+            self.anytime is not None and qlen != self.length
+        ):
+            return self._search_anytime(
+                queries, qlen, k=k, driver=driver, method=method,
+                mode=mode, budget=budget,
+            )
+        if budget is not None:
+            raise ValueError(
+                "budget= only applies to mode='anytime' (exact search "
+                "always explores everything)"
+            )
         qs = self.prepare_queries(queries)
         k = self.config.validate_k(
             self.config.k if k is None else k, self.n_rows
@@ -526,6 +639,49 @@ class Database:
             block=cfg.block, sync_every=self._sync_every,
             method=cfg.method,
         )
+
+    def _search_anytime(
+        self,
+        queries,
+        qlen: int,
+        *,
+        k: int | None,
+        driver: str | None,
+        method: str | None,
+        mode: str,
+        budget: int | None,
+    ):
+        """Route a query batch through the anytime tier (DESIGN.md §3.10)."""
+        from repro.anytime import anytime_search, exact_subsequence_search
+
+        if self.anytime is None:
+            raise ValueError(
+                "mode='anytime' needs the anytime tier: build the session "
+                "with Database.build(..., anytime=True) (or a dict of "
+                "tier options)"
+            )
+        li = self.anytime.tier(qlen)  # raises with built lengths listed
+        single = np.asarray(queries).ndim == 1
+        qs = np.atleast_2d(self.prepare_queries(queries, length=qlen))
+        k = self.config.validate_k(
+            self.config.k if k is None else k, li.n_windows
+        )
+        # the plan call validates the route (driver conflicts, budget on
+        # exact mode) and resolves method="auto" exactly like search()
+        plan = self.plan(
+            qs, driver=driver, method=method, k=k, mode=mode, budget=budget
+        )
+        if plan.driver == "anytime":
+            res = anytime_search(
+                qs, self.anytime, k=k, method=plan.config.method,
+                budget=plan.budget,
+            )
+        else:
+            res = exact_subsequence_search(
+                qs, self.anytime, k=k, method=plan.config.method,
+                block=plan.config.block,
+            )
+        return res[0] if single else res
 
     def topk(
         self, queries, k: int, *, driver: str | None = None

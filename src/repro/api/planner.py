@@ -39,6 +39,8 @@ DRIVERS = {
     "host": "repro.core.cascade.nn_search_host",
     "indexed": "repro.core.cascade.nn_search_indexed",
     "sharded": "repro.core.distributed.sharded_nn_search",
+    "anytime": "repro.anytime.search.anytime_search",
+    "subsequence": "repro.anytime.search.exact_subsequence_search",
 }
 
 #: below this many candidate rows the jitted device scan beats the
@@ -253,14 +255,22 @@ def choose_cascade(
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
-    """One routing decision: driver + stage order + why."""
+    """One routing decision: driver + stage order + why.
 
-    driver: str  # "scan" | "host" | "indexed" | "sharded"
+    ``mode``/``budget`` carry the anytime-tier decision (DESIGN.md
+    §3.10): ``mode="anytime"`` routes through the budgeted best-first
+    cluster explorer, where answer *quality*, not just cost, is
+    planner-controlled.
+    """
+
+    driver: str  # a DRIVERS key
     stages: tuple[str, ...]  # cascade stages, stage-0 filters included
     reasons: tuple[str, ...]
     n_queries: int
     config: SearchConfig
     cascade: CascadePlan | None = None  # set when the planner chose the order
+    mode: str = "exact"  # "exact" | "anytime"
+    budget: int | None = None  # refined windows per query; None = unlimited
 
     def explain(self) -> str:
         lines = [
@@ -269,8 +279,18 @@ class Plan:
             f"queries: {self.n_queries} (method={self.config.method}, "
             f"p={self.config.p}, k={self.config.k}, "
             f"block={self.config.block})",
-            "because:",
         ]
+        if self.mode == "anytime":
+            budget = (
+                "unlimited (answers are exact)"
+                if self.budget is None
+                else f"{self.budget} refined windows/query"
+            )
+            lines.append(
+                f"mode: anytime — best-so-far top-k with sound error "
+                f"bounds; budget {budget}"
+            )
+        lines.append("because:")
         lines += [f"  - {r}" for r in self.reasons]
         if self.cascade is not None:
             lines.append(self.cascade.explain())
@@ -286,6 +306,9 @@ def plan_search(
     has_mesh: bool,
     driver: str | None = None,
     cascade: CascadePlan | None = None,
+    mode: str = "exact",
+    budget: int | None = None,
+    anytime_info: dict | None = None,
 ) -> Plan:
     """Choose the pipeline for a query batch against one database session.
 
@@ -296,7 +319,16 @@ def plan_search(
     calibration-driven stage-order decision when the session resolved
     ``method="auto"`` (``Database._resolve_method``) — it rides the
     plan so ``explain()`` shows *both* axes of the decision.
+
+    ``mode="anytime"`` (and exact subsequence queries, signalled by
+    ``anytime_info["subsequence"]``) routes through the anytime tier
+    instead: ``anytime_info`` summarizes the tier (lengths, windows,
+    clusters) for the explanation.
     """
+    if mode not in ("exact", "anytime"):
+        raise ValueError(
+            f"mode={mode!r} unknown; use 'exact' or 'anytime'"
+        )
     stages = PIPELINES[config.method]
     cascade_reason = (
         (
@@ -307,7 +339,69 @@ def plan_search(
         if cascade is not None
         else ()
     )
+    if mode == "anytime" or (anytime_info or {}).get("subsequence"):
+        if anytime_info is None:
+            raise ValueError(
+                "mode='anytime' needs the anytime tier: build the session "
+                "with Database.build(..., anytime=True) (or a dict of "
+                "tier options)"
+            )
+        if driver is not None:
+            raise ValueError(
+                f"driver={driver!r} cannot be combined with the anytime "
+                f"tier — the cluster explorer is the driver"
+            )
+        info = (
+            f"{anytime_info.get('windows', '?')} windows in "
+            f"{anytime_info.get('clusters', '?')} clusters at lengths "
+            f"{anytime_info.get('lengths', '?')}"
+        )
+        if mode == "anytime":
+            return Plan(
+                "anytime",
+                ("cluster_lb",) + stages,
+                (
+                    f"anytime tier: best-first exploration over {info}; "
+                    f"cluster bounds from envelope boxes + the Theorem 1 "
+                    f"triangle inequality, refinement through the "
+                    f"standard stage pipeline",
+                )
+                + cascade_reason,
+                n_queries,
+                config,
+                cascade,
+                mode="anytime",
+                budget=budget,
+            )
+        if budget is not None:
+            raise ValueError(
+                "budget= only applies to mode='anytime' (exact search "
+                "always explores everything)"
+            )
+        return Plan(
+            "subsequence",
+            stages,
+            (
+                f"subsequence query (length != whole-row length): exact "
+                f"gid-order sweep over the anytime tier's window bank "
+                f"({info})",
+            )
+            + cascade_reason,
+            n_queries,
+            config,
+        )
+    if budget is not None:
+        raise ValueError(
+            "budget= only applies to mode='anytime' (exact search always "
+            "explores everything)"
+        )
     if driver is not None:
+        if driver in ("anytime", "subsequence"):
+            raise ValueError(
+                f"driver={driver!r} is not directly selectable: use "
+                f"mode='anytime' (or a subsequence-length query) on a "
+                f"session built with anytime=True"
+            )
         if driver not in DRIVERS:
             raise ValueError(
                 f"driver={driver!r} unknown; available: {sorted(DRIVERS)}"

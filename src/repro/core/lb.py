@@ -163,6 +163,48 @@ def lb_keogh_powered_qbatch(
     return lb_keogh_powered(cs[None, :, :], upper[:, None, :], lower[:, None, :], p)
 
 
+# ----------------------------------------------------------------- LB_Box
+
+
+def lb_box_powered(
+    cmin: jax.Array,
+    cmax: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    p: PNorm = 1,
+) -> jax.Array:
+    """Powered LB_Keogh of a whole *box* of candidates against one query.
+
+    ``[cmin, cmax]`` is an elementwise bounding box over a candidate set
+    (a cluster of subsequences — ``repro.anytime``); ``upper``/``lower``
+    the query envelope at band w.  The per-sample interval distance
+
+        g_i = max(0, lower_i - cmax_i, cmin_i - upper_i)
+
+    satisfies ``g_i <= max(0, c_i - upper_i, lower_i - c_i)`` for every
+    member ``c`` of the box (``cmin_i <= c_i <= cmax_i``), so the powered
+    sum (max at p = inf) lower-bounds LB_Keogh(c, q) — and hence
+    DTW_p^w(q, c) — for **every** member at once: one O(n) evaluation
+    prices a whole cluster.  A box degenerated to a single candidate
+    (``cmin == cmax == c``) recovers LB_Keogh(c, q) exactly.  Broadcasts
+    over leading dims like ``lb_keogh_powered``.
+    """
+    under = jnp.maximum(lower - cmax, 0.0)
+    over = jnp.maximum(cmin - upper, 0.0)
+    d = elem_cost(under + over, p)
+    if p == jnp.inf:
+        return jnp.max(d, axis=-1)
+    return jnp.sum(d, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def lb_box(
+    cmin: jax.Array, cmax: jax.Array, upper: jax.Array, lower: jax.Array,
+    p: PNorm = 1,
+) -> jax.Array:
+    return finish_cost(lb_box_powered(cmin, cmax, upper, lower, p), p)
+
+
 # ---------------------------------------------------------------- LB_Kim
 
 

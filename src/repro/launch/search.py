@@ -80,6 +80,11 @@ def load_session(args) -> Database | None:
             f"index, flag asked for {'one' if args.index else 'none'} — "
             f"the planner serves what the bundle has"
         )
+    if args.anytime and db.anytime is None:
+        diffs.append(
+            "--anytime: bundle has no anytime tier — rebuild without "
+            "--db-path (or delete the bundle) to add one"
+        )
     if diffs:
         print(
             "warning: serving under the bundle's saved session; these "
@@ -105,11 +110,16 @@ def build_session(args, db_data: np.ndarray) -> Database:
             print(f"loaded index from {args.index_path} (R={index.n_refs})")
         else:
             index = True
+    anytime: bool | dict = False
+    if args.anytime:
+        lengths = tuple(int(s) for s in args.anytime.split(","))
+        anytime = {"lengths": lengths}
     t0 = time.perf_counter()
     db = Database.build(
         db_data,
         config,
         index=index,
+        anytime=anytime,
         n_refs=args.n_refs,
         n_clusters=args.n_clusters or None,
         seed=args.seed,
@@ -168,21 +178,56 @@ def main():
         help="legacy index-only store: load the index from this .npz if "
         "present, else build and save it",
     )
+    ap.add_argument(
+        "--anytime",
+        type=str,
+        default="",
+        help="build the anytime subsequence tier at these comma-separated "
+        "lengths (e.g. '64,128'); required for --mode anytime",
+    )
+    ap.add_argument(
+        "--mode",
+        type=str,
+        default="exact",
+        choices=("exact", "anytime"),
+        help="'anytime' serves budgeted best-so-far answers with sound "
+        "error bounds through the cluster tier (DESIGN.md §3.10)",
+    )
+    ap.add_argument(
+        "--budget",
+        type=int,
+        default=0,
+        help="anytime exploration budget in refined windows per query "
+        "(0 = unlimited, which bit-matches exact)",
+    )
+    ap.add_argument(
+        "--query-length",
+        type=int,
+        default=0,
+        help="query length (0 = the session's series length); shorter "
+        "lengths route through the anytime subsequence tier",
+    )
     args = ap.parse_args()
 
     rng = np.random.default_rng(args.seed)
     db = load_session(args)
     if db is None:  # no bundle: synthesize and build (the cold path)
         db = build_session(args, random_walks(rng, args.db_size, args.length))
-    # queries follow the *session's* series length, so a loaded bundle of
-    # a different --length serves instead of crashing on the first batch
-    queries = random_walks(rng, args.queries, db.length)
+    # queries follow the *session's* series length (or --query-length,
+    # which routes through the anytime subsequence tier), so a loaded
+    # bundle of a different --length serves instead of crashing
+    qlen = args.query_length or db.length
+    queries = random_walks(rng, args.queries, qlen)
+    budget = args.budget or None
+    anytime_route = args.mode == "anytime" or (
+        db.anytime is not None and qlen != db.length
+    )
     # --queries 0 (config-printout smoke runs) must stay a graceful no-op
     batch = max(1, min(args.query_batch, args.queries))
     # route on what the session actually has (a loaded bundle may differ
     # from the flags — make_session warned about it above)
     indexed = db.index is not None
-    if not indexed:
+    if not (indexed or anytime_route):
         mesh = make_host_mesh()
         db.use_mesh(mesh, sync_every=args.sync_every)
         print(f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
@@ -190,20 +235,32 @@ def main():
         f"db={db.n_rows} series x {db.length} w={db.w} p={db.p} "
         f"query_batch={batch}"
     )
-    print(db.plan(batch).explain())
+    print(
+        db.plan(
+            batch, mode=args.mode, budget=budget, length=qlen
+        ).explain()
+    )
 
     def search_block(block_q):
-        return db.search(block_q, k=args.k)  # k is per-call-safe
+        # k is per-call-safe; mode/budget route per call as well
+        return db.search(block_q, k=args.k, mode=args.mode, budget=budget)
 
     t_all = time.perf_counter()
     for qi, res in enumerate(drain_queries(queries, search_block, batch)):
         s = res.stats
-        extra = (
-            f"stage0={s.lb0_pruned} ({100*s.stage0_ratio:.1f}%) "
-            f"clusters={s.clusters_pruned}/{s.clusters_total} "
-            if indexed
-            else ""
-        )
+        if anytime_route:
+            extra = (
+                f"err<={res.error_bound:.3f} refined={s.refined}"
+                f"/{s.n_windows} clusters={s.clusters_explored}"
+                f"/{s.clusters_total} "
+            )
+        elif indexed:
+            extra = (
+                f"stage0={s.lb0_pruned} ({100*s.stage0_ratio:.1f}%) "
+                f"clusters={s.clusters_pruned}/{s.clusters_total} "
+            )
+        else:
+            extra = ""
         per_stage = " ".join(
             f"pruned_{name}={n}" for name, n in s.pruned_by.items()
         )

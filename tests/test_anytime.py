@@ -1,0 +1,384 @@
+"""Anytime subsequence tier: build, search, persistence, integration
+(ISSUE 8 tentpole).
+
+The tier's contract has two halves, tested here and in
+``test_anytime_soundness.py``:
+
+* **exactness at full budget** — ``mode="anytime"`` with
+  ``budget=None`` returns bit-identical top-k to ``mode="exact"``,
+  which itself matches a brute-force banded-DTW sweep over the window
+  bank (and the legacy whole-row drivers when the query length equals
+  the series length);
+* **sound error bounds under any budget** — covered by the property
+  test in ``test_anytime_soundness.py``.
+
+This file owns the structural side: cluster-tree invariants, the
+``.npz`` bundle round trip, planner routing/validation, and the
+serving-engine integration (budget/deadline mapping + telemetry).
+"""
+
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.anytime import (
+    AnytimeBatchResult,
+    AnytimeResult,
+    anytime_arrays,
+    anytime_from_arrays,
+    anytime_search,
+    build_anytime_index,
+    exact_subsequence_search,
+)
+from repro.api import Database, SearchConfig
+from repro.core.dtw import dtw_qbatch
+from repro.data.synthetic import random_walks
+from repro.stream import znorm_series
+
+RNG = np.random.default_rng(11)
+N_DB, N, M = 24, 80, 40
+P_VALUES = [1, 2, math.inf]
+
+
+def make_db(p=2, znorm=False, **opts):
+    data = random_walks(np.random.default_rng(3), N_DB, N)
+    cfg = SearchConfig(w=6, p=p, k=3, znorm=znorm)
+    opts = {"lengths": (M, N), "hop": 4, "leaf_size": 8, **opts}
+    return Database.build(data, cfg, anytime=opts), data
+
+
+def queries(n=3, length=M, seed=5):
+    return random_walks(np.random.default_rng(seed), n, length)
+
+
+def oracle_topk(q, db, m, k):
+    """Brute-force banded DTW over the tier's window bank -> (dist, gid)
+    in the canonical (distance, gid) order the tier promises."""
+    li = db.anytime.tier(m)
+    if db.config.znorm:
+        q = znorm_series(np.asarray(q, np.float32))
+    d = np.asarray(
+        dtw_qbatch(q[None].astype(np.float32), li.wins, li.w, db.config.p)
+    )[0].astype(np.float32)
+    order = np.lexsort((np.arange(d.shape[0]), d))[:k]
+    return d[order], order
+
+
+# -------------------------------------------------------------- build
+
+
+def test_build_tier_structure():
+    db, _ = make_db()
+    idx = db.anytime
+    assert idx.lengths == (M, N)
+    li = idx.tier(M)
+    hop = 4
+    per_row = (N - M) // hop + 1
+    assert li.n_windows == N_DB * per_row == li.wins.shape[0]
+    # gids are row-major then start: provenance arrays must agree
+    assert li.row_ids[0] == 0 and li.row_ids[-1] == N_DB - 1
+    np.testing.assert_array_equal(
+        li.starts, np.tile(np.arange(per_row) * hop, N_DB)
+    )
+    t = li.tree
+    # CSR structure: leaves partition non-representative windows
+    assert t.leaf_start[0] == 0 and t.member_start[0] == 0
+    assert (np.diff(t.leaf_start) >= 0).all()
+    assert (np.diff(t.member_start) >= 0).all()
+    assert t.member_start[-1] == t.members.shape[0]
+    everything = np.sort(np.concatenate([t.rep_gid, t.members]))
+    np.testing.assert_array_equal(everything, np.arange(li.n_windows))
+    # representatives are refined unconditionally, never leaf members
+    assert not np.isin(t.rep_gid, t.members).any()
+    assert (t.radii_w >= 0).all()
+    # envelope boxes contain their members (reps are excluded by design:
+    # they are refined exactly before any box bound is consulted)
+    for c in range(t.n_coarse):
+        leaves = list(t.coarse_leaves(c))
+        if not leaves:
+            continue
+        gids = np.concatenate([t.leaf_members(lf) for lf in leaves])
+        assert (li.wins[gids] <= t.cmax0[c] + 1e-6).all()
+        assert (li.wins[gids] >= t.cmin0[c] - 1e-6).all()
+        for lf in leaves:  # leaf boxes nest inside the parent box
+            assert (t.cmin1[lf] >= t.cmin0[c] - 1e-6).all()
+            assert (t.cmax1[lf] <= t.cmax0[c] + 1e-6).all()
+
+
+def test_build_whole_row_tier_reuses_prepared_rows():
+    db, _ = make_db(znorm=True)
+    li = db.anytime.tier(N)
+    # the m == n tier *is* the prepared row bank: byte-identical windows
+    # are what makes anytime@unlimited bit-match the legacy drivers
+    np.testing.assert_array_equal(li.wins, db.data)
+    np.testing.assert_array_equal(li.row_ids, np.arange(N_DB))
+    np.testing.assert_array_equal(li.starts, np.zeros(N_DB, np.int64))
+
+
+def test_build_validation():
+    data = random_walks(np.random.default_rng(0), 4, 32)
+    with pytest.raises(ValueError, match="length"):
+        Database.build(
+            data, SearchConfig(w=4), anytime={"lengths": (64,)}
+        )
+    db = Database.build(data, SearchConfig(w=4), anytime=True)
+    with pytest.raises(ValueError, match="built lengths"):
+        db.anytime.tier(16)
+
+
+# ----------------------------------------------- exactness (full budget)
+
+
+@pytest.mark.parametrize("p", P_VALUES)
+def test_exact_subsequence_matches_bruteforce(p):
+    db, _ = make_db(p=p)
+    for q in queries():
+        res = db.search(q, k=4)  # subsequence length -> exact tier route
+        want_d, want_g = oracle_topk(q, db, M, 4)
+        np.testing.assert_allclose(res.distances, want_d, rtol=1e-5)
+        np.testing.assert_array_equal(res.indices, want_g)
+        # provenance decodes the gid
+        li = db.anytime.tier(M)
+        np.testing.assert_array_equal(res.row_ids, li.row_ids[want_g])
+        np.testing.assert_array_equal(res.starts, li.starts[want_g])
+        assert res.error_bound == 0.0
+
+
+@pytest.mark.parametrize("p", P_VALUES)
+@pytest.mark.parametrize("znorm", [False, True])
+def test_anytime_unlimited_bitmatches_exact(p, znorm):
+    db, _ = make_db(p=p, znorm=znorm)
+    qs = queries(4)
+    exact = db.search(qs, k=3)
+    anyt = db.search(qs, k=3, mode="anytime")
+    np.testing.assert_array_equal(anyt.distances, exact.distances)
+    np.testing.assert_array_equal(anyt.indices, exact.indices)
+    assert np.all(anyt.error_bounds == 0.0)
+    # exploration ended provably: frontier min (or inf when the heap
+    # drained) is at least the worst returned distance
+    assert anyt.stats.residual_lb >= float(np.max(anyt.distances)) - 1e-6
+
+
+@pytest.mark.parametrize("p", P_VALUES)
+def test_anytime_whole_row_bitmatches_legacy_driver(p):
+    db, data = make_db(p=p)
+    qs = queries(3, length=N)
+    legacy = db.search(qs, k=3, driver="scan")
+    anyt = db.search(qs, k=3, mode="anytime")
+    np.testing.assert_array_equal(anyt.distances, legacy.distances)
+    np.testing.assert_array_equal(anyt.indices, legacy.indices)
+    # whole-row gids are row ids
+    np.testing.assert_array_equal(anyt.indices, anyt.row_ids)
+
+
+def test_radii_free_tree_still_exact():
+    db, _ = make_db(radii=False)  # box-only bounds (no triangle term)
+    exact = db.search(queries(2), k=3)
+    anyt = db.search(queries(2), k=3, mode="anytime")
+    np.testing.assert_array_equal(anyt.distances, exact.distances)
+    np.testing.assert_array_equal(anyt.indices, exact.indices)
+
+
+# ------------------------------------------------------------- budgets
+
+
+def test_budget_caps_refinement():
+    db, _ = make_db()
+    li = db.anytime.tier(M)
+    floor = li.tree.n_coarse  # representatives always refined
+    res = db.search(queries(1)[0], k=3, mode="anytime", budget=floor)
+    assert res.stats.refined == floor
+    assert res.stats.budget == floor
+    unlimited = db.search(queries(1)[0], k=3, mode="anytime")
+    assert unlimited.stats.budget is None  # None encodes "no budget"
+    assert unlimited.stats.refined >= res.stats.refined
+    # best-so-far distances only improve with budget
+    assert np.all(unlimited.distances <= res.distances + 1e-6)
+
+
+def test_budget_validation():
+    db, _ = make_db()
+    with pytest.raises(ValueError, match="budget"):
+        db.search(queries(1)[0], k=2, mode="anytime", budget=0)
+    with pytest.raises(ValueError, match="only applies to mode='anytime'"):
+        db.search(queries(1, length=N)[0], k=2, budget=8)
+    with pytest.raises(ValueError, match="only applies to mode='anytime'"):
+        db.search(queries(1)[0], k=2, budget=8)  # exact subsequence route
+
+
+def test_result_shapes_and_batch_indexing():
+    db, _ = make_db()
+    qs = queries(3)
+    res = db.search(qs, k=2, mode="anytime", budget=32)
+    assert isinstance(res, AnytimeBatchResult)
+    assert len(res) == 3 and res.distances.shape == (3, 2)
+    one = res[1]
+    assert isinstance(one, AnytimeResult)
+    np.testing.assert_array_equal(one.distances, res.distances[1])
+    np.testing.assert_array_equal(one.error_bounds, res.error_bounds[1])
+    single = db.search(qs[0], k=2, mode="anytime", budget=32)
+    assert isinstance(single, AnytimeResult)
+
+
+# --------------------------------------------------------- persistence
+
+
+def test_bundle_round_trip_bit_identical(tmp_path):
+    db, _ = make_db(znorm=True)
+    qs = queries(2)
+    before_exact = db.search(qs, k=3)
+    before_any = db.search(qs, k=3, mode="anytime", budget=24)
+    path = db.save(os.path.join(tmp_path, "session"))
+    db2 = Database.load(path)
+    assert db2.anytime is not None
+    assert db2.anytime.lengths == db.anytime.lengths
+    for m in db.anytime.lengths:
+        a, b = db.anytime.tier(m), db2.anytime.tier(m)
+        assert (a.m, a.hop, a.w) == (b.m, b.hop, b.w)
+        np.testing.assert_array_equal(a.wins, b.wins)
+        np.testing.assert_array_equal(a.tree.rep_gid, b.tree.rep_gid)
+        np.testing.assert_array_equal(a.tree.radii_w, b.tree.radii_w)
+    after_exact = db2.search(qs, k=3)
+    after_any = db2.search(qs, k=3, mode="anytime", budget=24)
+    np.testing.assert_array_equal(after_exact.distances, before_exact.distances)
+    np.testing.assert_array_equal(after_exact.indices, before_exact.indices)
+    np.testing.assert_array_equal(after_any.distances, before_any.distances)
+    np.testing.assert_array_equal(
+        after_any.error_bounds, before_any.error_bounds
+    )
+
+
+def test_arrays_round_trip_and_version_check():
+    db, _ = make_db()
+    z = anytime_arrays(db.anytime)
+    idx = anytime_from_arrays(z)
+    assert idx.lengths == db.anytime.lengths
+    np.testing.assert_array_equal(
+        idx.tier(M).tree.cmin0, db.anytime.tier(M).tree.cmin0
+    )
+    bad = dict(z)
+    bad["meta"] = np.array([99.0, 2.0, 0.0])
+    with pytest.raises(ValueError, match="anytime tier format v99"):
+        anytime_from_arrays(bad)
+
+
+def test_bundle_without_tier_loads_none(tmp_path):
+    data = random_walks(np.random.default_rng(0), 8, 32)
+    db = Database.build(data, SearchConfig(w=4))
+    db2 = Database.load(db.save(os.path.join(tmp_path, "plain")))
+    assert db2.anytime is None
+
+
+# ------------------------------------------------------------- planner
+
+
+def test_plan_explains_anytime_route():
+    db, _ = make_db()
+    plan = db.plan(queries(2), mode="anytime", budget=64)
+    assert plan.driver == "anytime" and plan.mode == "anytime"
+    assert plan.stages[0] == "cluster_lb"
+    text = plan.explain()
+    assert "anytime" in text and "budget 64" in text
+    assert "Theorem 1" in text
+    # subsequence-length query in exact mode -> exact tier sweep
+    sub = db.plan(queries(2))
+    assert sub.driver == "subsequence" and sub.mode == "exact"
+    # whole-row exact plan stays on the legacy drivers
+    assert db.plan(queries(2, length=N)).driver in ("scan", "host")
+
+
+def test_plan_validation_errors():
+    db, _ = make_db()
+    data = random_walks(np.random.default_rng(0), 8, 32)
+    plain = Database.build(data, SearchConfig(w=4))
+    with pytest.raises(ValueError, match="needs the anytime tier"):
+        plain.search(data[0], k=1, mode="anytime")
+    with pytest.raises(ValueError, match="cannot be combined"):
+        db.search(queries(1)[0], k=1, mode="anytime", driver="scan")
+    with pytest.raises(ValueError, match="not directly selectable"):
+        db.plan(queries(1, length=N), driver="anytime")
+    with pytest.raises(ValueError, match="mode='bogus'"):
+        db.search(queries(1)[0], k=1, mode="bogus")
+    with pytest.raises(ValueError, match="built lengths"):
+        db.search(queries(1, length=17)[0], k=1)
+
+
+# -------------------------------------------------------------- engine
+
+
+def test_engine_anytime_round_trip():
+    from repro.serve import QueryEngine
+
+    db, _ = make_db()
+    eng = QueryEngine(db, max_batch=2, max_wait_ms=1.0)
+    try:
+        q = queries(1)[0]
+        exact = db.search(q, k=3)
+        ans = eng.submit(q, k=3, mode="anytime").result()
+        np.testing.assert_array_equal(ans.distances, exact.distances)
+        np.testing.assert_array_equal(ans.indices, exact.indices)
+        assert ans.error_bounds is not None and ans.error_bound == 0.0
+        # budgeted answer carries its residual bound
+        q2 = queries(1, seed=9)[0]
+        ans2 = eng.submit(q2, k=3, mode="anytime", budget=20).result()
+        assert ans2.error_bounds.shape == (3,)
+        assert np.all(ans2.error_bounds >= 0)
+        # cache hit replays the same bounds
+        hit = eng.submit(q2, k=3, mode="anytime", budget=20).result()
+        assert hit.cache_hit
+        np.testing.assert_array_equal(hit.error_bounds, ans2.error_bounds)
+        # deadline maps onto a budget once the refine-rate EMA is seeded
+        ans3 = eng.submit(q2, k=3, mode="anytime", deadline=0.05).result()
+        assert ans3.stats.refined >= db.anytime.tier(M).tree.n_coarse
+        s = eng.stats()
+        assert s.anytime_served == 4
+        assert s.clusters_explored > 0
+        assert s.residual_bound_mean >= 0.0
+    finally:
+        eng.close()
+
+
+def test_engine_anytime_validation():
+    from repro.serve import QueryEngine
+
+    db, _ = make_db()
+    data = random_walks(np.random.default_rng(0), 8, 32)
+    plain = Database.build(data, SearchConfig(w=4))
+    eng = QueryEngine(plain, max_batch=2, start=False)
+    with pytest.raises(ValueError, match="anytime"):
+        eng.submit(data[0], k=1, mode="anytime")
+    eng2 = QueryEngine(db, max_batch=2, start=False)
+    with pytest.raises(ValueError, match="budget"):
+        eng2.submit(queries(1)[0], k=1, budget=8)  # budget without anytime
+    with pytest.raises(ValueError, match="driver"):
+        eng2.submit(queries(1)[0], k=1, mode="anytime", driver="scan")
+
+
+# ------------------------------------------- direct-call API (no facade)
+
+
+def test_direct_search_calls_match_facade():
+    db, data = make_db(p=2)
+    qs = np.asarray(queries(2), np.float32)
+    via_db = db.search(qs, k=2, mode="anytime", budget=32)
+    direct = anytime_search(qs, db.anytime, k=2, method="lb_improved", budget=32)
+    np.testing.assert_array_equal(via_db.distances, direct.distances)
+    exact_direct = exact_subsequence_search(
+        qs, db.anytime, k=2, method="lb_improved"
+    )
+    exact_db = db.search(qs, k=2)
+    np.testing.assert_array_equal(exact_db.distances, exact_direct.distances)
+
+
+def test_build_index_standalone():
+    data = random_walks(np.random.default_rng(2), 8, 48)
+    idx = build_anytime_index(
+        data, data, p=1, znorm=False, resolved_w=4, w_config=4,
+        precision=np.float32, lengths=(24,), hop=6, leaf_size=4,
+    )
+    assert idx.lengths == (24,)
+    li = idx.tier(24)
+    assert li.n_windows == 8 * ((48 - 24) // 6 + 1)
+    assert "24:" in repr(idx)

@@ -1,0 +1,122 @@
+"""Property test: anytime error bounds are sound at every budget
+(ISSUE 8 satellite).
+
+For every query, every p in {1, 2, inf} and every budget from the
+representative floor up to unlimited:
+
+* **soundness** — the reported per-answer bound dominates the true gap:
+  ``0 <= d_j - t_j <= err_j`` where ``d_j`` is the budgeted answer's
+  j-th distance and ``t_j`` the exact j-th distance (best-so-far over a
+  subset can only over-estimate, and the residual-frontier argument in
+  ``repro.anytime.search`` caps the over-estimate);
+* **exhaustion == exactness** — once the budget covers the whole bank
+  (or is ``None``), distances, indices and provenance bit-match
+  ``mode="exact"``, and every bound is exactly 0.
+
+Both properties are checked on the subsequence tier (m < n) and on the
+whole-row tier (m == n, where exact answers additionally bit-match the
+legacy scan driver).
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.api import Database, SearchConfig
+from repro.data.synthetic import random_walks
+
+N_DB, N, M, K = 20, 72, 36, 3
+P_VALUES = [1, 2, math.inf]
+
+
+def build(p, znorm=False):
+    data = random_walks(np.random.default_rng(21), N_DB, N)
+    cfg = SearchConfig(w=5, p=p, k=K, znorm=znorm)
+    return Database.build(
+        data, cfg, anytime={"lengths": (M, N), "hop": 3, "leaf_size": 6}
+    )
+
+
+def budget_ladder(db, m):
+    li = db.anytime.tier(m)
+    floor = li.tree.n_coarse
+    n = li.n_windows
+    ladder = sorted(
+        {floor, floor + 3, max(floor, n // 8), n // 3, (2 * n) // 3, n}
+    )
+    return [b for b in ladder if b >= 1]
+
+
+@pytest.mark.parametrize("p", P_VALUES)
+@pytest.mark.parametrize("m", [M, N])
+def test_error_bound_dominates_true_gap_at_every_budget(p, m):
+    db = build(p)
+    qs = random_walks(np.random.default_rng(p if p != math.inf else 99), 4, m)
+    exact = db.search(qs, k=K, mode="anytime")  # budget=None: ground truth
+    for b in budget_ladder(db, m):
+        res = db.search(qs, k=K, mode="anytime", budget=b)
+        for qi in range(len(qs)):
+            d = res.distances[qi].astype(np.float64)
+            t = exact.distances[qi].astype(np.float64)
+            err = res.error_bounds[qi]
+            filled = res.indices[qi] >= 0
+            assert filled.all(), (
+                f"budget {b} >= rep floor must fill all {K} answers"
+            )
+            # best-so-far over a refined subset never under-estimates
+            assert np.all(d >= t - 1e-9), (b, qi, d, t)
+            # and the reported bound dominates the true gap
+            gap = d - t
+            assert np.all(gap <= err + 1e-9), (
+                f"unsound bound at budget {b}, query {qi}: "
+                f"gap {gap} > err {err}"
+            )
+            assert np.all(err >= 0.0)
+
+
+@pytest.mark.parametrize("p", P_VALUES)
+@pytest.mark.parametrize("znorm", [False, True])
+def test_exhausted_budget_bitmatches_exact_subsequence(p, znorm):
+    db = build(p, znorm)
+    qs = random_walks(np.random.default_rng(13), 3, M)
+    exact = db.search(qs, k=K)  # exact subsequence sweep
+    n = db.anytime.tier(M).n_windows
+    for budget in (n, None):  # covering budget and unlimited
+        res = db.search(qs, k=K, mode="anytime", budget=budget)
+        np.testing.assert_array_equal(res.distances, exact.distances)
+        np.testing.assert_array_equal(res.indices, exact.indices)
+        np.testing.assert_array_equal(res.row_ids, exact.row_ids)
+        np.testing.assert_array_equal(res.starts, exact.starts)
+        assert np.all(res.error_bounds == 0.0)
+
+
+@pytest.mark.parametrize("p", P_VALUES)
+def test_exhausted_budget_bitmatches_legacy_whole_row(p):
+    db = build(p)
+    qs = random_walks(np.random.default_rng(17), 3, N)
+    legacy = db.search(qs, k=K, driver="scan")
+    res = db.search(qs, k=K, mode="anytime")
+    np.testing.assert_array_equal(res.distances, legacy.distances)
+    np.testing.assert_array_equal(res.indices, legacy.indices)
+    assert np.all(res.error_bounds == 0.0)
+
+
+def test_bounds_tighten_to_zero_along_the_ladder():
+    """Monotone-in-the-large: the mean residual bound is finite at the
+    floor and hits exactly 0 by the covering budget (per-step
+    monotonicity is not promised — refining one leaf can raise the
+    frontier minimum non-uniformly — but the endpoint contract is)."""
+    db = build(2)
+    q = random_walks(np.random.default_rng(4), 1, M)[0]
+    ladder = budget_ladder(db, M)
+    errs = [
+        float(
+            np.max(
+                db.search(q, k=K, mode="anytime", budget=b).error_bounds
+            )
+        )
+        for b in ladder
+    ]
+    assert errs[-1] == 0.0  # covering budget: provably exact
+    assert all(e >= 0 and math.isfinite(e) for e in errs)

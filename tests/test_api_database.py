@@ -151,7 +151,7 @@ def test_znorm_search_matches_manually_normalized_legacy(problem):
 def test_query_shape_errors(problem):
     data, _ = problem
     db = Database.build(data, SearchConfig(w=W))
-    with pytest.raises(ValueError, match="query length 32 != database"):
+    with pytest.raises(ValueError, match="query length 32 != expected"):
         db.search(np.zeros(32, np.float32))
     with pytest.raises(ValueError, match=r"one \(n,\) series or a \(Q, n\)"):
         db.search(np.zeros((2, 3, 4), np.float32))
@@ -339,6 +339,55 @@ def test_plan_override_errors(problem):
         db.plan(qs, driver="sharded")
     with pytest.raises(ValueError, match="driver='warp' unknown"):
         db.plan(qs, driver="warp")
+
+
+# --------------------------------------------- calibration-cache regression
+
+
+def test_legacy_bundle_calibrates_once_across_plans(
+    problem, tmp_path, monkeypatch
+):
+    """ISSUE 8 satellite: a legacy bundle (no ``cal_*`` keys) must pay
+    the lazy calibration sweep exactly once per session, and
+    ``method="auto"`` must memoize the cascade choice per k — repeated
+    ``plan()`` / ``search()`` calls may not re-run either."""
+    data, qs = problem
+    db0 = Database.build(data, SearchConfig(w=W, method="auto"))
+    path = db0.save(os.path.join(tmp_path, "session"))
+    with np.load(path, allow_pickle=False) as z:
+        arrays = {k: z[k] for k in z.files if not k.startswith("cal_")}
+    np.savez_compressed(path, **arrays)
+
+    calibrate_calls, choose_calls = [], []
+    real_cal, real_choose = api_db.calibrate, api_db.choose_cascade
+
+    def counting_cal(*a, **kw):
+        calibrate_calls.append(1)
+        return real_cal(*a, **kw)
+
+    def counting_choose(cal, *, k):
+        choose_calls.append(k)
+        return real_choose(cal, k=k)
+
+    monkeypatch.setattr(api_db, "calibrate", counting_cal)
+    monkeypatch.setattr(api_db, "choose_cascade", counting_choose)
+
+    db = Database.load(path)
+    assert db._calibration is None  # legacy bundle: lazy
+    assert not calibrate_calls
+
+    for _ in range(3):
+        db.plan(qs)
+    db.search(qs)
+    db.plan(qs, k=3)
+    db.search(qs, k=3)
+    assert len(calibrate_calls) == 1, (
+        f"legacy-bundle calibration ran {len(calibrate_calls)}x"
+    )
+    assert sorted(set(choose_calls)) == sorted(choose_calls), (
+        f"cascade re-chosen for an already-planned k: {choose_calls}"
+    )
+    assert set(choose_calls) == {1, 3}
 
 
 # ----------------------------------------------------------------- sharded

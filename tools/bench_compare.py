@@ -7,15 +7,22 @@ it diffs a directory of freshly produced artifacts against the
 checked-in baseline in ``benchmarks/baselines/`` and prints per-row
 deltas, flagging rows slower than the threshold with WARN.
 
-It is deliberately **warn-only** (exit 0): timing noise across CI
-machines makes a hard gate at this granularity flaky, so the goal is a
-visible trend line in every bench-smoke log, with ``--strict`` available
-for local use or a future pinned-runner gate.
+The *full* sweep stays **warn-only** (exit 0): timing noise across CI
+machines makes a hard gate at every row flaky.  One pinned regime is
+gated hard, though — CI's bench-smoke runs a second, ``--strict`` pass
+restricted with ``--only`` to the ``batched/retrieval/`` rows (the
+paper's core query-major cascade, the least dispatch-noise-sensitive
+FAST rows): a >15% regression there fails the build.  When a slowdown
+is intentional (bigger default shapes, an extra stage), re-pin the
+baseline with ``--update`` and commit the refreshed
+``benchmarks/baselines/BENCH_*.json``.
 
 Usage:
   python tools/bench_compare.py bench-artifacts          # compare, warn
   python tools/bench_compare.py bench-artifacts --update # re-baseline
   python tools/bench_compare.py bench-artifacts --strict # exit 1 on WARN
+  python tools/bench_compare.py bench-artifacts \
+      --only batched/retrieval/ --strict                 # the CI gate
 
 Rows are matched by (module, row name); ratio-style rows (us_per_call
 == 0, e.g. speedup summaries) are compared by presence only.  Rows or
@@ -44,9 +51,13 @@ def load_rows(path: str) -> dict[str, float]:
 
 
 def compare_dir(
-    fresh_dir: str, baseline_dir: str, threshold: float
+    fresh_dir: str, baseline_dir: str, threshold: float, only: str = ""
 ) -> tuple[int, int]:
-    """Print the diff table; returns (rows_compared, rows_warned)."""
+    """Print the diff table; returns (rows_compared, rows_warned).
+
+    ``only`` restricts the comparison to rows whose name starts with the
+    given prefix — this is what pins the CI gate to one stable regime.
+    """
     fresh_files = sorted(glob.glob(os.path.join(fresh_dir, "BENCH_*.json")))
     if not fresh_files:
         print(f"no BENCH_*.json artifacts under {fresh_dir!r} — nothing to compare")
@@ -59,6 +70,9 @@ def compare_dir(
             print(f"[NEW ] {name}: no baseline yet (run with --update to pin)")
             continue
         fresh, base = load_rows(path), load_rows(base_path)
+        if only:
+            fresh = {r: v for r, v in fresh.items() if r.startswith(only)}
+            base = {r: v for r, v in base.items() if r.startswith(only)}
         for row, us in sorted(fresh.items()):
             if row not in base:
                 print(f"[NEW ] {name}:{row}")
@@ -102,17 +116,24 @@ def main() -> int:
                     help="copy the fresh artifacts into the baseline dir")
     ap.add_argument("--strict", action="store_true",
                     help="exit non-zero when any row warned")
+    ap.add_argument("--only", default="",
+                    help="compare only rows whose name starts with this "
+                    "prefix (pins the strict gate to one regime)")
     args = ap.parse_args()
 
     if args.update:
         update_baseline(args.fresh_dir, args.baseline)
         return 0
-    compared, warned = compare_dir(args.fresh_dir, args.baseline, args.threshold)
+    compared, warned = compare_dir(
+        args.fresh_dir, args.baseline, args.threshold, args.only
+    )
+    scope = f" (rows matching {args.only!r})" if args.only else ""
     print(
-        f"# compared {compared} timed rows against {args.baseline}: "
+        f"# compared {compared} timed rows against {args.baseline}{scope}: "
         f"{warned} warned (threshold +{100 * args.threshold:.0f}%)"
     )
     if warned and args.strict:
+        print("# --strict: treating the warnings above as failures")
         return 1
     return 0  # warn-only by default: the trajectory is watched, not gated
 
