@@ -77,8 +77,13 @@ def run(report):
     )
 
     # fused LB_Keogh -> LB_Improved stage (one launch, one HBM read;
-    # interpret-mode parity timing — on-TPU numbers use interpret=False)
+    # interpret-mode parity timing — on-TPU numbers use interpret=False).
+    # The first row pins the pre-tuning reference schedule (PR 4: tile_b=8,
+    # single-buffered, tiles-innermost grid) so the trajectory stays
+    # comparable; the second times whatever the tune table resolves (the
+    # checked-in default: double-buffered, queries-innermost).
     from repro.kernels import lb_fused_qbatch_op
+    from repro.kernels.tuning import resolve_config
 
     nq = 4
     qs = jnp.asarray(
@@ -86,13 +91,44 @@ def run(report):
     )
     uq, lq = envelope_batch(qs, w)
     fused_bounds = jnp.full((nq,), float(np.quantile(d_true, 0.5)))
-    t = _time(
+    t_ref = _time(
         lambda c: lb_fused_qbatch_op(
-            c, qs, uq, lq, w, fused_bounds, 1, interpret=True
+            c, qs, uq, lq, w, fused_bounds, 1, interpret=True,
+            tile_b=8, depth=1, grid="qb",
         ),
         small,
     )
     report(
-        "kernel/lb_fused_qbatch32", t * 1e6,
-        f"lanes_per_sec={nq*32/t:.3e}",
+        "kernel/lb_fused_qbatch32", t_ref * 1e6,
+        f"lanes_per_sec={nq*32/t_ref:.3e}",
     )
+
+    cfg = resolve_config("lb_fused", b=32, n=n)
+    t_tuned = _time(
+        lambda c: lb_fused_qbatch_op(
+            c, qs, uq, lq, w, fused_bounds, 1, interpret=True,
+        ),
+        small,
+    )
+    report(
+        "kernel/lb_fused_qbatch32_tuned", t_tuned * 1e6,
+        f"tile_b={cfg.tile_b} depth={cfg.depth} grid={cfg.grid} "
+        f"vs_ref={t_ref/t_tuned:.2f}x",
+    )
+
+    # roofline verdict for the fused stage, before/after pipelining —
+    # FAST-visible (the full per-kernel roofline sweep stays FULL-only in
+    # benchmarks/roofline.py).  Compute is identical across schedules
+    # (pass1 clamp+pow+add ~4, pass2 project+envelope+reverse ~12 flops
+    # per element per query lane); only the HBM traffic model differs:
+    # the qb grid re-reads each candidate tile once per query, the
+    # double-buffered bq grid reads it once total.
+    from benchmarks.roofline import F32, _row
+
+    flops = 16.0 * nq * 32 * n
+    env_bytes = (3 * nq * n + 2 * nq * 32) * F32
+    _row(report, "lb_fused_qb_depth1", t_ref, flops,
+         nq * 32 * n * F32 + env_bytes)
+    _row(report, "lb_fused_tuned", t_tuned, flops,
+         (32 * n * F32 if cfg.grid == "bq" else nq * 32 * n * F32)
+         + env_bytes)

@@ -152,6 +152,42 @@ def run(report):
     cells = 32.0 * n * (2 * w + 1)
     _row(report, "dtw_banded_batch32", t, 6.0 * cells, cells * F32)
 
+    # fused LB stage before/after the double-buffered schedule: compute
+    # is identical (pass1 ~4 + pass2 ~12 flops per element per query
+    # lane); the traffic model is what moves — the reference qb grid
+    # re-reads each candidate tile once per query, the double-buffered
+    # bq grid reads it from HBM exactly once and prefetches the next
+    # tile during compute
+    from repro.kernels import lb_fused_qbatch_op
+    from repro.kernels.tuning import resolve_config
+
+    nqf = 4
+    d_small = dtw_batch(q, small, w, 1, True)
+    fb = jnp.full((nqf,), float(np.quantile(np.asarray(d_small), 0.5)))
+    qsf = qs[:nqf]
+    uf, lf = uq[:nqf], lq[:nqf]
+    fl = 16.0 * nqf * 32 * n
+    env_b = (3 * nqf * n + 2 * nqf * 32) * F32
+    t = _time(
+        lambda c: lb_fused_qbatch_op(
+            c, qsf, uf, lf, w, fb, 1, interpret=True,
+            tile_b=8, depth=1, grid="qb",
+        ),
+        small,
+    )
+    _row(report, "lb_fused_qb_depth1", t, fl, nqf * 32 * n * F32 + env_b)
+    cfg = resolve_config("lb_fused", b=32, n=n)
+    t = _time(
+        lambda c: lb_fused_qbatch_op(
+            c, qsf, uf, lf, w, fb, 1, interpret=True,
+        ),
+        small,
+    )
+    _row(
+        report, "lb_fused_tuned", t, fl,
+        (32 * n * F32 if cfg.grid == "bq" else nqf * 32 * n * F32) + env_b,
+    )
+
 
 if __name__ == "__main__":
     run(lambda name, us, derived="": print(f"{name},{us:.1f},{derived}"))

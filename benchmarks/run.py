@@ -16,6 +16,7 @@ runs; the process exits non-zero at the end if anything failed.
 
 from __future__ import annotations
 
+import glob
 import importlib
 import json
 import os
@@ -53,6 +54,28 @@ FAST_SUITE = (
 )
 
 
+def discover_modules() -> tuple[str, ...]:
+    """Bench modules present on disk next to this runner.
+
+    Globs ``*.py`` and filters out anything living under ``__pycache__``
+    (or any other non-source directory) so stale bytecode trees can
+    never masquerade as an unregistered benchmark.  Used only for the
+    registry cross-check below — the suites themselves stay explicit.
+    """
+    here = os.path.dirname(os.path.abspath(__file__))
+    names = []
+    for path in sorted(glob.glob(os.path.join(here, "**", "*.py"),
+                                 recursive=True)):
+        if "__pycache__" in path.split(os.sep):
+            continue
+        if os.path.dirname(path) != here:  # baselines/ etc. hold no modules
+            continue
+        stem = os.path.splitext(os.path.basename(path))[0]
+        if stem.startswith("bench_") or stem in ("perf_search", "roofline"):
+            names.append(stem)
+    return tuple(names)
+
+
 def write_artifact(out_dir: str, name: str, fast: bool, rows: list) -> str:
     """One BENCH_<module>.json per module: the machine-readable twin of
     the CSV rows, stable keys for trend tooling."""
@@ -84,6 +107,11 @@ def main() -> None:
         all_rows.append(row)
         mod_rows.append(row)
         print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+    unregistered = sorted(set(discover_modules()) - set(FULL_SUITE))
+    if unregistered:
+        print(f"# WARNING: bench modules on disk but not in FULL_SUITE: "
+              f"{unregistered}", flush=True)
 
     print("name,us_per_call,derived")
     failures = []

@@ -54,6 +54,7 @@ from repro.core.cascade import (
 from repro.core.envelope import envelope_batch
 from repro.index.build import TriangleIndex, build_index
 from repro.index.store import index_arrays, index_from_arrays, npz_path
+from repro.kernels.tuning import TuneTable, autotune_session, install
 from repro.stream.state import STD_EPS
 
 BUNDLE_FORMAT_VERSION = 1
@@ -113,6 +114,7 @@ class Database:
         index: TriangleIndex | None,
         calibration: Calibration | None = None,
         anytime=None,
+        tune_table: TuneTable | None = None,
     ):
         self.raw = raw  # as given (precision-cast), what save() persists
         self.data = data  # znormed when config.znorm, else raw itself
@@ -131,6 +133,15 @@ class Database:
         # the anytime subsequence tier (repro.anytime.AnytimeIndex):
         # window banks + cluster trees per length of interest
         self.anytime = anytime
+        # kernel tune table (DESIGN.md §3.11): measured schedule entries
+        # + stage costs from build(tune=...), persisted as tune_* bundle
+        # keys.  None on untuned / legacy sessions — resolution then
+        # falls back to the checked-in defaults.  Installing makes the
+        # entries the process-active resolution source for every op
+        # wrapper this session's searches launch.
+        self.tune_table = tune_table
+        if tune_table is not None:
+            install(tune_table, merge=True)
         # per-stage selectivity probe for the cascade planner; built
         # once per session (lazily when a legacy bundle lacks one)
         self._calibration = calibration
@@ -159,6 +170,7 @@ class Database:
         strategy: str = "maxmin",
         seed: int = 0,
         anytime: bool | dict = False,
+        tune: bool | dict = False,
     ) -> "Database":
         """Precompute every database-side artifact for ``data`` (N, n).
 
@@ -175,6 +187,19 @@ class Database:
         :func:`repro.anytime.build_anytime_index` for every knob.  The
         tier enables ``search(..., mode="anytime", budget=...)`` and
         exact search at the built subsequence lengths.
+
+        ``tune=True`` runs the deterministic kernel autotune sweep
+        (DESIGN.md §3.11) at this session's (block, n) shape: every
+        kernel family's schedule space is timed, the fastest
+        bit-identical configs become the session's
+        :class:`~repro.kernels.tuning.TuneTable` (persisted as
+        ``tune_*`` bundle keys, installed process-wide), and measured
+        per-stage costs replace the planner's analytic table.  Pass a
+        dict to customize the sweep, e.g. ``tune=dict(iters=1,
+        families=("lb_fused", "pipeline"))`` — see
+        :func:`repro.kernels.tuning.autotune_session`.  ``tune=False``
+        (default) keeps the checked-in per-backend defaults: builds
+        stay fast and cold schedules stay sensible.
         """
         config = config if config is not None else SearchConfig()
         _require_x64_for(config)
@@ -235,6 +260,17 @@ class Database:
                 seed=opts.pop("seed", seed),
                 **opts,
             )
+        table = None
+        if tune:
+            opts = dict(tune) if isinstance(tune, dict) else {}
+            table = autotune_session(
+                n=n,
+                b=opts.pop("b", min(config.block, n_db)),
+                w=w,
+                p=config.p,
+                seed=opts.pop("seed", seed),
+                **opts,
+            )
         cal = calibrate(rows, w, config.p)
         return cls(
             raw=raw,
@@ -248,6 +284,7 @@ class Database:
             index=tri,
             calibration=cal,
             anytime=any_idx,
+            tune_table=table,
         )
 
     # ------------------------------------------------------- persistence
@@ -286,6 +323,12 @@ class Database:
 
             arrays.update(
                 {f"any_{k}": v for k, v in anytime_arrays(self.anytime).items()}
+            )
+        if self.tune_table is not None:
+            # optional like cal_*: absent in untuned / legacy bundles,
+            # where resolution falls back to the checked-in defaults
+            arrays.update(
+                {f"tune_{k}": v for k, v in self.tune_table.to_arrays().items()}
             )
         np.savez_compressed(path, **arrays)
         return path
@@ -343,6 +386,15 @@ class Database:
                         if k.startswith("any_")
                     }
                 )
+            table = None
+            if "tune_json" in z:
+                table = TuneTable.from_arrays(
+                    {
+                        k[len("tune_"):]: z[k]
+                        for k in z.files
+                        if k.startswith("tune_")
+                    }
+                )
             return cls(
                 raw=raw,
                 data=rows,
@@ -355,6 +407,7 @@ class Database:
                 index=tri,
                 calibration=cal,
                 anytime=any_idx,
+                tune_table=table,
             )
 
     # -------------------------------------------------------- properties
@@ -507,7 +560,10 @@ class Database:
         kk = cfg.k if k is None else int(k)
         cascade = self._cascade_cache.get(kk)
         if cascade is None:
-            cascade = choose_cascade(self.calibration, k=kk)
+            # a tuned session plans with its measured stage costs; an
+            # untuned one with the analytic table (explain() shows which)
+            costs = self.tune_table.stage_costs if self.tune_table else None
+            cascade = choose_cascade(self.calibration, k=kk, unit_costs=costs)
             self._cascade_cache[kk] = cascade
         return dataclasses.replace(cfg, method=cascade.method), cascade
 

@@ -58,6 +58,11 @@ CALIBRATED_STAGES = ("lb_kim", "lb_keogh", "lb_improved", "lb_webb")
 #: per-(query, candidate) envelope on top of pass 1; LB_Webb adds the
 #: candidate envelope + two-sided correction to pass 1.  The exact DP
 #: costs one band row per sample: ``2w + 1`` sweeps (``full_dp_cost``).
+#: These are the *fallback* costs: a session built with ``tune=...``
+#: carries measured per-stage costs in the same units
+#: (``repro.kernels.tuning.measure_stage_costs``), which override this
+#: table stage-by-stage via ``choose_cascade(unit_costs=...)`` —
+#: ``CascadePlan.explain()`` says which source each stage used.
 STAGE_UNIT_COST = {
     "lb_kim": 1.0,
     "lb_keogh": 3.0,
@@ -180,6 +185,9 @@ class CascadePlan:
     cost_per_candidate: float
     k: int
     predicted: tuple[tuple[str, float], ...]  # (method, cost), sorted
+    #: per-stage cost provenance, "measured" (tune sweep) or "analytic"
+    #: (STAGE_UNIT_COST / full_dp_cost); empty on pre-tuning plans
+    cost_source: tuple[str, ...] = ()
 
     def explain(self) -> str:
         lines = [
@@ -188,10 +196,19 @@ class CascadePlan:
             f"predicted cost/candidate: {self.cost_per_candidate:.2f} "
             f"O(n)-sweep units",
         ]
-        for s, f, c in zip(self.stages, self.enter_frac, self.stage_cost):
+        src = self.cost_source or ("analytic",) * len(self.stages)
+        measured = sorted({s for s, o in zip(self.stages, src) if o == "measured"})
+        lines.append(
+            "unit costs: measured by the kernel tune sweep for "
+            + ", ".join(measured)
+            + ("; analytic elsewhere" if len(measured) < len(set(self.stages)) else "")
+            if measured
+            else "unit costs: analytic (no tune sweep measured)"
+        )
+        for s, f, c, o in zip(self.stages, self.enter_frac, self.stage_cost, src):
             lines.append(
-                f"  {s:<12} enter {100 * f:6.2f}%  unit cost {c:5.1f}  "
-                f"-> {f * c:6.2f}"
+                f"  {s:<12} enter {100 * f:6.2f}%  unit cost {c:5.1f} "
+                f"[{o}]  -> {f * c:6.2f}"
             )
         others = ", ".join(
             f"{m}={c:.2f}" for m, c in self.predicted if m != self.method
@@ -202,7 +219,7 @@ class CascadePlan:
 
 
 def choose_cascade(
-    cal: Calibration, k: int = 1, methods=None
+    cal: Calibration, k: int = 1, methods=None, unit_costs=None
 ) -> CascadePlan:
     """Pick the cheapest predicted stage order from the calibration.
 
@@ -213,6 +230,13 @@ def choose_cascade(
     candidate is ``sum_j unit_cost_j * enter_frac_j`` plus the banded
     DP on whatever survives every bound.  Deterministic: ties break on
     (cost, stage count, name).
+
+    ``unit_costs``, when given, is a mapping of stage name (and/or
+    ``"full"``) to a *measured* per-candidate cost in the same
+    O(n)-sweep units (a tune sweep's ``measure_stage_costs``); measured
+    entries override the analytic table stage-by-stage, and the
+    returned plan records which source each stage used
+    (``cost_source``).
     """
     if methods is None:
         methods = sorted(
@@ -220,26 +244,36 @@ def choose_cascade(
             for m, stages in PIPELINES.items()
             if all(s in cal.stage_names or s == "full" for s in stages)
         )
+    unit_costs = unit_costs or {}
     bound_of = {s: cal.bounds[i] for i, s in enumerate(cal.stage_names)}
     kk = min(int(k), cal.dtw.shape[1])
     thr = np.sort(cal.dtw, axis=1)[:, kk - 1][:, None]  # (q, 1)
+
+    def stage_cost(s):
+        if s in unit_costs:
+            return float(unit_costs[s]), "measured"
+        if s == "full":
+            return full_dp_cost(cal.w), "analytic"
+        return STAGE_UNIT_COST[s], "analytic"
 
     scored = []
     for m in methods:
         stages = PIPELINES[m]
         alive = np.ones_like(cal.dtw, dtype=bool)
-        fracs, costs = [], []
+        fracs, costs, srcs = [], [], []
         for s in stages:
             fracs.append(float(alive.mean()))
-            if s == "full":
-                costs.append(full_dp_cost(cal.w))
-            else:
-                costs.append(STAGE_UNIT_COST[s])
+            c, src = stage_cost(s)
+            costs.append(c)
+            srcs.append(src)
+            if s != "full":
                 alive = alive & (bound_of[s] < thr)
         total = float(np.dot(fracs, costs))
-        scored.append((total, len(stages), m, tuple(fracs), tuple(costs)))
+        scored.append(
+            (total, len(stages), m, tuple(fracs), tuple(costs), tuple(srcs))
+        )
     scored.sort(key=lambda t: (t[0], t[1], t[2]))
-    total, _, method, fracs, costs = scored[0]
+    total, _, method, fracs, costs, srcs = scored[0]
     return CascadePlan(
         method=method,
         stages=PIPELINES[method],
@@ -248,8 +282,9 @@ def choose_cascade(
         cost_per_candidate=total,
         k=kk,
         predicted=tuple(
-            (m, t) for t, _, m, _, _ in sorted(scored, key=lambda t: t[0])
+            (m, t) for t, _, m, _, _, _ in sorted(scored, key=lambda t: t[0])
         ),
+        cost_source=srcs,
     )
 
 

@@ -58,7 +58,10 @@ Method = Literal[
     "full", "lb_keogh", "lb_improved", "lb_webb", "kim_improved", "kim_webb"
 ]
 
-#: lanes per compacted gather; also the unit dp_lane_work is counted in
+#: lanes per compacted gather; also the unit dp_lane_work is counted in.
+#: This is the pre-tuning fallback — callers that leave ``lane_chunk``
+#: unset resolve the "pipeline" family from the active tune table
+#: (DESIGN.md §3.11), which falls back to this constant.
 LANE_CHUNK = 32
 
 
@@ -346,7 +349,7 @@ def run_block_stages(
     blk: jax.Array,
     bound: jax.Array,
     mask0: jax.Array,
-    lane_chunk: int = LANE_CHUNK,
+    lane_chunk: int | None = None,
 ) -> BlockStages:
     """One candidate block through the method's stage pipeline, query-major.
 
@@ -360,7 +363,19 @@ def run_block_stages(
     on entry.  The first LB stage runs unconditionally on the tile (the
     paper's economics: a fully-pruned block costs exactly one LB_Keogh
     pass); every later stage runs survivor-compacted.
+
+    ``lane_chunk`` left ``None`` resolves from the active tune table
+    ("pipeline" family; :data:`LANE_CHUNK` is the fallback).  The chunk
+    size is a schedule knob: ``d``/masks/``dp_lane_useful`` are
+    identical across sizes, only ``dp_lane_work`` (chunk-padded by
+    definition) varies.
     """
+    if lane_chunk is None:
+        from repro.kernels.tuning.table import resolve_config
+
+        lane_chunk = resolve_config(
+            "pipeline", b=blk.shape[0], n=qs.shape[1]
+        ).lane_chunk
     nq, block = qs.shape[0], blk.shape[0]
     ctx = PipeContext(qs, upper, lower, w, p)
     names = PIPELINES[method]

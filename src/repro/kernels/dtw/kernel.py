@@ -25,6 +25,10 @@ Layout notes:
   dynamic row index, all (1, W)-shaped (Mosaic wants >= 2-D);
 * supports p in {1, 2} (the cascade's fast path); other p values use the
   pure-jnp path in repro.core.
+* ``depth=2`` (tune-table resolved) double-buffers the candidate rows:
+  lane i+1's padded row is DMA'd into the spare VMEM slot while lane i's
+  row loop runs, so the DP never stalls on the HBM fetch.  Same math,
+  same outputs — a schedule knob only.
 """
 
 from __future__ import annotations
@@ -34,20 +38,23 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import BIG, cummin_doubling, cumsum_doubling
 
 
-def _dtw_kernel(q_ref, ypad_ref, bound_ref, out_ref, *, n: int, w: int, p):
+def _dtw_lane(q_ref, yrow_full, bound, out_ref, *, n: int, w: int, p):
+    """The band DP for one candidate lane; ``yrow_full`` is the lane's
+    padded row as a (1, n + 2w) value already resident in VMEM.  Shared
+    by both schedules — the bit-identity argument in code form."""
     width = 2 * w + 1
     ks = jax.lax.broadcasted_iota(jnp.int32, (1, width), 1)  # band offset k
 
     prev0 = jnp.full((1, width), BIG, jnp.float32).at[0, w].set(0.0)
-    bound = bound_ref[0, 0]
 
     def row(state):
         i, prev = state
-        yrow = ypad_ref[0, pl.ds(i, width)].reshape(1, width)
+        yrow = jax.lax.dynamic_slice(yrow_full, (0, i), (1, width))
         qi = q_ref[0, i]
         diff = jnp.abs(qi - yrow)
         cost = diff if p == 1 else diff * diff
@@ -75,7 +82,40 @@ def _dtw_kernel(q_ref, ypad_ref, bound_ref, out_ref, *, n: int, w: int, p):
     out_ref[0, 0] = jnp.where(i == n, last[0, w], jnp.min(last))
 
 
-@functools.partial(jax.jit, static_argnames=("n", "w", "p", "interpret"))
+def _dtw_kernel(q_ref, ypad_ref, bound_ref, out_ref, *, n: int, w: int, p):
+    """depth=1: the padded row arrives via the BlockSpec pipeline."""
+    _dtw_lane(q_ref, ypad_ref[...], bound_ref[0, 0], out_ref, n=n, w=w, p=p)
+
+
+def _dtw_db_kernel(
+    q_ref, ypad_hbm, bound_ref, out_ref, y_vmem, sem, *, n: int, w: int, p
+):
+    """depth=2: two-slot staging — lane i+1's padded row is copied while
+    lane i's row loop runs, so the DP never waits on HBM."""
+    i = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    def dma(slot, lane):
+        return pltpu.make_async_copy(
+            ypad_hbm.at[pl.ds(lane, 1), :], y_vmem.at[slot], sem.at[slot]
+        )
+
+    @pl.when(i == 0)
+    def _():
+        dma(0, 0).start()
+
+    # slot (i+1) % 2 held lane i-1, whose DP has retired (sequential grid)
+    @pl.when(i + 1 < nb)
+    def _():
+        dma((i + 1) % 2, i + 1).start()
+
+    dma(i % 2, i).wait()
+    _dtw_lane(q_ref, y_vmem[i % 2], bound_ref[0, 0], out_ref, n=n, w=w, p=p)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "w", "p", "interpret", "depth")
+)
 def dtw_banded_pallas(
     q: jax.Array,
     cands_pad: jax.Array,
@@ -84,21 +124,43 @@ def dtw_banded_pallas(
     w: int,
     p=1,
     interpret: bool = True,
+    depth: int = 1,
 ):
     """q (1, n); cands_pad (B, n + 2w) sentinel-padded; bounds (B, 1)
-    per-lane powered abandon thresholds -> powered DTW (B,)."""
+    per-lane powered abandon thresholds -> powered DTW (B,).  ``depth``
+    selects single-buffered BlockSpec staging (1) or the double-buffered
+    row prefetch (2) — outputs are bit-identical either way."""
     b = cands_pad.shape[0]
-    kern = functools.partial(_dtw_kernel, n=n, w=w, p=p)
+    q_spec = pl.BlockSpec((1, n), lambda i: (0, 0))
+    bound_spec = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((b, 1), jnp.float32)
+    if depth == 1:
+        kern = functools.partial(_dtw_kernel, n=n, w=w, p=p)
+        out = pl.pallas_call(
+            kern,
+            grid=(b,),
+            in_specs=[
+                q_spec,
+                pl.BlockSpec((1, n + 2 * w), lambda i: (i, 0)),
+                bound_spec,
+            ],
+            out_specs=out_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(q, cands_pad, bounds)
+        return out[:, 0]
+    kern = functools.partial(_dtw_db_kernel, n=n, w=w, p=p)
     out = pl.pallas_call(
         kern,
         grid=(b,),
-        in_specs=[
-            pl.BlockSpec((1, n), lambda i: (0, 0)),
-            pl.BlockSpec((1, n + 2 * w), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        in_specs=[q_spec, pl.BlockSpec(memory_space=pltpu.ANY), bound_spec],
+        out_specs=out_spec,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((2, 1, n + 2 * w), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
         ],
-        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
         interpret=interpret,
     )(q, cands_pad, bounds)
     return out[:, 0]

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 from repro.core.dtw import finish_cost
 from repro.kernels.common import BIG, PAD_VALUE, interpret_default
 from repro.kernels.dtw.kernel import dtw_banded_pallas
+from repro.kernels.tuning.table import resolve_config
 
 
 def dtw_op(
@@ -18,6 +19,7 @@ def dtw_op(
     powered: bool = False,
     bounds: jax.Array | None = None,
     interpret: bool | None = None,
+    depth: int | None = None,
 ) -> jax.Array:
     """DTW_p of query (n,) against candidates (B, n) via the TPU kernel.
 
@@ -27,6 +29,10 @@ def dtw_op(
     >= bound instead of the exact distance (``powered`` applies to the
     returned values either way).  Omitted, every lane runs the full DP
     and the result is exact — identical to the pre-abandon kernel.
+
+    ``depth`` left ``None`` resolves from the active tune table
+    (1 = BlockSpec staging, 2 = double-buffered row prefetch; schedule
+    only, outputs bit-identical).
     """
     if interpret is None:
         interpret = interpret_default()
@@ -35,6 +41,8 @@ def dtw_op(
     q = jnp.asarray(q, jnp.float32)
     cands = jnp.asarray(cands, jnp.float32)
     b, n = cands.shape
+    if depth is None:
+        depth = resolve_config("dtw", b=b, n=n).depth
     w = int(min(w, n - 1))
     pad = jnp.full((b, w), PAD_VALUE, jnp.float32)
     cands_pad = jnp.concatenate([pad, cands, pad], axis=1)
@@ -42,5 +50,7 @@ def dtw_op(
         bounds_col = jnp.full((b, 1), BIG, jnp.float32)
     else:
         bounds_col = jnp.asarray(bounds, jnp.float32).reshape(b, 1)
-    out = dtw_banded_pallas(q[None, :], cands_pad, bounds_col, n, w, p, interpret)
+    out = dtw_banded_pallas(
+        q[None, :], cands_pad, bounds_col, n, w, p, interpret, depth
+    )
     return out if powered else finish_cost(out, p)

@@ -7,20 +7,27 @@ import jax.numpy as jnp
 
 from repro.kernels.common import BIG, interpret_default, round_up
 from repro.kernels.envelope.kernel import envelope_pallas_padded
+from repro.kernels.tuning.table import resolve_config
 
 
 def envelope_op(
-    xs: jax.Array, w: int, tile_b: int = 8, interpret: bool | None = None
+    xs: jax.Array,
+    w: int,
+    tile_b: int | None = None,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Batched warping envelope (U, L) of ``xs`` (B, n) via the TPU kernel.
 
     Handles sentinel padding, window-multiple rounding and batch tiling;
-    the kernel itself is branch-free.
+    the kernel itself is branch-free.  ``tile_b=None`` resolves from the
+    active tune table (schedule only — outputs are identical).
     """
     if interpret is None:
         interpret = interpret_default()
     xs = jnp.asarray(xs)
     b, n = xs.shape
+    if tile_b is None:
+        tile_b = resolve_config("envelope", b=b, n=n).tile_b
     w = int(min(w, n - 1))
     if w == 0:
         return xs, xs

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 
 from repro.kernels.common import PAD_VALUE, interpret_default, round_up
 from repro.kernels.lb_fused.kernel import lb_fused_qbatch_pallas
+from repro.kernels.tuning.table import resolve_config
 
 
 def lb_fused_qbatch_op(
@@ -17,8 +18,10 @@ def lb_fused_qbatch_op(
     w: int,
     bounds: jax.Array,
     p=1,
-    tile_b: int = 8,
+    tile_b: int | None = None,
     interpret: bool | None = None,
+    depth: int | None = None,
+    grid: str | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Both passes of the two-pass bound in one kernel launch.
 
@@ -29,6 +32,10 @@ def lb_fused_qbatch_op(
     predicated away).  The candidate tile is read from HBM once per
     query lane and the projection stack never leaves VMEM — the
     single-sweep form of ``lb_keogh_qbatch_op`` + ``lb_improved_pass2_qbatch_op``.
+
+    ``tile_b`` / ``depth`` / ``grid`` left ``None`` resolve from the
+    active tune table (schedule only — outputs are bit-identical across
+    every config; see DESIGN.md §3.11).
     """
     if interpret is None:
         interpret = interpret_default()
@@ -39,6 +46,11 @@ def lb_fused_qbatch_op(
     upper = jnp.asarray(upper, jnp.float32)
     lower = jnp.asarray(lower, jnp.float32)
     b, n = cands.shape
+    if tile_b is None or depth is None or grid is None:
+        cfg = resolve_config("lb_fused", b=b, n=n)
+        tile_b = cfg.tile_b if tile_b is None else tile_b
+        depth = cfg.depth if depth is None else depth
+        grid = cfg.grid if grid is None else grid
     w = int(min(w, n - 1))
     bp = round_up(b, tile_b)
     if bp != b:
@@ -50,6 +62,7 @@ def lb_fused_qbatch_op(
         )
     bounds_col = jnp.asarray(bounds, jnp.float32).reshape(-1, 1)
     lb1, lb = lb_fused_qbatch_pallas(
-        cands, upper, lower, qs, bounds_col, w, n, p, tile_b, interpret
+        cands, upper, lower, qs, bounds_col, w, n, p, tile_b, interpret,
+        depth, grid,
     )
     return lb1[:, :b], lb[:, :b]

@@ -15,6 +15,7 @@ from repro.kernels.lb_keogh.ops import (
     lb_keogh_qbatch_op,
     lb_keogh_stream_qbatch_op,
 )
+from repro.kernels.tuning.table import resolve_config
 
 
 def lb_improved_pass2_op(
@@ -22,14 +23,17 @@ def lb_improved_pass2_op(
     q: jax.Array,
     w: int,
     p=1,
-    tile_b: int = 8,
+    tile_b: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Second term of Corollary 4: LB_Keogh(q, H)^p for projections h (B, n)."""
+    """Second term of Corollary 4: LB_Keogh(q, H)^p for projections h (B, n).
+    ``tile_b=None`` resolves from the active tune table."""
     if interpret is None:
         interpret = interpret_default()
     h = jnp.asarray(h)
     b, n = h.shape
+    if tile_b is None:
+        tile_b = resolve_config("lb_improved", b=b, n=n).tile_b
     w = int(min(w, n - 1))
     win = 2 * w + 1
     total = round_up(n + 2 * w, win)
@@ -55,12 +59,13 @@ def lb_improved_op(
     w: int,
     p=1,
     interpret: bool | None = None,
+    tile_b: int | None = None,
 ) -> jax.Array:
     """Full powered LB_Improved for a candidate batch, kernel end to end:
     pass 1 (fused clamp-project-accumulate) feeds its projection straight
     into pass 2 (fused envelope-accumulate)."""
-    lb1, h = lb_keogh_op(cands, upper, lower, p, interpret=interpret)
-    lb2 = lb_improved_pass2_op(h, q, w, p, interpret=interpret)
+    lb1, h = lb_keogh_op(cands, upper, lower, p, tile_b, interpret=interpret)
+    lb2 = lb_improved_pass2_op(h, q, w, p, tile_b, interpret=interpret)
     return lb1 + lb2
 
 
@@ -72,15 +77,18 @@ def lb_improved_pass2_qbatch_op(
     qs: jax.Array,
     w: int,
     p=1,
-    tile_b: int = 8,
+    tile_b: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Corollary 4 second term for per-(query, candidate) projections
-    h (Q, B, n) against queries (Q, n) -> (Q, B) (DESIGN.md §3.4)."""
+    h (Q, B, n) against queries (Q, n) -> (Q, B) (DESIGN.md §3.4).
+    ``tile_b=None`` resolves from the active tune table."""
     if interpret is None:
         interpret = interpret_default()
     h = jnp.asarray(h)
     nq, b, n = h.shape
+    if tile_b is None:
+        tile_b = resolve_config("lb_improved", b=b, n=n).tile_b
     w = int(min(w, n - 1))
     win = 2 * w + 1
     total = round_up(n + 2 * w, win)
@@ -108,13 +116,14 @@ def lb_improved_qbatch_op(
     w: int,
     p=1,
     interpret: bool | None = None,
+    tile_b: int | None = None,
 ) -> jax.Array:
     """Full powered LB_Improved for candidates (B, n) against a query
     batch (Q, n) -> (Q, B), kernel end to end: the query-major pass 1
     emits a (Q, B, n) projection stack that feeds straight into the
     query-major pass 2 — one launch per pass for the whole batch."""
-    lb1, h = lb_keogh_qbatch_op(cands, upper, lower, p, interpret=interpret)
-    lb2 = lb_improved_pass2_qbatch_op(h, qs, w, p, interpret=interpret)
+    lb1, h = lb_keogh_qbatch_op(cands, upper, lower, p, tile_b, interpret=interpret)
+    lb2 = lb_improved_pass2_qbatch_op(h, qs, w, p, tile_b, interpret=interpret)
     return lb1 + lb2
 
 

@@ -11,6 +11,7 @@ from repro.kernels.lb_keogh.kernel import (
     lb_keogh_qbatch_pallas,
     lb_keogh_stream_qbatch_pallas,
 )
+from repro.kernels.tuning.table import resolve_config
 
 
 def lb_keogh_op(
@@ -18,14 +19,17 @@ def lb_keogh_op(
     upper: jax.Array,
     lower: jax.Array,
     p=1,
-    tile_b: int = 8,
+    tile_b: int | None = None,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Powered LB_Keogh + projection H for a candidate batch (B, n)."""
+    """Powered LB_Keogh + projection H for a candidate batch (B, n).
+    ``tile_b=None`` resolves from the active tune table."""
     if interpret is None:
         interpret = interpret_default()
     cands = jnp.asarray(cands)
     b, n = cands.shape
+    if tile_b is None:
+        tile_b = resolve_config("lb_keogh", b=b, n=n).tile_b
     bp = round_up(b, tile_b)
     if bp != b:
         cands = jnp.pad(cands, ((0, bp - b), (0, 0)))
@@ -38,17 +42,20 @@ def lb_keogh_qbatch_op(
     upper: jax.Array,
     lower: jax.Array,
     p=1,
-    tile_b: int = 8,
+    tile_b: int | None = None,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Query-major LB_Keogh: candidates (B, n) vs envelopes (Q, n) ->
-    (lb (Q, B), H (Q, B, n)) in one launch (DESIGN.md §3.4)."""
+    (lb (Q, B), H (Q, B, n)) in one launch (DESIGN.md §3.4).
+    ``tile_b=None`` resolves from the active tune table."""
     if interpret is None:
         interpret = interpret_default()
     cands = jnp.asarray(cands)
     upper = jnp.asarray(upper)
     lower = jnp.asarray(lower)
     b, n = cands.shape
+    if tile_b is None:
+        tile_b = resolve_config("lb_keogh", b=b, n=n).tile_b
     bp = round_up(b, tile_b)
     if bp != b:
         cands = jnp.pad(cands, ((0, bp - b), (0, 0)))
@@ -63,7 +70,7 @@ def lb_keogh_stream_qbatch_op(
     n: int,
     hop: int = 1,
     p=1,
-    tile_b: int = 8,
+    tile_b: int | None = None,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Stream-packed LB_Keogh (DESIGN.md §3.5): a flat stream segment
@@ -77,6 +84,8 @@ def lb_keogh_stream_qbatch_op(
     if length < n:
         raise ValueError(f"segment of {length} samples holds no {n}-window")
     b = (length - n) // hop + 1
+    if tile_b is None:
+        tile_b = resolve_config("lb_keogh", b=b, n=n).tile_b
     bp = round_up(b, tile_b)
     lp = (bp - 1) * hop + n
     if lp > length:

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 
 from repro.kernels.common import PAD_VALUE, interpret_default, round_up
 from repro.kernels.lb_kim.kernel import lb_kim_qbatch_pallas
+from repro.kernels.tuning.table import resolve_config
 
 
 def lb_kim_qbatch_op(
@@ -14,7 +15,7 @@ def lb_kim_qbatch_op(
     qs: jax.Array,
     mask: jax.Array | None = None,
     p=1,
-    tile_b: int = 8,
+    tile_b: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Query-major powered LB_Kim: candidates (B, n) vs queries (Q, n)
@@ -23,13 +24,16 @@ def lb_kim_qbatch_op(
     ``mask`` (Q, B), optional: the cascade's entry mask — lanes with a
     falsy entry emit BIG.  A ragged final block is padded up to
     ``tile_b`` internally; pad lanes ride through masked-dead and are
-    sliced off before returning.
+    sliced off before returning.  ``tile_b=None`` resolves from the
+    active tune table.
     """
     if interpret is None:
         interpret = interpret_default()
     cands = jnp.asarray(cands)
     qs = jnp.asarray(qs)
     b, n = cands.shape
+    if tile_b is None:
+        tile_b = resolve_config("lb_kim", b=b, n=n).tile_b
     nq = qs.shape[0]
     if mask is None:
         mask_f = jnp.ones((nq, b), cands.dtype)

@@ -1,0 +1,57 @@
+"""Kernel autotuning: schedule search spaces, the persisted TuneTable,
+and the deterministic timed sweep (DESIGN.md §3.11).
+
+Public surface: :class:`KernelConfig` / :func:`search_space` /
+:func:`shape_bucket` (the space), :class:`TuneTable` with
+:func:`active_table` / :func:`install` / :func:`use_table` /
+:func:`resolve_config` (resolution), and :func:`autotune` /
+:func:`autotune_session` / :func:`measure_stage_costs` (the sweep).
+"""
+
+from repro.kernels.tuning.autotune import (
+    SESSION_FAMILIES,
+    SweepEntry,
+    SweepResult,
+    autotune,
+    autotune_session,
+    measure_stage_costs,
+)
+from repro.kernels.tuning.defaults import DEFAULT_ENTRIES
+from repro.kernels.tuning.space import (
+    FALLBACK,
+    FAMILIES,
+    GRID_LAYOUTS,
+    KernelConfig,
+    search_space,
+    shape_bucket,
+)
+from repro.kernels.tuning.table import (
+    TUNE_FORMAT_VERSION,
+    TuneTable,
+    active_table,
+    install,
+    resolve_config,
+    use_table,
+)
+
+__all__ = [
+    "DEFAULT_ENTRIES",
+    "FALLBACK",
+    "FAMILIES",
+    "GRID_LAYOUTS",
+    "KernelConfig",
+    "SESSION_FAMILIES",
+    "SweepEntry",
+    "SweepResult",
+    "TUNE_FORMAT_VERSION",
+    "TuneTable",
+    "active_table",
+    "autotune",
+    "autotune_session",
+    "install",
+    "measure_stage_costs",
+    "resolve_config",
+    "search_space",
+    "shape_bucket",
+    "use_table",
+]

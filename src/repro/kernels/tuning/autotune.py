@@ -1,0 +1,304 @@
+"""Deterministic timed sweep over a kernel family's schedule space.
+
+``autotune(family, ...)`` times every :func:`search_space` config on
+synthetic inputs of the requested shape and returns the fastest one
+whose outputs are **bit-identical** to the fallback config's — a config
+that changed any output bit is discarded (no such config should exist;
+the check is the subsystem enforcing its own contract rather than
+trusting it).  Determinism: fixed input seed, fixed iteration count,
+min-of-iters timing, ties broken by position in the search space (the
+fallback sits first, so "no measurable win" keeps the status quo).
+
+``autotune_session`` is what ``Database.build(tune=...)`` calls: one
+sweep per family at the session's (block, n) shape, plus
+``measure_stage_costs`` — per-candidate wall-clock of every cascade
+stage in O(n)-sweep units, the measured twin of the planner's analytic
+``STAGE_UNIT_COST`` table.
+
+Everything here imports the kernel ops lazily: the op wrappers import
+``tuning.table`` at module load, so a top-level import back into the
+ops would be circular.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.kernels.tuning.space import KernelConfig, search_space, shape_bucket
+from repro.kernels.tuning.table import TuneTable
+
+#: families ``autotune_session`` sweeps by default — every Pallas op
+#: wrapper family plus the host-side survivor compaction.
+SESSION_FAMILIES = (
+    "envelope",
+    "lb_kim",
+    "lb_keogh",
+    "lb_improved",
+    "lb_fused",
+    "dtw",
+    "pipeline",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepEntry:
+    """One timed config: seconds is the min over iters; ``identical``
+    is the bit-identity verdict against the fallback config."""
+
+    config: KernelConfig
+    seconds: float
+    identical: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    family: str
+    bucket: str
+    best: KernelConfig
+    entries: tuple[SweepEntry, ...]
+
+    def explain(self) -> str:
+        lines = [f"autotune {self.family} @ {self.bucket}:"]
+        for e in self.entries:
+            mark = "->" if e.config == self.best else "  "
+            flag = "" if e.identical else "  DISCARDED (not bit-identical)"
+            lines.append(
+                f"{mark} {e.config.to_dict()}  {e.seconds * 1e6:9.1f} us{flag}"
+            )
+        return "\n".join(lines)
+
+
+def _time(fn, iters: int) -> float:
+    import jax
+
+    jax.block_until_ready(fn())  # warmup: compile outside the timing
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _as_arrays(out) -> tuple[np.ndarray, ...]:
+    if not isinstance(out, tuple):
+        out = (out,)
+    return tuple(np.asarray(o) for o in out)
+
+
+def _family_runner(family, b, n, w, p, nq, seed):
+    """(config -> comparable outputs) closure for one family's sweep.
+
+    Inputs are fixed up front (one seed, one shape), so every config
+    sees identical bytes; outputs are the arrays the bit-identity check
+    compares.  Kernel families clamp ``p`` to the Pallas fast path
+    {1, 2}; the schedule choice is independent of the norm order.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.envelope import envelope_batch
+
+    rng = np.random.default_rng(seed)
+    kp = p if p in (1, 2) else 1
+    cands = jnp.asarray(rng.normal(size=(b, n)).astype(np.float32).cumsum(axis=1))
+    qs = jnp.asarray(rng.normal(size=(nq, n)).astype(np.float32).cumsum(axis=1))
+    u, l = envelope_batch(qs, w)
+
+    if family == "envelope":
+        from repro.kernels.envelope.ops import envelope_op
+
+        return lambda c: _as_arrays(envelope_op(cands, w, tile_b=c.tile_b))
+    if family == "lb_kim":
+        from repro.kernels.lb_kim.ops import lb_kim_qbatch_op
+
+        return lambda c: _as_arrays(lb_kim_qbatch_op(cands, qs, p=kp, tile_b=c.tile_b))
+    if family == "lb_keogh":
+        from repro.kernels.lb_keogh.ops import lb_keogh_qbatch_op
+
+        return lambda c: _as_arrays(lb_keogh_qbatch_op(cands, u, l, kp, tile_b=c.tile_b))
+    if family == "lb_improved":
+        from repro.kernels.lb_improved.ops import lb_improved_qbatch_op
+
+        return lambda c: _as_arrays(
+            lb_improved_qbatch_op(cands, qs, u, l, w, kp, tile_b=c.tile_b)
+        )
+    if family == "lb_fused":
+        from repro.core.lb import lb_keogh_powered_qbatch
+        from repro.kernels.lb_fused.ops import lb_fused_qbatch_op
+
+        lb1 = np.asarray(lb_keogh_powered_qbatch(cands, u, l, kp))
+        # a mid-quantile bound keeps a realistic mix of lanes alive into
+        # pass 2, so the sweep times both passes (and the tile skip)
+        bounds = jnp.asarray(np.quantile(lb1, 0.5, axis=1).astype(np.float32))
+        return lambda c: _as_arrays(
+            lb_fused_qbatch_op(
+                cands, qs, u, l, w, bounds, kp,
+                tile_b=c.tile_b, depth=c.depth, grid=c.grid,
+            )
+        )
+    if family == "dtw":
+        from repro.core.dtw import dtw_qbatch
+        from repro.kernels.dtw.ops import dtw_op
+
+        q0 = qs[0]
+        true = np.asarray(dtw_qbatch(q0[None], cands, w, kp, powered=True))[0]
+        # bounds straddling the true distances: some lanes abandon early,
+        # some run the full DP — the mix the cascade actually dispatches
+        fracs = np.resize([0.3, 0.8, 1.2], b)
+        bounds = jnp.asarray((true * fracs).astype(np.float32))
+        return lambda c: _as_arrays(
+            dtw_op(q0, cands, w, kp, powered=True, bounds=bounds, depth=c.depth)
+        )
+    if family == "pipeline":
+        from repro.core.pipeline import run_block_stages
+
+        lbq = np.asarray(
+            _dense_keogh(cands, u, l, p)
+        )
+        bound = jnp.asarray(np.quantile(lbq, 0.4, axis=1).astype(np.float32))
+        mask0 = jnp.ones((nq, b), bool)
+
+        def run(c):
+            st = run_block_stages(
+                qs, u, l, w, p, "lb_improved", cands, bound, mask0,
+                lane_chunk=c.lane_chunk,
+            )
+            # dp_lane_work is chunk-padded by definition, so it is the
+            # one field that legitimately varies with lane_chunk
+            return _as_arrays((st.d, *st.masks, st.dp_lane_useful))
+
+        return run
+    raise ValueError(f"no autotune runner for family {family!r}")
+
+
+def _dense_keogh(cands, u, l, p):
+    from repro.core import lb as lb_mod
+
+    return lb_mod.lb_keogh_powered_qbatch(cands, u, l, p)
+
+
+def autotune(
+    family: str,
+    *,
+    b: int = 64,
+    n: int = 128,
+    w: int | None = None,
+    p=1,
+    nq: int = 4,
+    iters: int = 3,
+    seed: int = 0,
+    backend: str | None = None,
+) -> SweepResult:
+    """Sweep one family's schedule space at shape ``(b, n)``; returns
+    the fastest bit-identical config (see module docstring)."""
+    w = n // 10 if w is None else int(w)
+    runner = _family_runner(family, b, n, max(w, 1), p, nq, seed)
+    space = search_space(family)
+    reference = runner(space[0])
+    entries = []
+    for cfg in space:
+        out = runner(cfg)
+        identical = len(out) == len(reference) and all(
+            np.array_equal(a, r) for a, r in zip(out, reference)
+        )
+        secs = _time(lambda cfg=cfg: runner(cfg), iters) if identical else float("inf")
+        entries.append(SweepEntry(cfg, secs, identical))
+    best = min(
+        range(len(entries)), key=lambda i: (entries[i].seconds, i)
+    )
+    del backend  # the caller records the backend; timing is local
+    return SweepResult(
+        family, shape_bucket(b, n), entries[best].config, tuple(entries)
+    )
+
+
+def measure_stage_costs(
+    *,
+    b: int = 64,
+    n: int = 128,
+    w: int | None = None,
+    p=1,
+    nq: int = 4,
+    iters: int = 3,
+    seed: int = 0,
+) -> dict[str, float]:
+    """Per-candidate cost of every cascade stage, in O(n)-sweep units.
+
+    The unit is the measured wall-clock of one elementwise |c - q|
+    reduction sweep over a candidate row — the same yardstick the
+    planner's analytic ``STAGE_UNIT_COST`` is written in — so the
+    returned dict drops straight into ``choose_cascade(unit_costs=...)``.
+    Includes ``"full"`` (the banded DP) so the DP term is measured too.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import lb as lb_mod
+    from repro.core.dtw import dtw_qbatch
+    from repro.core.envelope import envelope_batch
+
+    w = n // 10 if w is None else int(w)
+    w = max(w, 1)
+    rng = np.random.default_rng(seed)
+    cands = jnp.asarray(rng.normal(size=(b, n)).astype(np.float32).cumsum(axis=1))
+    qs = jnp.asarray(rng.normal(size=(nq, n)).astype(np.float32).cumsum(axis=1))
+    u, l = envelope_batch(qs, w)
+
+    sweep = jax.jit(lambda c, q: jnp.sum(jnp.abs(c - q[None, :]), axis=1))
+    t_sweep = _time(lambda: sweep(cands, qs[0]), iters) / b  # per row
+
+    stages = {
+        "lb_kim": lambda: lb_mod.lb_kim_powered_qbatch(cands, qs, p),
+        "lb_keogh": lambda: lb_mod.lb_keogh_powered_qbatch(cands, u, l, p),
+        "lb_improved": lambda: lb_mod.lb_improved_powered_qbatch(
+            cands, qs, u, l, w, p
+        ),
+        "lb_webb": lambda: lb_mod.lb_webb_powered_qbatch(cands, qs, u, l, w, p),
+        "full": lambda: dtw_qbatch(qs, cands, w, p, powered=True),
+    }
+    costs = {}
+    for name, fn in stages.items():
+        t = _time(fn, iters) / (nq * b)  # per (query, candidate) pair
+        costs[name] = max(t / max(t_sweep, 1e-12), 1e-3)
+    return costs
+
+
+def autotune_session(
+    *,
+    n: int,
+    b: int,
+    w: int,
+    p,
+    families=SESSION_FAMILIES,
+    nq: int = 4,
+    iters: int = 3,
+    seed: int = 0,
+    backend: str | None = None,
+    measure_costs: bool = True,
+    verbose: bool = False,
+) -> TuneTable:
+    """One session's tune sweep: every family at the session's (block,
+    series-length) shape, entries recorded under that shape bucket (and
+    as the backend's wildcard, so nearby shapes resolve to them too),
+    plus the measured planner stage costs."""
+    from repro.kernels.tuning.table import _default_backend
+
+    backend = _default_backend() if backend is None else backend
+    table = TuneTable()
+    for family in families:
+        res = autotune(
+            family, b=b, n=n, w=w, p=p, nq=nq, iters=iters, seed=seed,
+            backend=backend,
+        )
+        if verbose:
+            print(res.explain())
+        table.set(family, res.best, bucket=res.bucket, backend=backend)
+        table.set(family, res.best, bucket="*", backend=backend)
+    if measure_costs:
+        table.stage_costs = measure_stage_costs(
+            b=min(b, 64), n=n, w=w, p=p, nq=nq, iters=iters, seed=seed
+        )
+    return table

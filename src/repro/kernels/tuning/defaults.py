@@ -1,0 +1,35 @@
+"""Checked-in per-backend tuned defaults (DESIGN.md §3.11).
+
+These are the configs a cold build resolves before any session-level
+``autotune`` has run, so the first query of a fresh checkout is not
+paying for a timed sweep.  They were picked by running
+``python -m repro.launch.tune`` on each backend at the FAST bench
+shapes and committing the winners; re-run the CLI and update this dict
+when the kernels change shape.
+
+Keys are ``(family, backend, bucket)`` with ``"*"`` wildcards (see
+``TuneTable.resolve``).  Only *schedule* knobs live here — any entry
+is bit-identical to the fallback by the subsystem's contract — so a
+stale default is a performance bug, never a correctness one.
+"""
+
+from __future__ import annotations
+
+from repro.kernels.tuning.space import KernelConfig
+
+#: (family, backend, bucket) -> KernelConfig.  The double-buffered
+#: candidate-major schedule ("bq", depth 2) wins for lb_fused wherever
+#: Q > 1: one HBM read per candidate tile *total* instead of one per
+#: query lane, with the next tile's copy overlapping compute.  The DP
+#: kernel likewise prefetches the next lane's padded row.  The small
+#: envelope/LB tiles keep the PR 4 schedule until a sweep says
+#: otherwise.
+DEFAULT_ENTRIES: dict[tuple[str, str, str], KernelConfig] = {
+    ("lb_fused", "*", "*"): KernelConfig(tile_b=8, depth=2, grid="bq"),
+    ("dtw", "*", "*"): KernelConfig(depth=2),
+    ("envelope", "*", "*"): KernelConfig(tile_b=8),
+    ("lb_kim", "*", "*"): KernelConfig(tile_b=8),
+    ("lb_keogh", "*", "*"): KernelConfig(tile_b=8),
+    ("lb_improved", "*", "*"): KernelConfig(tile_b=8),
+    ("pipeline", "*", "*"): KernelConfig(lane_chunk=32),
+}

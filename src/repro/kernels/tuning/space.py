@@ -1,0 +1,112 @@
+"""Kernel config search spaces and shape buckets (DESIGN.md §3.11).
+
+A :class:`KernelConfig` is one point in a kernel family's *schedule*
+space: how many candidate lanes ride one VMEM tile (``tile_b``), which
+grid axis iterates fastest (``grid``: ``"qb"`` walks candidate tiles
+innermost, re-streaming each tile once per query lane; ``"bq"`` walks
+query lanes innermost, so a candidate tile is read from HBM once and
+reused across the whole query batch), how deep the HBM→VMEM staging
+pipeline is (``depth``: 1 = the single-buffered BlockSpec schedule,
+2 = two-slot double buffering — the next tile's copy overlaps the
+current tile's compute), and how many compacted survivor lanes one
+pipeline gather processes (``lane_chunk``, consumed by
+``repro.core.pipeline``, not by a Pallas kernel).
+
+Every field is a *schedule* knob: no config changes a single output
+bit.  That is the subsystem's contract — ``autotune`` additionally
+enforces it by discarding any swept config whose output is not
+bit-identical to the fallback config's.
+
+Shape buckets keep the tune table small: shapes are bucketed by the
+next power of two of the candidate-batch and series-length axes, so
+one measured entry serves every shape that tiles the same way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+#: kernel families a TuneTable may hold entries for.  "pipeline" is the
+#: host-side survivor compaction in ``repro.core.pipeline`` (its
+#: ``lane_chunk`` is the tuned knob); the rest are the Pallas packages.
+FAMILIES = (
+    "envelope",
+    "lb_kim",
+    "lb_keogh",
+    "lb_improved",
+    "lb_fused",
+    "dtw",
+    "pipeline",
+)
+
+#: grid layouts for the query-major kernels: which axis runs innermost.
+GRID_LAYOUTS = ("qb", "bq")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """One schedule point.  Fields a family does not use are ignored by
+    its op wrapper (e.g. ``depth`` for the envelope kernel)."""
+
+    tile_b: int = 8  # candidate lanes per VMEM tile
+    lane_chunk: int = 32  # compacted lanes per pipeline gather
+    depth: int = 1  # HBM→VMEM staging slots (1 = BlockSpec, 2 = double-buffer)
+    grid: str = "qb"  # "qb": tiles innermost; "bq": queries innermost
+
+    def __post_init__(self):
+        if self.tile_b < 1 or self.lane_chunk < 1:
+            raise ValueError(f"non-positive tile_b/lane_chunk in {self}")
+        if self.depth not in (1, 2):
+            raise ValueError(f"depth must be 1 or 2, got {self.depth}")
+        if self.grid not in GRID_LAYOUTS:
+            raise ValueError(f"grid must be one of {GRID_LAYOUTS}, got {self.grid!r}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "KernelConfig":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls) if f.name in d})
+
+
+#: the pre-tuning literals, frozen as the ultimate fallback: every op
+#: wrapper resolves to exactly this when no table entry matches, so a
+#: cold checkout without a tune table runs the PR 4 schedule verbatim.
+FALLBACK = KernelConfig(tile_b=8, lane_chunk=32, depth=1, grid="qb")
+
+
+def _pow2_at_least(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def shape_bucket(b: int | None = None, n: int | None = None) -> str:
+    """Bucket key for a (candidate-batch, series-length) shape: next
+    powers of two, so e.g. (200, 100) and (256, 128) share an entry."""
+    bb = "*" if b is None else str(_pow2_at_least(max(int(b), 1)))
+    nn = "*" if n is None else str(_pow2_at_least(max(int(n), 1)))
+    return f"b{bb}n{nn}"
+
+
+def search_space(family: str) -> tuple[KernelConfig, ...]:
+    """The configs ``autotune`` sweeps for one family, fallback first
+    (the fallback doubles as the bit-identity reference)."""
+    if family not in FAMILIES:
+        raise ValueError(f"unknown kernel family {family!r}; known: {FAMILIES}")
+    if family == "pipeline":
+        return tuple(
+            KernelConfig(lane_chunk=c) for c in (32, 8, 16, 64, 128)
+        )
+    if family == "lb_fused":
+        return tuple(
+            KernelConfig(tile_b=t, depth=d, grid=g)
+            for t in (8, 4, 16, 32)
+            for d in (1, 2)
+            for g in GRID_LAYOUTS
+        )
+    if family == "dtw":
+        # one candidate lane per grid step; depth is the only knob
+        return (KernelConfig(depth=1), KernelConfig(depth=2))
+    return tuple(KernelConfig(tile_b=t) for t in (8, 4, 16, 32))

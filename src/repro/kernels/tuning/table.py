@@ -1,0 +1,202 @@
+"""TuneTable: persisted kernel-config lookups + the process-active table.
+
+The table is a plain mapping ``(family, backend, bucket) -> KernelConfig``
+plus the measured per-stage unit costs the cascade planner consumes
+(``stage_costs``, in O(n)-sweep units — ``repro.api.planner`` overrides
+its analytic ``STAGE_UNIT_COST`` with these when present).
+
+Resolution (:func:`resolve_config`) is what every op wrapper calls when
+its ``tile_b``/``depth`` argument is left ``None``: most-specific entry
+wins — exact ``(family, backend, bucket)``, then backend-wildcard and
+bucket-wildcard combinations, then the frozen pre-tuning
+:data:`~repro.kernels.tuning.space.FALLBACK` literals.  The checked-in
+:mod:`~repro.kernels.tuning.defaults` seed the process-active table, so
+cold builds resolve sensible schedules without ever timing anything;
+``Database.build(tune=...)`` sweeps and installs sharper entries, and
+``Database.save``/``load`` round-trip them through versioned ``tune_*``
+bundle keys.
+
+Every entry is a *schedule*: resolution can change how fast an op runs,
+never what it returns (autotune discards non-bit-identical configs; the
+tier-1 parity sweep in ``tests/test_tuning.py`` pins it).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+
+from repro.kernels.tuning.defaults import DEFAULT_ENTRIES
+from repro.kernels.tuning.space import FALLBACK, FAMILIES, KernelConfig, shape_bucket
+
+#: version of the ``tune_*`` bundle-key payload (`TuneTable.to_arrays`)
+TUNE_FORMAT_VERSION = 1
+
+
+def _default_backend() -> str:
+    import jax
+
+    return jax.default_backend()
+
+
+@dataclasses.dataclass
+class TuneTable:
+    """Tuned schedule entries + measured stage costs, one session's worth."""
+
+    entries: dict[tuple[str, str, str], KernelConfig] = dataclasses.field(
+        default_factory=dict
+    )
+    #: measured per-candidate stage costs in O(n)-sweep units, keyed by
+    #: stage name ("lb_kim", ..., "full"); empty = planner stays analytic
+    stage_costs: dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def set(
+        self,
+        family: str,
+        config: KernelConfig,
+        *,
+        bucket: str = "*",
+        backend: str | None = None,
+    ) -> None:
+        if family not in FAMILIES:
+            raise ValueError(f"unknown kernel family {family!r}; known: {FAMILIES}")
+        backend = _default_backend() if backend is None else backend
+        self.entries[(family, backend, bucket)] = config
+
+    def resolve(
+        self,
+        family: str,
+        *,
+        b: int | None = None,
+        n: int | None = None,
+        backend: str | None = None,
+    ) -> KernelConfig:
+        """Most-specific entry for ``family`` at shape ``(b, n)``, falling
+        back to the pre-tuning literals when nothing matches."""
+        if family not in FAMILIES:
+            raise ValueError(f"unknown kernel family {family!r}; known: {FAMILIES}")
+        backend = _default_backend() if backend is None else backend
+        bucket = shape_bucket(b, n)
+        for key in (
+            (family, backend, bucket),
+            (family, backend, "*"),
+            (family, "*", bucket),
+            (family, "*", "*"),
+        ):
+            cfg = self.entries.get(key)
+            if cfg is not None:
+                return cfg
+        return FALLBACK
+
+    def merge(self, other: "TuneTable") -> "TuneTable":
+        """Overlay ``other``'s entries and costs on top of this table."""
+        self.entries.update(other.entries)
+        self.stage_costs.update(other.stage_costs)
+        return self
+
+    # ------------------------------------------------------- persistence
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "version": TUNE_FORMAT_VERSION,
+                "entries": [
+                    {
+                        "family": fam,
+                        "backend": backend,
+                        "bucket": bucket,
+                        "config": cfg.to_dict(),
+                    }
+                    for (fam, backend, bucket), cfg in sorted(self.entries.items())
+                ],
+                "stage_costs": dict(sorted(self.stage_costs.items())),
+            },
+            sort_keys=True,
+        )
+
+    @classmethod
+    def from_json(cls, payload: str) -> "TuneTable":
+        d = json.loads(payload)
+        version = int(d.get("version", -1))
+        if version != TUNE_FORMAT_VERSION:
+            raise ValueError(
+                f"tune table format v{version} unsupported "
+                f"(expected v{TUNE_FORMAT_VERSION})"
+            )
+        table = cls()
+        for e in d["entries"]:
+            table.entries[(e["family"], e["backend"], e["bucket"])] = (
+                KernelConfig.from_dict(e["config"])
+            )
+        table.stage_costs = {
+            str(k): float(v) for k, v in d.get("stage_costs", {}).items()
+        }
+        return table
+
+    def to_arrays(self) -> dict:
+        """Bundle serialization (``tune_*`` keys in ``Database.save``)."""
+        import numpy as np
+
+        return {
+            "version": np.int64(TUNE_FORMAT_VERSION),
+            "json": np.str_(self.to_json()),
+        }
+
+    @classmethod
+    def from_arrays(cls, arrays: dict) -> "TuneTable":
+        return cls.from_json(str(arrays["json"]))
+
+    @classmethod
+    def with_defaults(cls) -> "TuneTable":
+        """A fresh table seeded with the checked-in per-backend defaults."""
+        return cls(entries=dict(DEFAULT_ENTRIES))
+
+
+#: the process-active table every ``resolve_config`` consults; seeded
+#: with the checked-in defaults at import, sharpened by ``install``.
+_ACTIVE = TuneTable.with_defaults()
+
+
+def active_table() -> TuneTable:
+    return _ACTIVE
+
+
+def install(table: TuneTable, *, merge: bool = True) -> TuneTable:
+    """Make ``table``'s entries the process-active resolution source.
+
+    ``merge=True`` (the default — what ``Database.build``/``load`` use)
+    overlays the entries on the checked-in defaults, so families the
+    table does not cover keep resolving to the defaults.  Returns the
+    now-active table.
+    """
+    global _ACTIVE
+    if merge:
+        _ACTIVE = TuneTable.with_defaults().merge(table)
+    else:
+        _ACTIVE = table
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def use_table(table: TuneTable, *, merge: bool = False):
+    """Scoped ``install`` — the previous active table is restored on
+    exit (tests and the autotuner sweep configs through this)."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = TuneTable.with_defaults().merge(table) if merge else table
+    try:
+        yield _ACTIVE
+    finally:
+        _ACTIVE = prev
+
+
+def resolve_config(
+    family: str,
+    *,
+    b: int | None = None,
+    n: int | None = None,
+    backend: str | None = None,
+) -> KernelConfig:
+    """Resolve one kernel family's schedule from the active table."""
+    return _ACTIVE.resolve(family, b=b, n=n, backend=backend)

@@ -365,9 +365,9 @@ def test_legacy_bundle_calibrates_once_across_plans(
         calibrate_calls.append(1)
         return real_cal(*a, **kw)
 
-    def counting_choose(cal, *, k):
+    def counting_choose(cal, *, k, **kw):
         choose_calls.append(k)
-        return real_choose(cal, k=k)
+        return real_choose(cal, k=k, **kw)
 
     monkeypatch.setattr(api_db, "calibrate", counting_cal)
     monkeypatch.setattr(api_db, "choose_cascade", counting_choose)

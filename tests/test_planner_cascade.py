@@ -83,10 +83,11 @@ GOLDEN = {
         "cascade: lb_kim -> lb_keogh -> lb_improved -> full "
         "(method=kim_improved, calibrated at k=1)\n"
         "predicted cost/candidate: 3.75 O(n)-sweep units\n"
-        "  lb_kim       enter 100.00%  unit cost   1.0  ->   1.00\n"
-        "  lb_keogh     enter  12.50%  unit cost   3.0  ->   0.38\n"
-        "  lb_improved  enter  12.50%  unit cost   8.0  ->   1.00\n"
-        "  full         enter  12.50%  unit cost  11.0  ->   1.38\n"
+        "unit costs: analytic (no tune sweep measured)\n"
+        "  lb_kim       enter 100.00%  unit cost   1.0 [analytic]  ->   1.00\n"
+        "  lb_keogh     enter  12.50%  unit cost   3.0 [analytic]  ->   0.38\n"
+        "  lb_improved  enter  12.50%  unit cost   8.0 [analytic]  ->   1.00\n"
+        "  full         enter  12.50%  unit cost  11.0 [analytic]  ->   1.38\n"
         "rejected: kim_webb=3.88, lb_keogh=4.38, lb_improved=5.38, "
         "lb_webb=5.50, full=11.00",
     ),
@@ -95,7 +96,8 @@ GOLDEN = {
         "full",
         "cascade: full (method=full, calibrated at k=1)\n"
         "predicted cost/candidate: 11.00 O(n)-sweep units\n"
-        "  full         enter 100.00%  unit cost  11.0  ->  11.00\n"
+        "unit costs: analytic (no tune sweep measured)\n"
+        "  full         enter 100.00%  unit cost  11.0 [analytic]  ->  11.00\n"
         "rejected: lb_keogh=14.00, lb_improved=22.00, lb_webb=23.00, "
         "kim_improved=23.00, kim_webb=24.00",
     ),
@@ -104,8 +106,9 @@ GOLDEN = {
         "lb_keogh",
         "cascade: lb_keogh -> full (method=lb_keogh, calibrated at k=2)\n"
         "predicted cost/candidate: 10.33 O(n)-sweep units\n"
-        "  lb_keogh     enter 100.00%  unit cost   3.0  ->   3.00\n"
-        "  full         enter  66.67%  unit cost  11.0  ->   7.33\n"
+        "unit costs: analytic (no tune sweep measured)\n"
+        "  lb_keogh     enter 100.00%  unit cost   3.0 [analytic]  ->   3.00\n"
+        "  full         enter  66.67%  unit cost  11.0 [analytic]  ->   7.33\n"
         "rejected: full=11.00, lb_improved=15.67, lb_webb=16.33, "
         "kim_improved=16.67, kim_webb=17.33",
     ),

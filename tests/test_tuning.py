@@ -1,0 +1,362 @@
+"""Kernel autotuning subsystem tests (ISSUE 9, DESIGN.md §3.11).
+
+The subsystem's contract is that every tune-table entry is a *schedule*:
+resolution may change how fast an op runs, never a single output bit.
+These tests pin that contract — parity sweeps across
+tile_b x depth x grid x lane_chunk for every qbatch kernel (ragged
+final blocks, entry masks, abandoned DP lanes included), driver-level
+top-k parity under eccentric schedules, the TuneTable resolution order,
+bundle round-trip, and the legacy-bundle (no ``tune_*`` keys) fallback.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.api import Database, SearchConfig
+from repro.api.planner import calibrate, choose_cascade
+from repro.core.cascade import nn_search_host, nn_search_scan
+from repro.core.envelope import envelope_batch
+from repro.core import lb as lb_mod
+from repro.core.dtw import dtw_qbatch
+from repro.core.pipeline import run_block_stages
+from repro.data.synthetic import random_walks
+from repro.kernels.dtw.ops import dtw_op
+from repro.kernels.envelope.ops import envelope_op
+from repro.kernels.lb_fused.ops import lb_fused_qbatch_op
+from repro.kernels.lb_improved.ops import lb_improved_qbatch_op
+from repro.kernels.lb_keogh.ops import lb_keogh_qbatch_op
+from repro.kernels.lb_kim.ops import lb_kim_qbatch_op
+from repro.kernels.tuning import (
+    FALLBACK,
+    KernelConfig,
+    TUNE_FORMAT_VERSION,
+    TuneTable,
+    autotune,
+    resolve_config,
+    search_space,
+    shape_bucket,
+    use_table,
+)
+
+RNG = np.random.default_rng(17)
+B, N, NQ, W = 13, 33, 3, 3  # ragged: 13 % tile_b != 0 for every tile_b
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _fresh_compile_caches():
+    """Drop the jit caches accumulated by the rest of tier-1 before the
+    schedule sweeps start.  This module compiles every kernel under many
+    static configs on top of ~600 prior tests' executables; on a
+    single-core container that pushes the process over the mmap budget
+    and XLA's compiler segfaults.  Clearing first keeps the module
+    hermetic and the whole suite inside the limit."""
+    import jax
+
+    jax.clear_caches()
+
+
+@pytest.fixture(scope="module")
+def problem():
+    cands = jnp.asarray(
+        RNG.normal(size=(B, N)).astype(np.float32).cumsum(axis=1)
+    )
+    qs = jnp.asarray(
+        RNG.normal(size=(NQ, N)).astype(np.float32).cumsum(axis=1)
+    )
+    u, l = envelope_batch(qs, W)
+    return cands, qs, u, l
+
+
+def same_arrays(got, want):
+    if not isinstance(got, tuple):
+        got, want = (got,), (want,)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+# ----------------------------------------------------------- config space
+
+
+def test_kernel_config_validation():
+    with pytest.raises(ValueError):
+        KernelConfig(tile_b=0)
+    with pytest.raises(ValueError):
+        KernelConfig(depth=3)
+    with pytest.raises(ValueError):
+        KernelConfig(grid="xy")
+    cfg = KernelConfig(tile_b=4, depth=2, grid="bq")
+    assert KernelConfig.from_dict(cfg.to_dict()) == cfg
+
+
+def test_search_space_fallback_first():
+    for family in ("envelope", "lb_fused", "dtw", "pipeline"):
+        space = search_space(family)
+        assert len(space) == len(set(space))
+        first = space[0]
+        # the first entry is the bit-identity reference: the fallback
+        # values on every knob the family sweeps
+        assert first.tile_b == FALLBACK.tile_b
+        assert first.lane_chunk == FALLBACK.lane_chunk
+        assert first.depth == FALLBACK.depth
+        assert first.grid == FALLBACK.grid
+    with pytest.raises(ValueError):
+        search_space("nope")
+
+
+def test_shape_bucket():
+    assert shape_bucket(200, 100) == "b256n128"
+    assert shape_bucket(256, 128) == "b256n128"
+    assert shape_bucket(None, 128) == "b*n128"
+    assert shape_bucket() == "b*n*"
+
+
+def test_resolution_order():
+    t = TuneTable()
+    t.set("lb_fused", KernelConfig(tile_b=32), backend="*", bucket="*")
+    t.set("lb_fused", KernelConfig(tile_b=16), backend="cpu", bucket="*")
+    t.set("lb_fused", KernelConfig(tile_b=4), backend="cpu", bucket="b64n64")
+    assert t.resolve("lb_fused", b=60, n=60, backend="cpu").tile_b == 4
+    assert t.resolve("lb_fused", b=999, n=60, backend="cpu").tile_b == 16
+    assert t.resolve("lb_fused", b=60, n=60, backend="tpu").tile_b == 32
+    # nothing matches -> frozen fallback
+    assert t.resolve("dtw", b=8, n=8, backend="cpu") == FALLBACK
+    with pytest.raises(ValueError):
+        t.resolve("nope")
+
+
+def test_use_table_restores_active():
+    before = resolve_config("lb_fused", b=8, n=8)
+    t = TuneTable()
+    t.set("lb_fused", KernelConfig(tile_b=16, depth=1), backend="*")
+    with use_table(t):
+        assert resolve_config("lb_fused", b=8, n=8).tile_b == 16
+    assert resolve_config("lb_fused", b=8, n=8) == before
+
+
+# --------------------------------------------------- kernel parity sweeps
+
+
+@pytest.mark.parametrize("p", [1, 2])
+def test_lb_fused_parity_across_schedules(problem, p):
+    cands, qs, u, l = problem
+    lb1 = np.asarray(lb_mod.lb_keogh_powered_qbatch(cands, u, l, p))
+    # mixed pruning: one lane's bound kills everything (tile-skip path),
+    # the others keep a realistic mix alive into pass 2
+    bounds = np.quantile(lb1, 0.5, axis=1).astype(np.float32)
+    bounds[0] = 0.0
+    bounds = jnp.asarray(bounds)
+    ref = lb_fused_qbatch_op(
+        cands, qs, u, l, W, bounds, p, tile_b=8, depth=1, grid="qb"
+    )
+    for tile_b in (4, 8):
+        for depth in (1, 2):
+            for grid in ("qb", "bq"):
+                got = lb_fused_qbatch_op(
+                    cands, qs, u, l, W, bounds, p,
+                    tile_b=tile_b, depth=depth, grid=grid,
+                )
+                same_arrays(got, ref)
+
+
+def test_lb_kim_entry_mask_parity(problem):
+    cands, qs, _, _ = problem
+    mask = jnp.asarray(RNG.random((NQ, B)) < 0.6)
+    for p in (1, 2):
+        ref = lb_kim_qbatch_op(cands, qs, mask, p, tile_b=8)
+        for tile_b in (4, 16):
+            same_arrays(lb_kim_qbatch_op(cands, qs, mask, p, tile_b=tile_b), ref)
+
+
+def test_lb_keogh_improved_envelope_tile_parity(problem):
+    cands, qs, u, l = problem
+    for p in (1, 2):
+        ref_k = lb_keogh_qbatch_op(cands, u, l, p, tile_b=8)
+        ref_i = lb_improved_qbatch_op(cands, qs, u, l, W, p, tile_b=8)
+        for tile_b in (4, 16):
+            same_arrays(lb_keogh_qbatch_op(cands, u, l, p, tile_b=tile_b), ref_k)
+            same_arrays(
+                lb_improved_qbatch_op(cands, qs, u, l, W, p, tile_b=tile_b),
+                ref_i,
+            )
+    ref_e = envelope_op(cands, W, tile_b=8)
+    for tile_b in (4, 16):
+        same_arrays(envelope_op(cands, W, tile_b=tile_b), ref_e)
+
+
+@pytest.mark.parametrize("p", [1, 2])
+def test_dtw_depth_parity_with_abandoned_lanes(problem, p):
+    cands, qs, _, _ = problem
+    q = qs[0]
+    true = np.asarray(dtw_qbatch(q[None], cands, W, p, powered=True))[0]
+    # bounds straddle the true distances: some lanes abandon mid-DP,
+    # some run to completion — both paths must match across depths
+    fracs = np.resize([0.3, 0.8, 1.2], B).astype(np.float32)
+    bounds = jnp.asarray(true * fracs)
+    for bd in (None, bounds):
+        ref = dtw_op(q, cands, W, p, powered=True, bounds=bd, depth=1)
+        got = dtw_op(q, cands, W, p, powered=True, bounds=bd, depth=2)
+        same_arrays(got, ref)
+
+
+@pytest.mark.parametrize("p", [1, 2, math.inf])
+def test_pipeline_lane_chunk_parity(problem, p):
+    cands, qs, u, l = problem
+    lbq = np.asarray(lb_mod.lb_keogh_powered_qbatch(cands, u, l, p))
+    bound = jnp.asarray(np.quantile(lbq, 0.4, axis=1).astype(np.float32))
+    mask0 = jnp.ones((NQ, B), bool)
+    ref = run_block_stages(
+        qs, u, l, W, p, "lb_improved", cands, bound, mask0, lane_chunk=32
+    )
+    for lc in (8, 16, 64):
+        st = run_block_stages(
+            qs, u, l, W, p, "lb_improved", cands, bound, mask0, lane_chunk=lc
+        )
+        same_arrays(st.d, ref.d)
+        for m, rm in zip(st.masks, ref.masks):
+            same_arrays(m, rm)
+        # dp_lane_useful counts true survivors — chunk-independent;
+        # dp_lane_work is chunk-padded by definition and may differ
+        assert int(st.dp_lane_useful) == int(ref.dp_lane_useful)
+
+
+# ------------------------------------------------- driver-level parity
+
+ECCENTRIC = TuneTable(
+    entries={
+        ("lb_fused", "*", "*"): KernelConfig(tile_b=4, depth=2, grid="bq"),
+        ("dtw", "*", "*"): KernelConfig(depth=2),
+        ("pipeline", "*", "*"): KernelConfig(lane_chunk=8),
+        ("envelope", "*", "*"): KernelConfig(tile_b=16),
+        ("lb_kim", "*", "*"): KernelConfig(tile_b=16),
+        ("lb_keogh", "*", "*"): KernelConfig(tile_b=4),
+        ("lb_improved", "*", "*"): KernelConfig(tile_b=16),
+    }
+)
+
+
+@pytest.mark.parametrize("p", [1, 2, math.inf])
+def test_driver_topk_parity_across_schedules(p):
+    """Top-k values/indices/stage counters are schedule-independent for
+    every driver the tune table can influence."""
+    data = random_walks(np.random.default_rng(5), 48, 40)
+    qs = data[:3] + RNG.normal(scale=0.3, size=(3, 40)).astype(np.float32)
+    want_scan = nn_search_scan(qs, data, w=4, p=p, k=3, block=16)
+    want_host = nn_search_host(qs, data, w=4, p=p, k=3, block=16)
+    with use_table(ECCENTRIC):
+        got_scan = nn_search_scan(qs, data, w=4, p=p, k=3, block=16)
+        got_host = nn_search_host(qs, data, w=4, p=p, k=3, block=16)
+    for got, want in ((got_scan, want_scan), (got_host, want_host)):
+        np.testing.assert_array_equal(got.distances, want.distances)
+        np.testing.assert_array_equal(got.indices, want.indices)
+        assert got.stats == want.stats
+
+
+def test_indexed_and_facade_parity_across_schedules():
+    data = random_walks(np.random.default_rng(6), 40, 32)
+    qs = data[:2] + RNG.normal(scale=0.3, size=(2, 32)).astype(np.float32)
+    db = Database.build(data, SearchConfig(w=3, p=2, k=2), index=True)
+    want = db.search(qs, driver="indexed")
+    with use_table(ECCENTRIC):
+        got = db.search(qs, driver="indexed")
+    np.testing.assert_array_equal(got.distances, want.distances)
+    np.testing.assert_array_equal(got.indices, want.indices)
+    assert got.stats == want.stats
+
+
+# ----------------------------------------------------------- persistence
+
+
+def test_tunetable_json_roundtrip():
+    t = TuneTable()
+    t.set("lb_fused", KernelConfig(tile_b=16, depth=2, grid="bq"),
+          backend="cpu", bucket="b64n128")
+    t.set("pipeline", KernelConfig(lane_chunk=64), backend="*")
+    t.stage_costs = {"lb_keogh": 2.5, "full": 11.0}
+    back = TuneTable.from_json(t.to_json())
+    assert back.entries == t.entries
+    assert back.stage_costs == t.stage_costs
+    # npz-array form (what Database.save embeds as tune_* keys)
+    arrs = t.to_arrays()
+    assert int(arrs["version"]) == TUNE_FORMAT_VERSION
+    assert TuneTable.from_arrays(arrs).entries == t.entries
+
+
+def test_tunetable_rejects_unknown_version():
+    t = TuneTable()
+    bad = t.to_json().replace(
+        f'"version": {TUNE_FORMAT_VERSION}', '"version": 99'
+    )
+    with pytest.raises(ValueError, match="unsupported"):
+        TuneTable.from_json(bad)
+
+
+def test_tuned_bundle_roundtrip(tmp_path):
+    data = random_walks(np.random.default_rng(8), 32, 24)
+    db = Database.build(
+        data,
+        SearchConfig(w=2, p=1, k=2),
+        tune=dict(families=("pipeline",), iters=1, b=16, nq=2,
+                  measure_costs=False),
+    )
+    assert db.tune_table is not None
+    path = db.save(str(tmp_path / "tuned"))
+    with np.load(path) as z:
+        assert "tune_json" in z.files and "tune_version" in z.files
+    db2 = Database.load(path)
+    assert db2.tune_table is not None
+    assert db2.tune_table.to_json() == db.tune_table.to_json()
+    r1, r2 = db.search(data[:2]), db2.search(data[:2])
+    np.testing.assert_array_equal(r1.distances, r2.distances)
+    np.testing.assert_array_equal(r1.indices, r2.indices)
+
+
+def test_legacy_bundle_without_tune_keys(tmp_path):
+    """An untuned bundle has no tune_* keys and loads with table=None —
+    resolution falls back to the checked-in defaults."""
+    data = random_walks(np.random.default_rng(9), 24, 20)
+    db = Database.build(data, SearchConfig(w=2, p=2, k=1))
+    path = db.save(str(tmp_path / "legacy"))
+    with np.load(path) as z:
+        assert not any(k.startswith("tune_") for k in z.files)
+    db2 = Database.load(path)
+    assert db2.tune_table is None
+    r1, r2 = db.search(data[:2]), db2.search(data[:2])
+    np.testing.assert_array_equal(r1.distances, r2.distances)
+    np.testing.assert_array_equal(r1.indices, r2.indices)
+
+
+# -------------------------------------------------------------- autotune
+
+
+def test_autotune_sweep_is_bit_identical_and_in_space():
+    res = autotune("lb_keogh", b=8, n=16, w=2, p=1, nq=2, iters=1)
+    assert res.best in search_space("lb_keogh")
+    assert all(e.identical for e in res.entries)
+    assert res.bucket == shape_bucket(8, 16)
+    assert "autotune lb_keogh" in res.explain()
+
+
+# ------------------------------------------------------ planner override
+
+
+def test_choose_cascade_measured_costs_override():
+    data = random_walks(np.random.default_rng(11), 40, 32)
+    cal = calibrate(data, 3, 1, sample_q=2, sample_c=16)
+    analytic = choose_cascade(cal, k=1)
+    assert set(analytic.cost_source) == {"analytic"}
+    assert "analytic (no tune sweep measured)" in analytic.explain()
+    # make lb_webb measured-free and lb_keogh measured-cheap: the plan
+    # must use the measured numbers and say so
+    measured = choose_cascade(
+        cal, k=1, unit_costs={"lb_keogh": 0.5, "full": 7.0}
+    )
+    srcs = dict(zip(measured.stages, measured.cost_source))
+    costs = dict(zip(measured.stages, measured.stage_cost))
+    assert srcs["full"] == "measured" and costs["full"] == 7.0
+    if "lb_keogh" in srcs:
+        assert srcs["lb_keogh"] == "measured" and costs["lb_keogh"] == 0.5
+    assert "measured by the kernel tune sweep" in measured.explain()

@@ -8,21 +8,22 @@ checked-in baseline in ``benchmarks/baselines/`` and prints per-row
 deltas, flagging rows slower than the threshold with WARN.
 
 The *full* sweep stays **warn-only** (exit 0): timing noise across CI
-machines makes a hard gate at every row flaky.  One pinned regime is
+machines makes a hard gate at every row flaky.  Pinned regimes are
 gated hard, though — CI's bench-smoke runs a second, ``--strict`` pass
-restricted with ``--only`` to the ``batched/retrieval/`` rows (the
-paper's core query-major cascade, the least dispatch-noise-sensitive
-FAST rows): a >15% regression there fails the build.  When a slowdown
-is intentional (bigger default shapes, an extra stage), re-pin the
-baseline with ``--update`` and commit the refreshed
-``benchmarks/baselines/BENCH_*.json``.
+restricted with ``--only`` to the ``batched/retrieval/`` and
+``stream/`` rows (the paper's two serving regimes: the query-major
+cascade and the hop-strided subsequence matcher — the least
+dispatch-noise-sensitive FAST rows): a >15% regression there fails the
+build.  When a slowdown is intentional (bigger default shapes, an
+extra stage), re-pin the baseline with ``--update`` and commit the
+refreshed ``benchmarks/baselines/BENCH_*.json``.
 
 Usage:
   python tools/bench_compare.py bench-artifacts          # compare, warn
   python tools/bench_compare.py bench-artifacts --update # re-baseline
   python tools/bench_compare.py bench-artifacts --strict # exit 1 on WARN
   python tools/bench_compare.py bench-artifacts \
-      --only batched/retrieval/ --strict                 # the CI gate
+      --only batched/retrieval/,stream/ --strict         # the CI gate
 
 Rows are matched by (module, row name); ratio-style rows (us_per_call
 == 0, e.g. speedup summaries) are compared by presence only.  Rows or
@@ -55,13 +56,15 @@ def compare_dir(
 ) -> tuple[int, int]:
     """Print the diff table; returns (rows_compared, rows_warned).
 
-    ``only`` restricts the comparison to rows whose name starts with the
-    given prefix — this is what pins the CI gate to one stable regime.
+    ``only`` restricts the comparison to rows whose name starts with any
+    of the given comma-separated prefixes — this is what pins the CI
+    gate to the stable regimes.
     """
     fresh_files = sorted(glob.glob(os.path.join(fresh_dir, "BENCH_*.json")))
     if not fresh_files:
         print(f"no BENCH_*.json artifacts under {fresh_dir!r} — nothing to compare")
         return 0, 0
+    prefixes = tuple(p for p in only.split(",") if p) if only else ()
     compared = warned = 0
     for path in fresh_files:
         name = os.path.basename(path)
@@ -70,9 +73,9 @@ def compare_dir(
             print(f"[NEW ] {name}: no baseline yet (run with --update to pin)")
             continue
         fresh, base = load_rows(path), load_rows(base_path)
-        if only:
-            fresh = {r: v for r, v in fresh.items() if r.startswith(only)}
-            base = {r: v for r, v in base.items() if r.startswith(only)}
+        if prefixes:
+            fresh = {r: v for r, v in fresh.items() if r.startswith(prefixes)}
+            base = {r: v for r, v in base.items() if r.startswith(prefixes)}
         for row, us in sorted(fresh.items()):
             if row not in base:
                 print(f"[NEW ] {name}:{row}")
@@ -117,8 +120,9 @@ def main() -> int:
     ap.add_argument("--strict", action="store_true",
                     help="exit non-zero when any row warned")
     ap.add_argument("--only", default="",
-                    help="compare only rows whose name starts with this "
-                    "prefix (pins the strict gate to one regime)")
+                    help="compare only rows whose name starts with any of "
+                    "these comma-separated prefixes (pins the strict gate "
+                    "to the stable regimes)")
     args = ap.parse_args()
 
     if args.update:
