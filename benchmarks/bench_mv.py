@@ -1,0 +1,91 @@
+"""Multivariate tier: pruning power and throughput per stage family.
+
+Dependent d-channel DTW multiplies every DP cell by d, so the cascade's
+economics shift with the channel count: the channel-summed LB passes
+stay O(n*d) streaming work while the DP grows the same factor — pruning
+is worth *more* per killed lane at d = 8 than at d = 1.  This module
+measures that trade on the retrieval regime (near-duplicate
+random-walk queries, the paper's strong-pruning case) for d in {3, 8}:
+
+* ``mv/retrieval/d{d}/{method}`` — per-query latency of the scan-driver
+  cascade under each stage family, with the before-DTW prune rate and
+  queries/sec in the derived column.  ``full`` is the no-pruning
+  baseline every family is judged against.
+* ``mv/retrieval/d{d}/speedup`` — best cascade vs ``full`` (ratio row,
+  presence-only in the baseline diff).
+
+Exactness is pinned by tests/test_mv.py, so every row serves identical
+answers; only cost differs.  FAST sizes default (REPRO_BENCH_FAST=0
+for paper-scale).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.api import Database, SearchConfig
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
+
+CHANNELS = (3, 8)
+METHODS = ("full", "lb_keogh", "lb_improved", "lb_webb", "tc_box")
+
+
+def _mv_walks(rng, n_rows, n, d):
+    return np.cumsum(
+        rng.normal(size=(n_rows, n, d)), axis=1, dtype=np.float64
+    ).astype(np.float32)
+
+
+def _time_search(sess, qs, method, reps):
+    sess.search(qs, method=method, driver="scan")  # warm this (Q, n) jit
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        res = sess.search(qs, method=method, driver="scan")
+    dt = time.perf_counter() - t0
+    return dt / (reps * qs.shape[0]), res
+
+
+def run(report):
+    rng = np.random.default_rng(23)
+    n_db = 256 if FAST else 1024
+    n = 96 if FAST else 128
+    n_q = 6 if FAST else 16
+    reps = 3 if FAST else 5
+    w = n // 10
+
+    for d in CHANNELS:
+        db = _mv_walks(rng, n_db, n, d)
+        qs = np.asarray(
+            db[rng.integers(0, n_db, n_q)]
+            + rng.normal(scale=0.05, size=(n_q, n, d)).astype(np.float32)
+        )
+        sess = Database.build(db, SearchConfig(w=w, p=2, block=64, k=1))
+
+        base = None
+        per_q = {}
+        for method in METHODS:
+            sec, res = _time_search(sess, qs, method, reps)
+            s = res.stats
+            prune = 1.0 - s.full_dtw / s.n_candidates
+            per_q[method] = sec
+            if method == "full":
+                base = sec
+            report(
+                f"mv/retrieval/d{d}/{method}",
+                1e6 * sec,
+                f"qps={1.0 / sec:,.0f} pruned_before_dtw={100 * prune:.1f}% "
+                f"full_dtw={s.full_dtw} of {s.n_candidates} lanes",
+            )
+        best = min(
+            (m for m in METHODS if m != "full"), key=per_q.__getitem__
+        )
+        report(
+            f"mv/retrieval/d{d}/speedup",
+            0.0,
+            f"best={best} {base / per_q[best]:.1f}x vs full "
+            f"({1e6 * per_q[best]:.0f} vs {1e6 * base:.0f} us/query)",
+        )

@@ -33,6 +33,7 @@ FULL_SUITE = (
     "bench_lb",
     "bench_classify",
     "bench_anytime",
+    "bench_mv",
     "perf_search",
     "roofline",
 )
@@ -51,6 +52,7 @@ FAST_SUITE = (
     "bench_lb",
     "bench_classify",
     "bench_anytime",
+    "bench_mv",
 )
 
 

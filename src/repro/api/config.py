@@ -68,9 +68,15 @@ class SearchConfig:
       driven cascade planner (``repro.api.planner.choose_cascade``);
       all pipelines return bit-identical results, only cost differs.
     * ``znorm``  — z-normalize database rows at build and queries per
-      call (per-window for streaming).
+      call (per-window for streaming).  Multivariate data is normalized
+      per (row, channel).
     * ``precision`` — dtype of the stored artifacts: ``"float32"``
       (default) or ``"float64"`` (requires JAX x64, checked at build).
+    * ``channels`` — number of data channels ``d``. 0 (default) infers
+      from the build data's shape: (N, n) or (N, n, 1) builds the
+      univariate tier, (N, n, d) the multivariate one (dependent DTW,
+      channel-summed bounds — DESIGN.md §3.12).  A value > 0 is a
+      contract: build rejects data whose channel count differs.
     """
 
     w: int = 0
@@ -80,6 +86,7 @@ class SearchConfig:
     method: Method = "lb_improved"
     znorm: bool = False
     precision: str = "float32"
+    channels: int = 0
 
     def __post_init__(self):
         object.__setattr__(self, "p", _normalize_p(self.p))
@@ -87,6 +94,12 @@ class SearchConfig:
         object.__setattr__(self, "k", int(self.k))
         object.__setattr__(self, "block", int(self.block))
         object.__setattr__(self, "znorm", bool(self.znorm))
+        object.__setattr__(self, "channels", int(self.channels))
+        if self.channels < 0:
+            raise ValueError(
+                f"channels={self.channels} is negative; use channels >= 1 "
+                f"for an explicit channel contract or 0 to infer from data"
+            )
         if self.w < 0:
             raise ValueError(
                 f"w={self.w} is negative; use w >= 1 for an explicit band "

@@ -51,10 +51,11 @@ from repro.core.cascade import (
     nn_search_indexed,
     nn_search_scan,
 )
-from repro.core.envelope import envelope_batch
 from repro.index.build import TriangleIndex, build_index
 from repro.index.store import index_arrays, index_from_arrays, npz_path
 from repro.kernels.tuning import TuneTable, autotune_session, install
+from repro.mv.envelope import envelope_batch_mv
+from repro.mv.layout import flatten_channels
 from repro.stream.state import STD_EPS
 
 BUNDLE_FORMAT_VERSION = 1
@@ -115,9 +116,14 @@ class Database:
         calibration: Calibration | None = None,
         anytime=None,
         tune_table: TuneTable | None = None,
+        d: int = 1,
     ):
         self.raw = raw  # as given (precision-cast), what save() persists
-        self.data = data  # znormed when config.znorm, else raw itself
+        # channel-major flattened (N, d*n) when d > 1, znormed per
+        # (row, channel) when config.znorm; for d = 1 the univariate
+        # rows exactly as before
+        self.data = data
+        self.d = int(d)  # channel count (DESIGN.md §3.12)
         self.config = config
         self.w = w  # resolved band half-width (config.w or n // 10)
         self.upper = upper  # (N, n) db-row envelopes at band w
@@ -204,24 +210,44 @@ class Database:
         config = config if config is not None else SearchConfig()
         _require_x64_for(config)
         raw = np.asarray(data, dtype=config.precision)
-        if raw.ndim != 2:
+        if raw.ndim == 3:
+            d = int(raw.shape[2])
+            if raw.shape[2] == 1:
+                raw = raw[:, :, 0]  # d = 1: the univariate tier verbatim
+        elif raw.ndim == 2:
+            d = 1
+        else:
             raise ValueError(
-                f"data must be a (N, n) array of equal-length series, got "
-                f"shape {raw.shape}"
+                f"data must be (N, n) equal-length series or (N, n, d) "
+                f"multivariate series, got shape {raw.shape}"
             )
-        n_db, n = raw.shape
+        if config.channels > 0 and config.channels != d:
+            raise ValueError(
+                f"config.channels={config.channels} but data has {d} "
+                f"channel(s) (shape {raw.shape}); pass matching data or "
+                f"channels=0 to infer"
+            )
+        n_db, n = raw.shape[0], raw.shape[1]
         if n < 2:
             raise ValueError(f"series length n={n} must be >= 2")
         w = config.resolve_w(n)
         config.validate_k(config.k, n_db)
 
-        rows = (
-            _znorm_rows(raw, dtype=config.precision) if config.znorm else raw
-        )
-        raw64 = np.asarray(raw, np.float64)
+        # channel-major flatten: (N, n, d) -> (N, d*n), d contiguous
+        # per-channel segments per row (DESIGN.md §3.12); d = 1 is the
+        # identity, so the univariate program is byte-identical
+        flat = flatten_channels(raw) if raw.ndim == 3 else raw
+        if config.znorm:
+            # per (row, channel): each channel segment is its own series
+            rows = _znorm_rows(
+                flat.reshape(n_db * d, n), dtype=config.precision
+            ).reshape(n_db, d * n)
+        else:
+            rows = flat
+        raw64 = np.asarray(flat, np.float64)
         row_sums = raw64.sum(axis=1)
         row_sumsq = (raw64 * raw64).sum(axis=1)
-        u, l = envelope_batch(jnp.asarray(rows), w)
+        u, l = envelope_batch_mv(jnp.asarray(rows), w, d)
         upper, lower = np.asarray(u), np.asarray(l)
 
         tri: TriangleIndex | None = None
@@ -234,10 +260,11 @@ class Database:
                 n_clusters=n_clusters,
                 strategy=strategy,
                 seed=seed,
+                d=d,
             )
         elif isinstance(index, TriangleIndex):
             tri = index
-            tri.validate(n_db, n, w, config.p)
+            tri.validate(n_db, n, w, config.p, d)
             tri.validate_data(rows)
         elif index is not False:
             raise TypeError(
@@ -246,6 +273,11 @@ class Database:
             )
         any_idx = None
         if anytime:
+            if d > 1:
+                raise ValueError(
+                    "anytime subsequence tier is univariate-only for now; "
+                    "build with anytime=False for multivariate data"
+                )
             from repro.anytime import build_anytime_index
 
             opts = dict(anytime) if isinstance(anytime, dict) else {}
@@ -271,7 +303,7 @@ class Database:
                 seed=opts.pop("seed", seed),
                 **opts,
             )
-        cal = calibrate(rows, w, config.p)
+        cal = calibrate(rows, w, config.p, d=d)
         return cls(
             raw=raw,
             data=rows,
@@ -285,6 +317,7 @@ class Database:
             calibration=cal,
             anytime=any_idx,
             tune_table=table,
+            d=d,
         )
 
     # ------------------------------------------------------- persistence
@@ -305,6 +338,10 @@ class Database:
             "row_sums": self.row_sums,
             "row_sumsq": self.row_sumsq,
         }
+        if self.d > 1:
+            # optional like cal_*: absent means univariate, so every
+            # pre-mv bundle loads unchanged (format version stays 1)
+            arrays["channels"] = np.int64(self.d)
         if self.index is not None:
             arrays.update(
                 {f"idx_{k}": v for k, v in index_arrays(self.index).items()}
@@ -352,11 +389,16 @@ class Database:
             config = SearchConfig.from_json(str(z["config_json"]))
             _require_x64_for(config)
             raw = np.asarray(z["data"], dtype=config.precision)
-            rows = (
-                _znorm_rows(raw, dtype=config.precision)
-                if config.znorm
-                else raw
-            )
+            d = int(z["channels"]) if "channels" in z else 1
+            flat = flatten_channels(raw) if raw.ndim == 3 else raw
+            if config.znorm:
+                n_db, total = flat.shape
+                rows = _znorm_rows(
+                    flat.reshape(n_db * d, total // d),
+                    dtype=config.precision,
+                ).reshape(n_db, total)
+            else:
+                rows = flat
             tri = None
             if "idx_meta" in z:
                 tri = index_from_arrays(
@@ -408,6 +450,7 @@ class Database:
                 calibration=cal,
                 anytime=any_idx,
                 tune_table=table,
+                d=d,
             )
 
     # -------------------------------------------------------- properties
@@ -418,7 +461,13 @@ class Database:
 
     @property
     def length(self) -> int:
-        return int(self.data.shape[1])
+        """Per-channel series length n (the flattened rows are d*n)."""
+        return int(self.data.shape[1]) // self.d
+
+    @property
+    def channels(self) -> int:
+        """Channel count d; 1 for univariate sessions."""
+        return self.d
 
     @property
     def p(self):
@@ -452,8 +501,9 @@ class Database:
         """Per-row mean and (eps-floored) std of the *raw* rows, derived
         O(1) from the cached powered norms — the scale statistics a
         caller needs to normalize external data against this database
-        without re-sweeping it."""
-        n = self.length
+        without re-sweeping it.  Multivariate rows pool all d*n scalars
+        (per-channel scale lives in the znormed artifacts, not here)."""
+        n = self.length * self.d
         mean = self.row_sums / n
         var = np.maximum(self.row_sumsq / n - mean * mean, 0.0)
         return mean, np.maximum(np.sqrt(var), eps)
@@ -462,8 +512,11 @@ class Database:
         return self.n_rows
 
     def __repr__(self) -> str:
+        shape = f"{self.n_rows} x {self.length}" + (
+            f" x {self.d}ch" if self.d > 1 else ""
+        )
         return (
-            f"Database({self.n_rows} x {self.length}, w={self.w}, "
+            f"Database({shape}, w={self.w}, "
             f"p={self.config.p}, method={self.config.method!r}, "
             f"index={'R=%d' % self.index.n_refs if self.index else 'none'}, "
             f"anytime={list(self.anytime.lengths) if self.anytime else 'none'}, "
@@ -504,8 +557,52 @@ class Database:
         identical bytes, which is what makes answer-cache hits on
         near-duplicate traffic exact rather than approximate.
         ``length`` overrides the expected query length for sessions with
-        an anytime subsequence tier (default: the whole-row length)."""
+        an anytime subsequence tier (default: the whole-row length).
+
+        On a multivariate session (``channels > 1``) queries are one
+        (n, d) series or a (Q, n, d) batch; a trailing axis of size 1
+        is likewise accepted on univariate sessions.  The returned
+        array is channel-major flattened, matching the stored rows."""
         qs = np.asarray(queries, dtype=self.config.precision)
+        if qs.ndim == 3 and qs.shape[-1] == 1 and self.d == 1:
+            qs = qs[:, :, 0]
+        if self.d > 1:
+            if qs.ndim == 2 and qs.shape[1] == self.d * self.length:
+                # already channel-major flattened (Q, d*n) rows — the
+                # serving engine resubmits its prepared queries this
+                # way; skip the layout transform, normalization below
+                # still applies (idempotent on prepared input)
+                if self.config.znorm:
+                    nq = qs.shape[0]
+                    qs = _znorm_rows(
+                        qs.reshape(nq * self.d, self.length),
+                        dtype=self.config.precision,
+                    ).reshape(nq, self.d * self.length)
+                return qs
+            single = qs.ndim == 2
+            if single:
+                qs = qs[None]
+            if qs.ndim != 3 or qs.shape[-1] != self.d:
+                raise ValueError(
+                    f"queries must be one (n, {self.d}) series or a "
+                    f"(Q, n, {self.d}) batch on this {self.d}-channel "
+                    f"session, got shape "
+                    f"{np.asarray(queries).shape}"
+                )
+            if qs.shape[1] != self.length:
+                raise ValueError(
+                    f"query length {qs.shape[1]} != expected series "
+                    f"length {self.length}: the paper's DTW bounds "
+                    f"assume equal lengths"
+                )
+            qs = np.asarray(flatten_channels(qs))
+            if self.config.znorm:
+                nq, total = qs.shape
+                qs = _znorm_rows(
+                    qs.reshape(nq * self.d, self.length),
+                    dtype=self.config.precision,
+                ).reshape(nq, total)
+            return qs[0] if single else qs
         if qs.ndim not in (1, 2):
             raise ValueError(
                 f"queries must be one (n,) series or a (Q, n) batch, got "
@@ -546,7 +643,9 @@ class Database:
         — built at :meth:`build`, persisted in the bundle; a legacy
         bundle without one gets it measured here, once."""
         if self._calibration is None:
-            self._calibration = calibrate(self.data, self.w, self.config.p)
+            self._calibration = calibrate(
+                self.data, self.w, self.config.p, d=self.d
+            )
         return self._calibration
 
     def _resolve_method(
@@ -602,9 +701,19 @@ class Database:
             n_queries = int(queries)
         else:
             arr = np.asarray(queries)
-            n_queries = 1 if arr.ndim == 1 else int(arr.shape[0])
-            if arr.ndim in (1, 2) and qlen is None:
-                qlen = int(arr.shape[-1])
+            if self.d > 1:
+                # mv shapes: (d*n,) flattened or (n, d) is a single
+                # query; (Q, n, d) and flattened (Q, d*n) are batches
+                if arr.ndim == 1 or (
+                    arr.ndim == 2 and arr.shape[-1] == self.d
+                ):
+                    n_queries = 1
+                else:
+                    n_queries = int(arr.shape[0])
+            else:
+                n_queries = 1 if arr.ndim == 1 else int(arr.shape[0])
+                if arr.ndim in (1, 2) and qlen is None:
+                    qlen = int(arr.shape[-1])
         cfg, cascade = self._resolve_method(self._config_for(method), k)
         return plan_search(
             cfg,
@@ -617,6 +726,7 @@ class Database:
             mode=mode,
             budget=budget,
             anytime_info=self._anytime_info(qlen),
+            channels=self.d,
         )
 
     def search(
@@ -674,12 +784,12 @@ class Database:
         if plan.driver == "scan":
             return nn_search_scan(
                 qs, self._db_j, w=self.w, p=cfg.p, k=k,
-                block=cfg.block, method=cfg.method,
+                block=cfg.block, method=cfg.method, d=self.d,
             )
         if plan.driver == "host":
             return nn_search_host(
                 qs, self._db_j, w=self.w, p=cfg.p, k=k,
-                block=cfg.block, method=cfg.method,
+                block=cfg.block, method=cfg.method, d=self.d,
             )
         if plan.driver == "indexed":
             return nn_search_indexed(
@@ -693,7 +803,7 @@ class Database:
             qs, self._db_sharded, self.mesh,
             axis_names=self._axis_names, w=self.w, p=cfg.p, k=k,
             block=cfg.block, sync_every=self._sync_every,
-            method=cfg.method,
+            method=cfg.method, d=self.d,
         )
 
     def _search_anytime(
@@ -815,4 +925,5 @@ class Database:
             capacity=capacity,
             eps=eps,
             envelopes=envelopes,
+            d=self.d,
         )

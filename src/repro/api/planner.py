@@ -68,6 +68,11 @@ STAGE_UNIT_COST = {
     "lb_keogh": 3.0,
     "lb_improved": 8.0,
     "lb_webb": 9.0,
+    # TC-DTW stages (repro.mv.tc): tc_box reduces each lane to O(d*S)
+    # scalars after shared reductions — well under one sweep; tc_tri is
+    # O(R) arithmetic per lane, cheaper still
+    "tc_box": 0.6,
+    "tc_tri": 0.4,
 }
 
 
@@ -118,6 +123,7 @@ def calibrate(
     p,
     sample_q: int = 4,
     sample_c: int = 128,
+    d: int = 1,
 ) -> Calibration:
     """Measure every registered bound on a small sample of ``rows``.
 
@@ -127,12 +133,24 @@ def calibrate(
     probe pair.  Cost is O(sample_q * sample_c) bound evaluations plus
     as many banded DPs — for the defaults, 512 pairs, a once-per-build
     blip next to the stage-0 index.
+
+    ``d > 1`` probes the multivariate forms on channel-major flattened
+    rows and additionally measures the ``tc_box`` stage, making the
+    ``"tc_box"`` pipeline eligible under ``method="auto"``; at ``d = 1``
+    the probe (and hence every auto choice) is exactly the univariate
+    one — no tc stage appears, so univariate sessions keep their
+    pre-mv cascade decisions bit for bit.
     """
     import jax.numpy as jnp
 
     from repro.core import lb as lb_mod
-    from repro.core.dtw import dtw_qbatch
-    from repro.core.envelope import envelope_batch
+    from repro.mv import tc as tc_mod
+    from repro.mv.dtw import dtw_qbatch_mv
+    from repro.mv.envelope import envelope_batch_mv
+    from repro.mv.lb import (
+        lb_improved_mv_powered_qbatch,
+        lb_webb_mv_powered_qbatch,
+    )
 
     n_db = rows.shape[0]
     qi = np.unique(
@@ -143,26 +161,36 @@ def calibrate(
     )
     qs = jnp.asarray(rows[qi])
     cs = jnp.asarray(rows[ci])
-    upper, lower = envelope_batch(qs, w)
-    bounds = np.stack(
-        [
-            np.asarray(lb_mod.lb_kim_powered_qbatch(cs, qs, p), np.float64),
+    upper, lower = envelope_batch_mv(qs, w, d)
+    rows_b = [
+        np.asarray(lb_mod.lb_kim_powered_qbatch(cs, qs, p), np.float64),
+        np.asarray(
+            lb_mod.lb_keogh_powered_qbatch(cs, upper, lower, p),
+            np.float64,
+        ),
+        np.asarray(
+            lb_improved_mv_powered_qbatch(cs, qs, upper, lower, w, p, d),
+            np.float64,
+        ),
+        np.asarray(
+            lb_webb_mv_powered_qbatch(cs, qs, upper, lower, w, p, d),
+            np.float64,
+        ),
+    ]
+    names = CALIBRATED_STAGES
+    if d > 1:
+        names = names + ("tc_box",)
+        rows_b.append(
             np.asarray(
-                lb_mod.lb_keogh_powered_qbatch(cs, upper, lower, p),
+                tc_mod.tc_box_powered_qbatch(cs, upper, lower, p, d),
                 np.float64,
-            ),
-            np.asarray(
-                lb_mod.lb_improved_powered_qbatch(cs, qs, upper, lower, w, p),
-                np.float64,
-            ),
-            np.asarray(
-                lb_mod.lb_webb_powered_qbatch(cs, qs, upper, lower, w, p),
-                np.float64,
-            ),
-        ]
+            )
+        )
+    bounds = np.stack(rows_b)
+    dtw = np.asarray(
+        dtw_qbatch_mv(qs, cs, w, p, powered=True, d=d), np.float64
     )
-    dtw = np.asarray(dtw_qbatch(qs, cs, w, p, powered=True), np.float64)
-    return Calibration(CALIBRATED_STAGES, bounds, dtw, int(w))
+    return Calibration(names, bounds, dtw, int(w))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -306,14 +334,34 @@ class Plan:
     cascade: CascadePlan | None = None  # set when the planner chose the order
     mode: str = "exact"  # "exact" | "anytime"
     budget: int | None = None  # refined windows per query; None = unlimited
+    channels: int = 1  # data channel count d (DESIGN.md §3.12)
+
+    def _mv_considered(self) -> tuple[str, ...]:
+        """TC-DTW stages this plan actually weighed: stages in the chosen
+        pipeline, plus (under method="auto") stages in any pipeline the
+        calibrated chooser scored."""
+        seen = {s for s in self.stages if s in ("tc_box", "tc_tri")}
+        if self.cascade is not None:
+            for m, _cost in self.cascade.predicted:
+                seen |= {
+                    s for s in PIPELINES[m] if s in ("tc_box", "tc_tri")
+                }
+        return tuple(sorted(seen))
 
     def explain(self) -> str:
+        mv = self._mv_considered()
         lines = [
             f"driver: {self.driver} ({DRIVERS[self.driver]})",
             f"stages: {' -> '.join(self.stages)}",
             f"queries: {self.n_queries} (method={self.config.method}, "
             f"p={self.config.p}, k={self.config.k}, "
             f"block={self.config.block})",
+            f"channels: {self.channels}"
+            + (
+                f" (mv stages considered: {', '.join(mv)})"
+                if mv
+                else " (mv stages considered: none)"
+            ),
         ]
         if self.mode == "anytime":
             budget = (
@@ -344,6 +392,7 @@ def plan_search(
     mode: str = "exact",
     budget: int | None = None,
     anytime_info: dict | None = None,
+    channels: int = 1,
 ) -> Plan:
     """Choose the pipeline for a query batch against one database session.
 
@@ -407,6 +456,7 @@ def plan_search(
                 cascade,
                 mode="anytime",
                 budget=budget,
+                channels=channels,
             )
         if budget is not None:
             raise ValueError(
@@ -424,6 +474,7 @@ def plan_search(
             + cascade_reason,
             n_queries,
             config,
+            channels=channels,
         )
     if budget is not None:
         raise ValueError(
@@ -461,6 +512,7 @@ def plan_search(
             n_queries,
             config,
             cascade,
+            channels=channels,
         )
 
     if has_index:
@@ -477,6 +529,7 @@ def plan_search(
             n_queries,
             config,
             cascade,
+            channels=channels,
         )
     if has_mesh:
         return Plan(
@@ -491,6 +544,7 @@ def plan_search(
             n_queries,
             config,
             cascade,
+            channels=channels,
         )
     if config.method == "full":
         return Plan(
@@ -504,6 +558,7 @@ def plan_search(
             n_queries,
             config,
             cascade,
+            channels=channels,
         )
     if n_rows < SMALL_DB_ROWS:
         return Plan(
@@ -518,6 +573,7 @@ def plan_search(
             n_queries,
             config,
             cascade,
+            channels=channels,
         )
     return Plan(
         "host",
@@ -532,4 +588,5 @@ def plan_search(
         n_queries,
         config,
         cascade,
+        channels=channels,
     )

@@ -43,10 +43,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dtw import BIG, PNorm, dtw_qbatch, finish_cost
-from repro.core.envelope import envelope_batch
+from repro.core.dtw import BIG, PNorm, finish_cost
 from repro.core import pipeline as pipe
-from repro.core.pipeline import Method, run_block_stages
+from repro.core.pipeline import Method, TriContext, run_block_stages
+from repro.mv.dtw import dtw_qbatch_mv
+from repro.mv.envelope import envelope_batch_mv
 
 __all__ = [
     "BatchSearchResult",
@@ -207,12 +208,16 @@ def make_block_step(
     method: Method,
     masked: bool = False,
     n_real: jax.Array | None = None,
+    d: int = 1,
+    tri: TriContext | None = None,
 ):
     """Build the query-major scan body shared by local, sharded and
     indexed search (DESIGN.md §3.4).
 
-    ``qs``, ``upper``, ``lower`` are ``(Q, n)`` — a query batch with its
-    envelopes; a single query is the ``Q = 1`` special case.
+    ``qs``, ``upper``, ``lower`` are ``(Q, d*n)`` — a query batch with
+    its (per-channel-segment, for ``d > 1``) envelopes; a single query
+    is the ``Q = 1`` special case.  ``tri`` optionally carries the
+    reference-index context consumed by the ``tc_tri`` stage.
 
     carry = (top_v (Q, k), top_i (Q, k), gbound (Q,),
              stage_pruned (S, Q) — one row per LB stage of the method's
@@ -252,7 +257,8 @@ def make_block_step(
         bound = jnp.minimum(top_v[:, -1], gbound)  # per-query k-th best
 
         st = run_block_stages(
-            qs, upper, lower, w, p, method, blk, bound, mask0
+            qs, upper, lower, w, p, method, blk, bound, mask0,
+            d=d, cand_i=cand_i, tri=tri,
         )
 
         # merge block results into each query's running top-k
@@ -313,7 +319,7 @@ def init_carry(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("w", "p", "k", "block", "method")
+    jax.jit, static_argnames=("w", "p", "k", "block", "method", "d")
 )
 def _scan_search(
     qs: jax.Array,
@@ -324,17 +330,18 @@ def _scan_search(
     k: int,
     block: int,
     method: Method,
+    d: int = 1,
 ):
-    nq, n = qs.shape
-    w = int(min(w, n - 1))
-    upper, lower = envelope_batch(qs, w)
+    nq, n_flat = qs.shape
+    w = int(min(w, n_flat // d - 1))  # clamp against the per-channel length
+    upper, lower = envelope_batch_mv(qs, w, d)
     nb = db.shape[0] // block
-    blocks = db.reshape(nb, block, n)
+    blocks = db.reshape(nb, block, n_flat)
     idx = (jnp.arange(nb) * block)[:, None] + jnp.arange(block)[None, :]
     # pad lanes (cand_i >= n_real) are masked inside the body, never
     # evaluated or counted — see make_block_step(n_real=...)
     body = make_block_step(
-        qs, upper, lower, w, p, k, block, method, n_real=n_real
+        qs, upper, lower, w, p, k, block, method, n_real=n_real, d=d
     )
     n_lb = len(pipe.lb_stage_names(method))
     carry, _ = jax.lax.scan(
@@ -411,13 +418,15 @@ def nn_search_scan(
     k: int = 1,
     block: int = 32,
     method: Method = "lb_improved",
+    d: int = 1,
 ) -> SearchResult | BatchSearchResult:
     """Jit-compiled block-scan cascade (device-resident end to end).
 
-    ``q`` may be a single series (n,) -> ``SearchResult`` or a query
-    batch (Q, n) -> ``BatchSearchResult``; the batch shares one sweep
+    ``q`` may be a single series (d*n,) -> ``SearchResult`` or a query
+    batch (Q, d*n) -> ``BatchSearchResult``; the batch shares one sweep
     over the database (DESIGN.md §3.4) and bit-matches the per-query
-    loop.
+    loop.  ``d > 1`` interprets rows as channel-major flattened
+    multivariate series (repro.mv.layout).
     """
     q = jnp.asarray(q)
     single = q.ndim == 1
@@ -426,7 +435,8 @@ def nn_search_scan(
     n_db = db.shape[0]
     dbp, _ = _pad_db(db, block)
     top_v, top_i, cs, c3, b2, b3, w_dp, u_dp = _scan_search(
-        qs, dbp, jnp.int32(n_db), int(w), p, int(k), int(block), method
+        qs, dbp, jnp.int32(n_db), int(w), p, int(k), int(block), method,
+        int(d),
     )
     agg, per_query = _batch_stats(
         n_db,
@@ -453,27 +463,40 @@ def nn_search_scan(
 # ------------------------------------------------------------------ host
 
 
-@functools.partial(jax.jit, static_argnames=("name", "w", "p"))
-def _dense_stage_qblock(name, qs, upper, lower, blk, w, p):
+@functools.partial(jax.jit, static_argnames=("name", "w", "p", "d"))
+def _dense_stage_qblock(name, qs, upper, lower, blk, w, p, d=1):
     """One registry stage's dense (Q, B) form — the host driver sweeps
     whatever LB stages the method's pipeline declares, so a new bound
     registered in ``repro.core.pipeline`` appears here for free."""
-    ctx = pipe.PipeContext(qs, upper, lower, w, p)
+    ctx = pipe.PipeContext(qs, upper, lower, w, p, d=d)
     return pipe.STAGES[name].dense(ctx, blk)
 
 
-@functools.partial(jax.jit, static_argnames=("w", "p"))
-def _dtw_pairs_block(qrows, crows, w, p):
+@functools.partial(jax.jit, static_argnames=("w", "p", "d"))
+def _dtw_pairs_block(qrows, crows, w, p, d=1):
     """Banded DP over explicit (query, candidate) row pairs — the pooled
     survivor chunks of the batched host cascade (DESIGN.md §3.4)."""
+    if d > 1:
+        from repro.mv.dtw import dtw_banded_diag_mv, dtw_banded_mv
+
+        fn = dtw_banded_mv if p != jnp.inf else dtw_banded_diag_mv
+        return jax.vmap(lambda a, b: fn(a, b, w, p, powered=True, d=d))(
+            qrows, crows
+        )
     from repro.core.dtw import dtw_banded, dtw_banded_diag
 
     fn = dtw_banded if p != jnp.inf else dtw_banded_diag
     return jax.vmap(lambda a, b: fn(a, b, w, p, powered=True))(qrows, crows)
 
 
-@functools.partial(jax.jit, static_argnames=("w", "p"))
-def _dtw_pairs_block_early(qrows, crows, w, bounds, p):
+@functools.partial(jax.jit, static_argnames=("w", "p", "d"))
+def _dtw_pairs_block_early(qrows, crows, w, bounds, p, d=1):
+    if d > 1:
+        from repro.mv.dtw import dtw_banded_early_mv
+
+        return jax.vmap(
+            lambda a, b, bd: dtw_banded_early_mv(a, b, w, bd, p, d)
+        )(qrows, crows, bounds)
     from repro.core.dtw import dtw_banded_early
 
     return jax.vmap(lambda a, b, bd: dtw_banded_early(a, b, w, bd, p))(
@@ -491,6 +514,7 @@ def nn_search_host(
     dtw_chunk: int = 16,
     method: Method = "lb_improved",
     early_abandon: bool = False,
+    d: int = 1,
 ) -> SearchResult | BatchSearchResult:
     """Host-orchestrated cascade with survivor compaction.
 
@@ -515,8 +539,9 @@ def nn_search_host(
     nq = qs.shape[0]
     db_j = jnp.asarray(db)
     n_db, n = db_j.shape
-    w = int(min(w, n - 1))
-    upper, lower = envelope_batch(qs, w)
+    d = int(d)
+    w = int(min(w, n // d - 1))  # clamp against the per-channel length
+    upper, lower = envelope_batch_mv(qs, w, d)
 
     top_v = np.full((nq, k), BIG)
     top_i = np.full((nq, k), -1, np.int64)
@@ -551,7 +576,7 @@ def nn_search_host(
                 if si == 1:  # once per block, however deep the cascade
                     blocks_lb2 += 1
             lb = np.asarray(
-                _dense_stage_qblock(name, qs, upper, lower, blk, w, p)
+                _dense_stage_qblock(name, qs, upper, lower, blk, w, p, d)
             )[:, : hi - lo]
             alive_next = alive & (lb < bound[:, None])
             lb_pruned[si] += (alive & ~alive_next).sum(axis=1)
@@ -572,22 +597,25 @@ def nn_search_host(
             dp_lane_work += dtw_chunk
             dp_lane_useful += len(sel_q)
             if early_abandon:
-                d = np.array(
+                dvals = np.array(
                     _dtw_pairs_block_early(
                         qs[sel_qp],
                         db_j[sel_cp],
                         w,
                         jnp.asarray(top_v[sel_qp, -1]),
                         p,
+                        d,
                     )
                 )
             else:
-                d = np.array(_dtw_pairs_block(qs[sel_qp], db_j[sel_cp], w, p))
+                dvals = np.array(
+                    _dtw_pairs_block(qs[sel_qp], db_j[sel_cp], w, p, d)
+                )
             if pad_n:
-                d[dtw_chunk - pad_n :] = BIG
+                dvals[dtw_chunk - pad_n :] = BIG
             for qi in np.unique(sel_qp):
                 sel = sel_qp == qi
-                merge(int(qi), d[sel], sel_cp[sel])
+                merge(int(qi), dvals[sel], sel_cp[sel])
 
     agg, per_query = _batch_stats(
         n_db,
@@ -613,7 +641,9 @@ def nn_search_host(
 # --------------------------------------------------------------- indexed
 
 
-@functools.partial(jax.jit, static_argnames=("w", "p", "k", "block", "method"))
+@functools.partial(
+    jax.jit, static_argnames=("w", "p", "k", "block", "method", "d")
+)
 def _scan_search_compact(
     qs: jax.Array,
     sub: jax.Array,
@@ -626,6 +656,8 @@ def _scan_search_compact(
     k: int,
     block: int,
     method: Method,
+    d: int = 1,
+    tri: TriContext | None = None,
 ):
     """Seeded block scan over a compacted survivor set (DESIGN.md §3.3).
 
@@ -635,17 +667,19 @@ def _scan_search_compact(
     ``mask`` keeps each query lane to its *own* stage-0 survivors — the
     compacted set is the union over the batch (§3.4), so a candidate
     another query still needs is swept once but never evaluated or
-    counted for queries that already killed it.
+    counted for queries that already killed it.  ``tri`` (the
+    reference-index context) reaches the ``tc_tri`` stage when the
+    method's pipeline declares it.
     """
-    nq, n = qs.shape
-    w = int(min(w, n - 1))
-    upper, lower = envelope_batch(qs, w)
+    nq, n_flat = qs.shape
+    w = int(min(w, n_flat // d - 1))
+    upper, lower = envelope_batch_mv(qs, w, d)
     nb = sub.shape[0] // block
-    blocks = sub.reshape(nb, block, n)
+    blocks = sub.reshape(nb, block, n_flat)
     idxb = idx.reshape(nb, block)
     maskb = jnp.transpose(mask.reshape(nq, nb, block), (1, 0, 2))
     body = make_block_step(
-        qs, upper, lower, w, p, k, block, method, masked=True
+        qs, upper, lower, w, p, k, block, method, masked=True, d=d, tri=tri
     )
     n_lb = len(pipe.lb_stage_names(method))
     carry, _ = jax.lax.scan(
@@ -713,7 +747,8 @@ def nn_search_indexed(
     w, p = index.w, (jnp.inf if np.isinf(index.p) else index.p)
     if p != jnp.inf and float(p) == int(p):
         p = int(p)
-    index.validate(n_db, n, w, p)
+    d = int(getattr(index, "d", 1))
+    index.validate(n_db, n // d, w, p, d)
     cl = index.clustering
     c_w = index.constant
     n_refs = index.n_refs
@@ -731,9 +766,9 @@ def nn_search_indexed(
     # ---- stage 0a: exact DTW to the references at both bands (2R DPs
     #      per query, batched over the whole query block)
     refs_j = dev["ref_series"]
-    d_q_refs = np.asarray(dtw_qbatch(qs, refs_j, w, p, powered=False))
+    d_q_refs = np.asarray(dtw_qbatch_mv(qs, refs_j, w, p, powered=False, d=d))
     d_q_refs_wide = np.asarray(
-        dtw_qbatch(qs, refs_j, index.w_wide, p, powered=False)
+        dtw_qbatch_mv(qs, refs_j, index.w_wide, p, powered=False, d=d)
     )
     # ``powered`` is elementwise python arithmetic — it works on numpy
     # arrays directly, no device round-trip needed for stage-0 scalars
@@ -830,6 +865,18 @@ def nn_search_indexed(
     mask = np.concatenate(
         [alive[:, survivors], np.zeros((nq, pad), bool)], axis=1
     )
+    # pipelines declaring tc_tri re-apply LB_tri per block against the
+    # *running* top-k bound (stage 0 above only saw the initial
+    # reference-seeded bound), so the reference context rides along
+    tri = None
+    if "tc_tri" in pipe.PIPELINES[method]:
+        tri = TriContext(
+            d_q_refs=jnp.asarray(d_q_refs),
+            d_q_refs_wide=jnp.asarray(d_q_refs_wide),
+            d_ref_db=dev["d_ref_db"],
+            d_ref_db_wide=dev["d_ref_db_wide"],
+            c_w=jnp.asarray(c_w),
+        )
     top_vj, top_ij, cs, c3, b2, b3, w_dp, u_dp = _scan_search_compact(
         qs,
         sub,
@@ -842,6 +889,8 @@ def nn_search_indexed(
         int(k),
         int(block),
         method,
+        d,
+        tri,
     )
     # masked lanes (stage-0 pruned and padded) are neither evaluated nor
     # counted, so no pad correction is needed; the R band-w reference DPs

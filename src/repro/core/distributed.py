@@ -39,8 +39,8 @@ from repro.core.cascade import (
     make_block_step,
 )
 from repro.core.dtw import BIG, PNorm, finish_cost
-from repro.core.envelope import envelope_batch
 from repro.core import pipeline as pipe
+from repro.mv.envelope import envelope_batch_mv
 
 
 def _sharded_search_fn(
@@ -52,6 +52,7 @@ def _sharded_search_fn(
     block: int,
     sync_every: int,
     method: Method,
+    d: int = 1,
 ):
     """Build the jitted shard_map search: (qs, db_sharded) -> (top_v, top_i, stats).
 
@@ -62,8 +63,8 @@ def _sharded_search_fn(
     db_spec = P(axis_names)  # shard candidate axis over all given mesh axes
 
     def local_search(qs, db_local):
-        nq, n = qs.shape
-        upper, lower = envelope_batch(qs, w)
+        nq, n = qs.shape  # n is the flat (d*n_per_channel) length
+        upper, lower = envelope_batch_mv(qs, w, d)
         n_local = db_local.shape[0]
         nb = n_local // block
         shard_id = jnp.int32(0)
@@ -75,7 +76,7 @@ def _sharded_search_fn(
         idx = base[:, None] + jnp.arange(block)[None, :]
         blocks = db_local.reshape(nb, block, n)
 
-        body = make_block_step(qs, upper, lower, w, p, k, block, method)
+        body = make_block_step(qs, upper, lower, w, p, k, block, method, d=d)
 
         rounds = -(-nb // sync_every)
         pad_rounds = rounds * sync_every - nb
@@ -141,8 +142,10 @@ def _sharded_search_fn(
 
 
 @functools.lru_cache(maxsize=64)
-def _cached_fn(mesh, axis_names, w, p, k, block, sync_every, method):
-    return _sharded_search_fn(mesh, axis_names, w, p, k, block, sync_every, method)
+def _cached_fn(mesh, axis_names, w, p, k, block, sync_every, method, d=1):
+    return _sharded_search_fn(
+        mesh, axis_names, w, p, k, block, sync_every, method, d
+    )
 
 
 def sharded_nn_search(
@@ -156,6 +159,7 @@ def sharded_nn_search(
     block: int = 32,
     sync_every: int = 4,
     method: Method = "lb_improved",
+    d: int = 1,
 ) -> SearchResult | BatchSearchResult:
     """Search a database sharded over ``mesh`` axes.
 
@@ -169,9 +173,12 @@ def sharded_nn_search(
     q = jnp.asarray(q)
     single = q.ndim == 1
     qs = q[None, :] if single else q
+    d = int(d)
     n = qs.shape[1]
-    w = int(min(w, n - 1))
-    fn = _cached_fn(mesh, axis_names, w, p, int(k), int(block), int(sync_every), method)
+    w = int(min(w, n // d - 1))
+    fn = _cached_fn(
+        mesh, axis_names, w, p, int(k), int(block), int(sync_every), method, d
+    )
     db = jax.device_put(
         db, NamedSharding(mesh, P(axis_names))
     )

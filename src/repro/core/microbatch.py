@@ -31,11 +31,15 @@ def pad_rows(
     (batch, n) shape (one jit specialisation) and pad lanes are plain
     duplicate work whose results the caller drops.  Returns
     ``(block, n_valid)`` with ``n_valid`` the number of real leading
-    rows.
+    rows.  Multivariate (n, d) queries stack the same way into a
+    (batch, n, d) block.
     """
     block = np.asarray(rows)
-    if block.ndim != 2:
-        raise ValueError(f"expected a group of (n,) rows, got shape {block.shape}")
+    if block.ndim not in (2, 3):
+        raise ValueError(
+            f"expected a group of (n,) rows or (n, d) multivariate "
+            f"queries, got shape {block.shape}"
+        )
     n_valid = block.shape[0]
     if not 1 <= n_valid <= batch:
         raise ValueError(f"got {n_valid} rows for a batch of {batch}")
@@ -60,8 +64,11 @@ def iter_query_batches(
     """
     if batch <= 0:
         raise ValueError(f"query batch must be positive, got {batch}")
-    if isinstance(queries, np.ndarray) and queries.ndim != 2:
-        raise ValueError(f"expected (N, n) query array, got {queries.shape}")
+    if isinstance(queries, np.ndarray) and queries.ndim not in (2, 3):
+        raise ValueError(
+            f"expected an (N, n) or multivariate (N, n, d) query array, "
+            f"got {queries.shape}"
+        )
     it = iter(queries)
     while True:
         block_rows = list(itertools.islice(it, batch))

@@ -51,11 +51,19 @@ from repro.core.dtw import (
     dtw_banded_early,
     dtw_qbatch,
 )
-from repro.core.envelope import envelope_batch
 from repro.core import lb as lb_mod
+from repro.mv import tc as tc_mod
+from repro.mv.dtw import dtw_banded_diag_mv, dtw_banded_early_mv, dtw_qbatch_mv
+from repro.mv.envelope import envelope_batch_mv
+from repro.mv.lb import (
+    envelope_of_envelopes_mv,
+    lb_improved_mv_powered_qbatch,
+    lb_webb_mv_powered_qbatch,
+)
 
 Method = Literal[
-    "full", "lb_keogh", "lb_improved", "lb_webb", "kim_improved", "kim_webb"
+    "full", "lb_keogh", "lb_improved", "lb_webb", "kim_improved", "kim_webb",
+    "tc_box", "tc_tri",
 ]
 
 #: lanes per compacted gather; also the unit dp_lane_work is counted in.
@@ -65,24 +73,49 @@ Method = Literal[
 LANE_CHUNK = 32
 
 
+class TriContext(NamedTuple):
+    """Reference-index context for the ``tc_tri`` stage (all rooted
+    distances; ``c_w`` is Theorem 1's banded constant).  Supplied by
+    ``nn_search_indexed`` — the driver that owns the index; drivers
+    without it leave ``PipeContext.tri`` unset and ``tc_tri`` degrades
+    to the trivial zero bound (sound, prunes nothing)."""
+
+    d_q_refs: jax.Array  # (Q, R) DTW^w(q, r)
+    d_q_refs_wide: jax.Array  # (Q, R) DTW^{2w}(q, r)
+    d_ref_db: jax.Array  # (R, N) DTW^w(r, s)
+    d_ref_db_wide: jax.Array  # (R, N) DTW^{2w}(r, s)
+    c_w: jax.Array  # scalar Theorem-1 constant min(2w+1, n)^(1/p)
+
+
 class PipeContext(NamedTuple):
     """Per-call constants every stage closes over: the query batch, its
     envelopes, and the (static) band half-width and norm order.
+
+    ``d`` is the (static) channel count of the channel-major flattened
+    layout (repro.mv.layout): rows are (d*n,) with d contiguous length-n
+    channel segments, and ``d = 1`` *is* the univariate layout — every
+    stage branches to its literal univariate body then, so d = 1 values
+    stay bit-identical to the pre-mv code.
 
     ``q_ul`` / ``q_lu`` are the query envelopes-of-envelopes LB_Webb's
     correction needs (upper env of L, lower env of U — DESIGN.md §3.9);
     ``run_block_stages`` fills them only when the method's pipeline
     contains ``lb_webb`` at finite p, so every other cascade pays
-    nothing for the field.
+    nothing for the field.  ``cand_i`` (the block's global candidate
+    ids) and ``tri`` (the reference-index context) are filled only for
+    pipelines containing ``tc_tri``.
     """
 
-    qs: jax.Array  # (Q, n)
-    upper: jax.Array  # (Q, n)
-    lower: jax.Array  # (Q, n)
+    qs: jax.Array  # (Q, d*n)
+    upper: jax.Array  # (Q, d*n) per-channel-segment envelopes
+    lower: jax.Array  # (Q, d*n)
     w: int
     p: PNorm
-    q_ul: jax.Array | None = None  # (Q, n) upper envelope of lower
-    q_lu: jax.Array | None = None  # (Q, n) lower envelope of upper
+    q_ul: jax.Array | None = None  # (Q, d*n) upper envelope of lower
+    q_lu: jax.Array | None = None  # (Q, d*n) lower envelope of upper
+    d: int = 1  # static channel count
+    cand_i: jax.Array | None = None  # (B,) global candidate ids of the block
+    tri: TriContext | None = None  # reference-index context for tc_tri
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,8 +160,12 @@ def _lb_keogh_pair(ctx, blk, qi, ci, bound, prev):
 
 
 def _lb_improved_dense(ctx: PipeContext, blk: jax.Array) -> jax.Array:
-    return lb_mod.lb_improved_powered_qbatch(
-        blk, ctx.qs, ctx.upper, ctx.lower, ctx.w, ctx.p
+    if ctx.d == 1:
+        return lb_mod.lb_improved_powered_qbatch(
+            blk, ctx.qs, ctx.upper, ctx.lower, ctx.w, ctx.p
+        )
+    return lb_improved_mv_powered_qbatch(
+        blk, ctx.qs, ctx.upper, ctx.lower, ctx.w, ctx.p, ctx.d
     )
 
 
@@ -137,11 +174,12 @@ def _lb_improved_pair(ctx, blk, qi, ci, bound, prev):
     on top of the stage-1 LB_Keogh values (``prev``, gathered rather than
     recomputed — the dense form recomputes them bit-identically), same op
     sequence as the dense query-major form so values on alive lanes
-    bit-match the tile computation."""
-    c = blk[ci]  # (chunk, n)
+    bit-match the tile computation.  The mv form only swaps the
+    projection's envelope sweep for the per-channel-segment one."""
+    c = blk[ci]  # (chunk, d*n)
     u, l, q = ctx.upper[qi], ctx.lower[qi], ctx.qs[qi]
     h = lb_mod.project(c, u, l)
-    hu, hl = envelope_batch(h, ctx.w)
+    hu, hl = envelope_batch_mv(h, ctx.w, ctx.d)
     pass2 = lb_mod.lb_keogh_powered(q, hu, hl, ctx.p)
     if ctx.p == jnp.inf:
         return jnp.maximum(prev, pass2)
@@ -149,8 +187,13 @@ def _lb_improved_pair(ctx, blk, qi, ci, bound, prev):
 
 
 def _lb_webb_dense(ctx: PipeContext, blk: jax.Array) -> jax.Array:
-    return lb_mod.lb_webb_powered_qbatch(
-        blk, ctx.qs, ctx.upper, ctx.lower, ctx.w, ctx.p,
+    if ctx.d == 1:
+        return lb_mod.lb_webb_powered_qbatch(
+            blk, ctx.qs, ctx.upper, ctx.lower, ctx.w, ctx.p,
+            q_ul=ctx.q_ul, q_lu=ctx.q_lu,
+        )
+    return lb_webb_mv_powered_qbatch(
+        blk, ctx.qs, ctx.upper, ctx.lower, ctx.w, ctx.p, ctx.d,
         q_ul=ctx.q_ul, q_lu=ctx.q_lu,
     )
 
@@ -159,9 +202,10 @@ def _lb_webb_pair(ctx, blk, qi, ci, bound, prev):
     """Webb query-side term per compacted lane pair, added to the
     gathered LB_Keogh values (``prev``): the candidate envelopes are
     row-independent, so per-lane `envelope_batch` on the gathered rows
-    bit-matches the dense tile computation."""
-    c = blk[ci]  # (chunk, n)
-    cand_u, cand_l = envelope_batch(c, ctx.w)
+    bit-matches the dense tile computation (per channel segment for
+    d > 1 — the distance arithmetic is layout-invariant)."""
+    c = blk[ci]  # (chunk, d*n)
+    cand_u, cand_l = envelope_batch_mv(c, ctx.w, ctx.d)
     q = ctx.qs[qi]
     if ctx.p == jnp.inf:
         qside = lb_mod._webb_qside(q, cand_u, cand_l, 0.0, 0.0, ctx.p)
@@ -173,7 +217,9 @@ def _lb_webb_pair(ctx, blk, qi, ci, bound, prev):
 
 
 def _dtw_dense(ctx: PipeContext, blk: jax.Array) -> jax.Array:
-    return dtw_qbatch(ctx.qs, blk, ctx.w, ctx.p, powered=True)
+    if ctx.d == 1:
+        return dtw_qbatch(ctx.qs, blk, ctx.w, ctx.p, powered=True)
+    return dtw_qbatch_mv(ctx.qs, blk, ctx.w, ctx.p, powered=True, d=ctx.d)
 
 
 def _dtw_pair(ctx, blk, qi, ci, bound, prev):
@@ -182,13 +228,77 @@ def _dtw_pair(ctx, blk, qi, ci, bound, prev):
     so they can never displace a top-k entry the bound came from."""
     qrows = ctx.qs[qi]
     crows = blk[ci]
+    if ctx.d == 1:
+        if ctx.p == jnp.inf:
+            return jax.vmap(
+                lambda a, b: dtw_banded_diag(a, b, ctx.w, ctx.p, powered=True)
+            )(qrows, crows)
+        return jax.vmap(
+            lambda a, b, bd: dtw_banded_early(a, b, ctx.w, bd, ctx.p)
+        )(qrows, crows, bound)
     if ctx.p == jnp.inf:
         return jax.vmap(
-            lambda a, b: dtw_banded_diag(a, b, ctx.w, ctx.p, powered=True)
+            lambda a, b: dtw_banded_diag_mv(
+                a, b, ctx.w, ctx.p, powered=True, d=ctx.d
+            )
         )(qrows, crows)
     return jax.vmap(
-        lambda a, b, bd: dtw_banded_early(a, b, ctx.w, bd, ctx.p)
+        lambda a, b, bd: dtw_banded_early_mv(a, b, ctx.w, bd, ctx.p, ctx.d)
     )(qrows, crows, bound)
+
+
+# -------------------------------------------------- TC-DTW stages (§3.12)
+
+
+def _tc_box_dense(ctx: PipeContext, blk: jax.Array) -> jax.Array:
+    return tc_mod.tc_box_powered_qbatch(
+        blk, ctx.upper, ctx.lower, ctx.p, ctx.d
+    )
+
+
+def _tc_box_pair(ctx, blk, qi, ci, bound, prev):
+    """Coarse envelope-box bound per compacted lane pair.  Runs before
+    LB_Keogh in its pipelines, so (like LB_Kim) it ignores ``prev``; the
+    per-segment reductions gather the same contiguous elements as the
+    dense tile, bit-matching it."""
+    return tc_mod.tc_box_powered_pair(
+        blk[ci], ctx.upper[qi], ctx.lower[qi], ctx.p, ctx.d
+    )
+
+
+def _tc_tri_dense(ctx: PipeContext, blk: jax.Array) -> jax.Array:
+    nq, b = ctx.qs.shape[0], blk.shape[0]
+    if ctx.tri is None or ctx.cand_i is None:
+        # no reference context in this driver: the zero bound is a sound
+        # (never-pruning) lower bound on any non-negative distance
+        return jnp.zeros((nq, b))
+    tri = ctx.tri
+    safe = jnp.clip(ctx.cand_i, 0, tri.d_ref_db.shape[1] - 1)
+    return tc_mod.tc_tri_powered_qbatch(
+        tri.d_q_refs,
+        tri.d_q_refs_wide,
+        tri.d_ref_db[:, safe],
+        tri.d_ref_db_wide[:, safe],
+        tri.c_w,
+        ctx.p,
+    )
+
+
+def _tc_tri_pair(ctx, blk, qi, ci, bound, prev):
+    """LB_tri per compacted lane pair: O(R) gathers per lane, no
+    envelope, no DP.  Ignores ``prev`` (independent bound)."""
+    if ctx.tri is None or ctx.cand_i is None:
+        return jnp.zeros(qi.shape[0])
+    tri = ctx.tri
+    gci = jnp.clip(ctx.cand_i[ci], 0, tri.d_ref_db.shape[1] - 1)
+    return tc_mod.tc_tri_powered_pair(
+        tri.d_q_refs[qi],
+        tri.d_q_refs_wide[qi],
+        tri.d_ref_db[:, gci].T,
+        tri.d_ref_db_wide[:, gci].T,
+        tri.c_w,
+        ctx.p,
+    )
 
 
 STAGES: dict[str, Stage] = {
@@ -196,6 +306,8 @@ STAGES: dict[str, Stage] = {
     "lb_keogh": Stage("lb_keogh", _lb_keogh_dense, _lb_keogh_pair),
     "lb_improved": Stage("lb_improved", _lb_improved_dense, _lb_improved_pair),
     "lb_webb": Stage("lb_webb", _lb_webb_dense, _lb_webb_pair),
+    "tc_box": Stage("tc_box", _tc_box_dense, _tc_box_pair),
+    "tc_tri": Stage("tc_tri", _tc_tri_dense, _tc_tri_pair),
     "full": Stage("full", _dtw_dense, _dtw_pair, exact=True),
 }
 
@@ -216,6 +328,13 @@ PIPELINES: dict[Method, tuple[str, ...]] = {
     "lb_webb": ("lb_keogh", "lb_webb", "full"),
     "kim_improved": ("lb_kim", "lb_keogh", "lb_improved", "full"),
     "kim_webb": ("lb_kim", "lb_keogh", "lb_webb", "full"),
+    # TC-DTW cascades (DESIGN.md §3.12): the coarse envelope box gates
+    # the per-sample bounds; tc_tri additionally front-loads the O(R)
+    # triangle bound when a driver threads the reference context in
+    # (without it the stage is a sound no-op, so the method stays exact
+    # in every driver).
+    "tc_box": ("tc_box", "lb_keogh", "lb_improved", "full"),
+    "tc_tri": ("tc_tri", "tc_box", "lb_keogh", "lb_improved", "full"),
 }
 
 
@@ -350,6 +469,9 @@ def run_block_stages(
     bound: jax.Array,
     mask0: jax.Array,
     lane_chunk: int | None = None,
+    d: int = 1,
+    cand_i: jax.Array | None = None,
+    tri: TriContext | None = None,
 ) -> BlockStages:
     """One candidate block through the method's stage pipeline, query-major.
 
@@ -358,11 +480,15 @@ def run_block_stages(
     matcher (``repro.stream.subsequence`` compares against a fixed
     per-template threshold — DESIGN.md §3.5).
 
-    ``blk`` is a ``(block, n)`` candidate tile, ``bound`` a ``(Q,)``
-    powered pruning bound, ``mask0`` a ``(Q, block)`` bool of lanes alive
-    on entry.  The first LB stage runs unconditionally on the tile (the
-    paper's economics: a fully-pruned block costs exactly one LB_Keogh
-    pass); every later stage runs survivor-compacted.
+    ``blk`` is a ``(block, d*n)`` candidate tile (channel-major flat —
+    repro.mv.layout; ``d = 1`` is the univariate layout), ``bound`` a
+    ``(Q,)`` powered pruning bound, ``mask0`` a ``(Q, block)`` bool of
+    lanes alive on entry.  The first LB stage runs unconditionally on
+    the tile (the paper's economics: a fully-pruned block costs exactly
+    one LB_Keogh pass); every later stage runs survivor-compacted.
+    ``cand_i``/``tri`` carry the block's global candidate ids and the
+    reference-index context the ``tc_tri`` stage consumes; both are
+    optional and only read by that stage.
 
     ``lane_chunk`` left ``None`` resolves from the active tune table
     ("pipeline" family; :data:`LANE_CHUNK` is the fallback).  The chunk
@@ -374,17 +500,17 @@ def run_block_stages(
         from repro.kernels.tuning.table import resolve_config
 
         lane_chunk = resolve_config(
-            "pipeline", b=blk.shape[0], n=qs.shape[1]
+            "pipeline", b=blk.shape[0], n=qs.shape[1] // d, d=d
         ).lane_chunk
     nq, block = qs.shape[0], blk.shape[0]
-    ctx = PipeContext(qs, upper, lower, w, p)
+    ctx = PipeContext(qs, upper, lower, w, p, d=d, cand_i=cand_i, tri=tri)
     names = PIPELINES[method]
     stages = [STAGES[nm] for nm in names]
     if "lb_webb" in names and p != jnp.inf:
         # Webb's correction envelopes depend only on the query batch;
         # computed here (not per stage) so the compacted pair form can
         # gather them per lane
-        q_ul, q_lu = lb_mod.envelope_of_envelopes(upper, lower, w)
+        q_ul, q_lu = envelope_of_envelopes_mv(upper, lower, w, d)
         ctx = ctx._replace(q_ul=q_ul, q_lu=q_lu)
 
     alive = mask0

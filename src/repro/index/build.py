@@ -18,11 +18,12 @@ import hashlib
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dtw import PNorm, dtw_batch
+from repro.core.dtw import PNorm
 from repro.core.metrics import theorem1_bound
 from repro.index.cluster import Clustering, cluster_from_distances
 from repro.index.references import select_references
 from repro.index.triangle_lb import wide_band
+from repro.mv.dtw import dtw_batch_mv
 
 
 def db_digest(db: np.ndarray) -> str:
@@ -41,15 +42,16 @@ class TriangleIndex:
     """
 
     ref_idx: np.ndarray  # (R,) database indices of the references
-    ref_series: np.ndarray  # (R, n) the reference series themselves
+    ref_series: np.ndarray  # (R, d*n) the reference series (flattened)
     d_ref_db: np.ndarray  # (R, N) DTW^w(reference, series)
     d_ref_db_wide: np.ndarray  # (R, N) DTW^{2w}(reference, series)
     clustering: Clustering  # reps are the first C references
     w: int
     p: float  # np.inf for p = inf
-    n: int  # series length
+    n: int  # per-channel series length
     n_db: int
     digest: str = ""  # db_digest of the database the index was built on
+    d: int = 1  # channel count; distances are dependent mv DTW when > 1
 
     @property
     def n_refs(self) -> int:
@@ -74,12 +76,12 @@ class TriangleIndex:
         """Database indices of the cluster representatives (FFT prefix)."""
         return self.ref_idx[self.clustering.rep_rows]
 
-    def validate(self, n_db: int, n: int, w: int, p: PNorm) -> None:
-        got = (n_db, n, int(w), float(p))
-        want = (self.n_db, self.n, self.w, float(self.p))
+    def validate(self, n_db: int, n: int, w: int, p: PNorm, d: int = 1) -> None:
+        got = (n_db, n, int(w), float(p), int(d))
+        want = (self.n_db, self.n, self.w, float(self.p), self.d)
         if got != want:
             raise ValueError(
-                f"index built for (n_db, n, w, p)={want}, query asks {got}"
+                f"index built for (n_db, n, w, p, d)={want}, query asks {got}"
             )
 
     def validate_data(self, db) -> None:
@@ -121,23 +123,35 @@ def build_index(
     n_clusters: int | None = None,
     strategy: str = "maxmin",
     seed: int = 0,
+    d: int = 1,
 ) -> TriangleIndex:
-    """Build a triangle-inequality reference index over ``db`` (N, n)."""
+    """Build a triangle-inequality reference index over ``db``.
+
+    ``db`` is (N, n) univariate, or (N, d*n) channel-major flattened
+    multivariate with ``d > 1`` — all distances then use the dependent
+    mv DTW and ``n``/``w``/Theorem 1's constant are per channel (the
+    reuse-counting argument is over aligned (cell, channel) scalars, so
+    the constant is unchanged; DESIGN.md §3.12).
+    """
     db = np.asarray(db)
     if db.ndim != 2:
-        raise ValueError(f"db must be (N, n), got {db.shape}")
-    n_db, n = db.shape
+        raise ValueError(f"db must be (N, n) or (N, d*n), got {db.shape}")
+    d = int(d)
+    n_db, n_flat = db.shape
+    if n_flat % d:
+        raise ValueError(f"flat length {n_flat} not a multiple of d={d}")
+    n = n_flat // d
     w = int(min(int(w), n - 1))
     rng = np.random.default_rng(seed)
     ref_idx, d_ref_db = select_references(
-        db, n_refs, w, p, strategy=strategy, rng=rng
+        db, n_refs, w, p, strategy=strategy, rng=rng, d=d
     )
     # second sweep at the composed band 2w (side A/B of the bound)
     db_j = jnp.asarray(db)
     w2 = wide_band(w, n)
     d_ref_db_wide = np.stack(
         [
-            np.asarray(dtw_batch(db_j[int(i)], db_j, w2, p, powered=False))
+            np.asarray(dtw_batch_mv(db_j[int(i)], db_j, w2, p, powered=False, d=d))
             for i in ref_idx
         ]
     )
@@ -159,4 +173,5 @@ def build_index(
         n=n,
         n_db=n_db,
         digest=db_digest(db),
+        d=d,
     )

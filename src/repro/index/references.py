@@ -23,12 +23,16 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dtw import PNorm, dtw_batch
+from repro.core.dtw import PNorm
 
 
-def _ref_row(db: jnp.ndarray, ridx: int, w: int, p: PNorm) -> np.ndarray:
+def _ref_row(db: jnp.ndarray, ridx: int, w: int, p: PNorm, d: int = 1) -> np.ndarray:
     """Rooted DTW from db[ridx] to every series: one vmapped sweep."""
-    return np.asarray(dtw_batch(db[ridx], db, w, p, powered=False))
+    # deferred: repro.mv.dtw -> repro.core -> repro.index would otherwise
+    # cycle when the interpreter enters the package through repro.mv
+    from repro.mv.dtw import dtw_batch_mv
+
+    return np.asarray(dtw_batch_mv(db[ridx], db, w, p, powered=False, d=d))
 
 
 def select_references(
@@ -38,8 +42,12 @@ def select_references(
     p: PNorm = 1,
     strategy: str = "maxmin",
     rng: np.random.Generator | None = None,
+    d: int = 1,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Pick ``n_refs`` database series as references.
+
+    ``db`` rows are channel-major flattened (d*n,) when ``d > 1``;
+    distances are the dependent multivariate DTW.
 
     Returns (ref_idx (R,), d_ref_db (R, N)) with rooted distances.
     """
@@ -51,7 +59,7 @@ def select_references(
 
     if strategy == "random":
         idx = np.sort(rng.choice(n_db, size=n_refs, replace=False))
-        rows = np.stack([_ref_row(db, int(i), w, p) for i in idx])
+        rows = np.stack([_ref_row(db, int(i), w, p, d) for i in idx])
         return idx.astype(np.int64), rows
 
     if strategy != "maxmin":
@@ -62,13 +70,13 @@ def select_references(
     mean = jnp.mean(db, axis=0)
     seed = int(jnp.argmin(jnp.sum((db - mean[None, :]) ** 2, axis=1)))
     chosen = [seed]
-    rows = [_ref_row(db, seed, w, p)]
+    rows = [_ref_row(db, seed, w, p, d)]
     min_d = rows[0].copy()
     for _ in range(1, n_refs):
         min_d[np.asarray(chosen)] = -1.0  # never re-pick a reference
         nxt = int(np.argmax(min_d))
         chosen.append(nxt)
-        row = _ref_row(db, nxt, w, p)
+        row = _ref_row(db, nxt, w, p, d)
         rows.append(row)
         min_d = np.minimum(min_d, row)
     # keep FFT order: any prefix of the traversal is itself a good cover,

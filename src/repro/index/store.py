@@ -32,7 +32,7 @@ def index_arrays(index: TriangleIndex) -> dict[str, np.ndarray]:
     """Flat array dict holding the whole index (scalars in ``meta``)."""
     return {
         "meta": np.asarray(
-            [index.w, index.p, index.n, index.n_db], np.float64
+            [index.w, index.p, index.n, index.n_db, index.d], np.float64
         ),
         "digest": np.str_(index.digest),
         "ref_idx": index.ref_idx,
@@ -50,7 +50,11 @@ def index_arrays(index: TriangleIndex) -> dict[str, np.ndarray]:
 def index_from_arrays(z: Mapping) -> TriangleIndex:
     """Rebuild a ``TriangleIndex`` from the ``index_arrays`` dict (or an
     open ``.npz`` with the same keys)."""
-    w, p, n, n_db = z["meta"]
+    meta = np.asarray(z["meta"])
+    w, p, n, n_db = meta[:4]
+    # 5th slot (channel count) appeared with the mv tier; older univariate
+    # files carry a 4-slot meta and load as d = 1
+    d = int(meta[4]) if meta.shape[0] >= 5 else 1
     clustering = Clustering(
         rep_rows=z["rep_rows"],
         assign=z["assign"],
@@ -69,6 +73,7 @@ def index_from_arrays(z: Mapping) -> TriangleIndex:
         n=int(n),
         n_db=int(n_db),
         digest=str(z["digest"]) if "digest" in z else "",
+        d=d,
     )
 
 

@@ -20,6 +20,7 @@ def dtw_op(
     bounds: jax.Array | None = None,
     interpret: bool | None = None,
     depth: int | None = None,
+    d: int = 1,
 ) -> jax.Array:
     """DTW_p of query (n,) against candidates (B, n) via the TPU kernel.
 
@@ -33,6 +34,13 @@ def dtw_op(
     ``depth`` left ``None`` resolves from the active tune table
     (1 = BlockSpec staging, 2 = double-buffered row prefetch; schedule
     only, outputs bit-identical).
+
+    ``d > 1`` (channel-major flattened (B, d*n) rows) routes to the
+    dependent-DTW twin ``repro.mv.dtw.dtw_batch_mv`` — the banded
+    kernel's cell recurrence is univariate for now, and an exact value
+    always satisfies the early-abandon contract (>= bound on lanes a
+    kernel would have abandoned), so ``bounds`` is accepted but no
+    abandoning happens on the mv path.
     """
     if interpret is None:
         interpret = interpret_default()
@@ -40,6 +48,11 @@ def dtw_op(
         raise ValueError("kernel fast path supports p in {1, 2}")
     q = jnp.asarray(q, jnp.float32)
     cands = jnp.asarray(cands, jnp.float32)
+    d = int(d)
+    if d > 1:
+        from repro.mv.dtw import dtw_batch_mv
+
+        return dtw_batch_mv(q, cands, w, p, powered=powered, d=d)
     b, n = cands.shape
     if depth is None:
         depth = resolve_config("dtw", b=b, n=n).depth

@@ -15,16 +15,33 @@ def envelope_op(
     w: int,
     tile_b: int | None = None,
     interpret: bool | None = None,
+    d: int = 1,
 ) -> tuple[jax.Array, jax.Array]:
     """Batched warping envelope (U, L) of ``xs`` (B, n) via the TPU kernel.
 
     Handles sentinel padding, window-multiple rounding and batch tiling;
     the kernel itself is branch-free.  ``tile_b=None`` resolves from the
     active tune table (schedule only — outputs are identical).
+
+    ``d > 1`` treats ``xs`` as channel-major flattened (B, d*n) rows
+    (repro.mv.layout) and sweeps each length-``n`` channel segment
+    independently — the segments fold into the kernel's batch axis, so
+    the window never crosses a channel boundary and the launch schedule
+    is the univariate one at batch ``B*d``.
     """
     if interpret is None:
         interpret = interpret_default()
     xs = jnp.asarray(xs)
+    d = int(d)
+    if d > 1:
+        b, total = xs.shape
+        n = total // d
+        if tile_b is None:
+            tile_b = resolve_config("envelope", b=b, n=n, d=d).tile_b
+        u, l = envelope_op(
+            xs.reshape(b * d, n), w, tile_b=tile_b, interpret=interpret
+        )
+        return u.reshape(b, total), l.reshape(b, total)
     b, n = xs.shape
     if tile_b is None:
         tile_b = resolve_config("envelope", b=b, n=n).tile_b

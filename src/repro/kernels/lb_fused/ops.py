@@ -22,6 +22,7 @@ def lb_fused_qbatch_op(
     interpret: bool | None = None,
     depth: int | None = None,
     grid: str | None = None,
+    d: int = 1,
 ) -> tuple[jax.Array, jax.Array]:
     """Both passes of the two-pass bound in one kernel launch.
 
@@ -36,6 +37,12 @@ def lb_fused_qbatch_op(
     ``tile_b`` / ``depth`` / ``grid`` left ``None`` resolve from the
     active tune table (schedule only — outputs are bit-identical across
     every config; see DESIGN.md §3.11).
+
+    ``d > 1`` (channel-major flattened rows, per-segment envelopes)
+    composes the two query-major mv ops instead of the single fused
+    launch — pass 2's per-segment envelope does not fit the fused
+    kernel's in-VMEM projection sweep yet; results keep the fused
+    contract (``lb == lb1`` on lanes pass 1 already prunes).
     """
     if interpret is None:
         interpret = interpret_default()
@@ -45,6 +52,21 @@ def lb_fused_qbatch_op(
     qs = jnp.asarray(qs, jnp.float32)
     upper = jnp.asarray(upper, jnp.float32)
     lower = jnp.asarray(lower, jnp.float32)
+    d = int(d)
+    if d > 1:
+        from repro.kernels.lb_improved.ops import (
+            lb_improved_pass2_qbatch_op,
+        )
+        from repro.kernels.lb_keogh.ops import lb_keogh_qbatch_op
+
+        lb1, h = lb_keogh_qbatch_op(
+            cands, upper, lower, p, tile_b, interpret=interpret, d=d
+        )
+        lb2 = lb_improved_pass2_qbatch_op(
+            h, qs, w, p, tile_b, interpret=interpret, d=d
+        )
+        alive = lb1 < jnp.asarray(bounds, jnp.float32).reshape(-1, 1)
+        return lb1, jnp.where(alive, lb1 + lb2, lb1)
     b, n = cands.shape
     if tile_b is None or depth is None or grid is None:
         cfg = resolve_config("lb_fused", b=b, n=n)

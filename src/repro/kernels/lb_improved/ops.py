@@ -25,12 +25,34 @@ def lb_improved_pass2_op(
     p=1,
     tile_b: int | None = None,
     interpret: bool | None = None,
+    d: int = 1,
 ) -> jax.Array:
     """Second term of Corollary 4: LB_Keogh(q, H)^p for projections h (B, n).
-    ``tile_b=None`` resolves from the active tune table."""
+    ``tile_b=None`` resolves from the active tune table.
+
+    ``d > 1``: ``h`` is channel-major flattened (B, d*n) and ``q``
+    (d*n,).  Pass 2's envelope must not cross channel boundaries, so
+    the channels fold into a query axis — one kernel launch computes
+    every per-channel term and the channel sum is taken outside
+    (DESIGN.md §3.12).
+    """
     if interpret is None:
         interpret = interpret_default()
     h = jnp.asarray(h)
+    d = int(d)
+    if d > 1:
+        b, total = h.shape
+        n = total // d
+        # channels become query lanes: (d, B, n) projections against
+        # (d, n) query segments -> (d, B) per-channel terms, summed
+        h_ch = h.reshape(b, d, n).swapaxes(0, 1)
+        q_ch = jnp.asarray(q).reshape(d, n)
+        lb2 = lb_improved_pass2_qbatch_op(
+            h_ch, q_ch, w, p, tile_b=tile_b, interpret=interpret
+        )
+        if p == jnp.inf:
+            return jnp.max(lb2, axis=0)
+        return jnp.sum(lb2, axis=0)
     b, n = h.shape
     if tile_b is None:
         tile_b = resolve_config("lb_improved", b=b, n=n).tile_b
@@ -60,12 +82,18 @@ def lb_improved_op(
     p=1,
     interpret: bool | None = None,
     tile_b: int | None = None,
+    d: int = 1,
 ) -> jax.Array:
     """Full powered LB_Improved for a candidate batch, kernel end to end:
     pass 1 (fused clamp-project-accumulate) feeds its projection straight
-    into pass 2 (fused envelope-accumulate)."""
-    lb1, h = lb_keogh_op(cands, upper, lower, p, tile_b, interpret=interpret)
-    lb2 = lb_improved_pass2_op(h, q, w, p, tile_b, interpret=interpret)
+    into pass 2 (fused envelope-accumulate).  ``d > 1`` takes
+    channel-major flattened rows and per-segment envelopes."""
+    lb1, h = lb_keogh_op(
+        cands, upper, lower, p, tile_b, interpret=interpret, d=d
+    )
+    lb2 = lb_improved_pass2_op(h, q, w, p, tile_b, interpret=interpret, d=d)
+    if p == jnp.inf:
+        return jnp.maximum(lb1, lb2)
     return lb1 + lb2
 
 
@@ -79,13 +107,34 @@ def lb_improved_pass2_qbatch_op(
     p=1,
     tile_b: int | None = None,
     interpret: bool | None = None,
+    d: int = 1,
 ) -> jax.Array:
     """Corollary 4 second term for per-(query, candidate) projections
     h (Q, B, n) against queries (Q, n) -> (Q, B) (DESIGN.md §3.4).
-    ``tile_b=None`` resolves from the active tune table."""
+    ``tile_b=None`` resolves from the active tune table.
+
+    ``d > 1``: channel-major flattened inputs (h (Q, B, d*n), qs
+    (Q, d*n)); each channel folds into the query axis so the envelope
+    stays inside its segment, and the per-channel terms are summed
+    (maxed at p = inf) outside the launch (DESIGN.md §3.12).
+    """
     if interpret is None:
         interpret = interpret_default()
     h = jnp.asarray(h)
+    d = int(d)
+    if d > 1:
+        nq, b, total = h.shape
+        n = total // d
+        h_ch = (
+            h.reshape(nq, b, d, n).transpose(0, 2, 1, 3).reshape(nq * d, b, n)
+        )
+        qs_ch = jnp.asarray(qs).reshape(nq * d, n)
+        lb2 = lb_improved_pass2_qbatch_op(
+            h_ch, qs_ch, w, p, tile_b=tile_b, interpret=interpret
+        ).reshape(nq, d, b)
+        if p == jnp.inf:
+            return jnp.max(lb2, axis=1)
+        return jnp.sum(lb2, axis=1)
     nq, b, n = h.shape
     if tile_b is None:
         tile_b = resolve_config("lb_improved", b=b, n=n).tile_b
@@ -117,13 +166,22 @@ def lb_improved_qbatch_op(
     p=1,
     interpret: bool | None = None,
     tile_b: int | None = None,
+    d: int = 1,
 ) -> jax.Array:
     """Full powered LB_Improved for candidates (B, n) against a query
     batch (Q, n) -> (Q, B), kernel end to end: the query-major pass 1
     emits a (Q, B, n) projection stack that feeds straight into the
-    query-major pass 2 — one launch per pass for the whole batch."""
-    lb1, h = lb_keogh_qbatch_op(cands, upper, lower, p, tile_b, interpret=interpret)
-    lb2 = lb_improved_pass2_qbatch_op(h, qs, w, p, tile_b, interpret=interpret)
+    query-major pass 2 — one launch per pass for the whole batch.
+    ``d > 1`` takes channel-major flattened rows and per-segment
+    envelopes."""
+    lb1, h = lb_keogh_qbatch_op(
+        cands, upper, lower, p, tile_b, interpret=interpret, d=d
+    )
+    lb2 = lb_improved_pass2_qbatch_op(
+        h, qs, w, p, tile_b, interpret=interpret, d=d
+    )
+    if p == jnp.inf:
+        return jnp.maximum(lb1, lb2)
     return lb1 + lb2
 
 

@@ -21,15 +21,23 @@ def lb_keogh_op(
     p=1,
     tile_b: int | None = None,
     interpret: bool | None = None,
+    d: int = 1,
 ) -> tuple[jax.Array, jax.Array]:
     """Powered LB_Keogh + projection H for a candidate batch (B, n).
-    ``tile_b=None`` resolves from the active tune table."""
+    ``tile_b=None`` resolves from the active tune table.
+
+    The clamp-and-reduce is flatten-invariant, so channel-major (B, d*n)
+    multivariate rows with per-segment envelopes ride the exact same
+    kernel — ``d`` only keys the tune-table bucket (DESIGN.md §3.12).
+    """
     if interpret is None:
         interpret = interpret_default()
     cands = jnp.asarray(cands)
     b, n = cands.shape
     if tile_b is None:
-        tile_b = resolve_config("lb_keogh", b=b, n=n).tile_b
+        tile_b = resolve_config(
+            "lb_keogh", b=b, n=n // max(int(d), 1), d=d
+        ).tile_b
     bp = round_up(b, tile_b)
     if bp != b:
         cands = jnp.pad(cands, ((0, bp - b), (0, 0)))
@@ -44,10 +52,16 @@ def lb_keogh_qbatch_op(
     p=1,
     tile_b: int | None = None,
     interpret: bool | None = None,
+    d: int = 1,
 ) -> tuple[jax.Array, jax.Array]:
     """Query-major LB_Keogh: candidates (B, n) vs envelopes (Q, n) ->
     (lb (Q, B), H (Q, B, n)) in one launch (DESIGN.md §3.4).
-    ``tile_b=None`` resolves from the active tune table."""
+    ``tile_b=None`` resolves from the active tune table.
+
+    Flatten-invariant like :func:`lb_keogh_op`: channel-major (B, d*n)
+    rows with per-segment (Q, d*n) envelopes need no kernel change;
+    ``d`` only keys the tune-table bucket.
+    """
     if interpret is None:
         interpret = interpret_default()
     cands = jnp.asarray(cands)
@@ -55,7 +69,9 @@ def lb_keogh_qbatch_op(
     lower = jnp.asarray(lower)
     b, n = cands.shape
     if tile_b is None:
-        tile_b = resolve_config("lb_keogh", b=b, n=n).tile_b
+        tile_b = resolve_config(
+            "lb_keogh", b=b, n=n // max(int(d), 1), d=d
+        ).tile_b
     bp = round_up(b, tile_b)
     if bp != b:
         cands = jnp.pad(cands, ((0, bp - b), (0, 0)))

@@ -17,6 +17,7 @@ def lb_kim_qbatch_op(
     p=1,
     tile_b: int | None = None,
     interpret: bool | None = None,
+    d: int = 1,
 ) -> jax.Array:
     """Query-major powered LB_Kim: candidates (B, n) vs queries (Q, n)
     -> lb (Q, B) in one launch (DESIGN.md §3.4).
@@ -26,6 +27,12 @@ def lb_kim_qbatch_op(
     ``tile_b`` internally; pad lanes ride through masked-dead and are
     sliced off before returning.  ``tile_b=None`` resolves from the
     active tune table.
+
+    On channel-major flattened (B, d*n) rows the verbatim corner
+    compare stays a sound mv bound: each flattened endpoint is one
+    channel's endpoint, whose local cost lower-bounds the channel-summed
+    cost of the warping path's corner cell (DESIGN.md §3.12) — so ``d``
+    only keys the tune-table bucket.
     """
     if interpret is None:
         interpret = interpret_default()
@@ -33,7 +40,9 @@ def lb_kim_qbatch_op(
     qs = jnp.asarray(qs)
     b, n = cands.shape
     if tile_b is None:
-        tile_b = resolve_config("lb_kim", b=b, n=n).tile_b
+        tile_b = resolve_config(
+            "lb_kim", b=b, n=n // max(int(d), 1), d=d
+        ).tile_b
     nq = qs.shape[0]
     if mask is None:
         mask_f = jnp.ones((nq, b), cands.dtype)

@@ -82,12 +82,21 @@ def _pow2_at_least(x: int) -> int:
     return p
 
 
-def shape_bucket(b: int | None = None, n: int | None = None) -> str:
+def shape_bucket(
+    b: int | None = None, n: int | None = None, d: int | None = None
+) -> str:
     """Bucket key for a (candidate-batch, series-length) shape: next
-    powers of two, so e.g. (200, 100) and (256, 128) share an entry."""
+    powers of two, so e.g. (200, 100) and (256, 128) share an entry.
+
+    Multivariate shapes (``d > 1``) get a ``d`` suffix; ``d`` of ``None``
+    or 1 emits the legacy two-axis key, so the checked-in univariate
+    defaults (and every pre-mv persisted table) keep resolving unchanged.
+    """
     bb = "*" if b is None else str(_pow2_at_least(max(int(b), 1)))
     nn = "*" if n is None else str(_pow2_at_least(max(int(n), 1)))
-    return f"b{bb}n{nn}"
+    if d is None or int(d) == 1:
+        return f"b{bb}n{nn}"
+    return f"b{bb}n{nn}d{_pow2_at_least(max(int(d), 1))}"
 
 
 def search_space(family: str) -> tuple[KernelConfig, ...]:

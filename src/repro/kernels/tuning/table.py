@@ -71,19 +71,25 @@ class TuneTable:
         b: int | None = None,
         n: int | None = None,
         backend: str | None = None,
+        d: int | None = None,
     ) -> KernelConfig:
-        """Most-specific entry for ``family`` at shape ``(b, n)``, falling
-        back to the pre-tuning literals when nothing matches."""
+        """Most-specific entry for ``family`` at shape ``(b, n[, d])``,
+        falling back to the pre-tuning literals when nothing matches.
+        Multivariate shapes try their ``d``-suffixed bucket first and
+        fall through to the univariate bucket, so untuned channel counts
+        inherit the univariate schedule."""
         if family not in FAMILIES:
             raise ValueError(f"unknown kernel family {family!r}; known: {FAMILIES}")
         backend = _default_backend() if backend is None else backend
-        bucket = shape_bucket(b, n)
-        for key in (
-            (family, backend, bucket),
-            (family, backend, "*"),
-            (family, "*", bucket),
-            (family, "*", "*"),
-        ):
+        buckets = [shape_bucket(b, n, d)]
+        legacy = shape_bucket(b, n)
+        if legacy != buckets[0]:
+            buckets.append(legacy)
+        keys = [(family, backend, bucket) for bucket in buckets]
+        keys.append((family, backend, "*"))
+        keys += [(family, "*", bucket) for bucket in buckets]
+        keys.append((family, "*", "*"))
+        for key in keys:
             cfg = self.entries.get(key)
             if cfg is not None:
                 return cfg
@@ -197,6 +203,7 @@ def resolve_config(
     b: int | None = None,
     n: int | None = None,
     backend: str | None = None,
+    d: int | None = None,
 ) -> KernelConfig:
     """Resolve one kernel family's schedule from the active table."""
-    return _ACTIVE.resolve(family, b=b, n=n, backend=backend)
+    return _ACTIVE.resolve(family, b=b, n=n, backend=backend, d=d)

@@ -1,0 +1,86 @@
+"""Multivariate (d-channel) DTW tier — dependent DTW + channel-aware bounds.
+
+The whole subsystem works on a single storage convention, the
+**channel-major flattened layout**: a d-channel series of per-channel
+length n is stored as one flat row of length ``d * n`` holding the d
+contiguous length-n channel segments ``[ch0 | ch1 | ... | ch(d-1)]``
+(``repro.mv.layout``).  The payoff is structural:
+
+* d = 1 flattened data is *byte-identical* to the univariate layout, so
+  every d = 1 code path specializes to today's exact univariate code
+  and results stay bit-identical (tests/test_mv_parity.py pins this);
+* the block/top-k/masking machinery of the drivers is untouched — a
+  candidate row is still one flat vector;
+* elementwise + last-axis-reduce bounds (LB_Keogh's clamp/sum, LB_Kim's
+  corner terms) run **verbatim** on flattened rows and are channel-summed
+  by construction — only envelope *construction* must respect channel
+  segment boundaries (``repro.mv.envelope``).
+
+Dependent-DTW semantics (``repro.mv.dtw``): one shared warping path for
+all channels, cell cost = sum over channels of ``|x_ch[i] - y_ch[j]|^p``
+(max over channels at p = inf) — i.e. the l_p norm over all aligned
+(cell, channel) scalar pairs, which reduces exactly to univariate DTW_p
+at d = 1.
+
+``repro.mv.tc`` holds the two TC-DTW pruning bounds registered as
+pipeline stages (``tc_box``, ``tc_tri``) — see DESIGN.md §3.12 for the
+derivations and soundness arguments.
+"""
+
+# Initialize repro.core first: core.pipeline imports the mv stage
+# modules, so entering the package graph through repro.mv would
+# otherwise start loading repro.mv.dtw, re-enter it half-initialized
+# via core -> pipeline -> index, and die on a circular import.  Forcing
+# repro.core here replays the import order every other entry point uses.
+import repro.core  # noqa: F401  (import order, not a name dependency)
+
+from repro.mv.dtw import (
+    dtw_banded_early_mv,
+    dtw_banded_mv,
+    dtw_batch_mv,
+    dtw_qbatch_mv,
+    dtw_reference_mv,
+)
+from repro.mv.envelope import envelope_batch_mv, envelope_mv
+from repro.mv.layout import (
+    flatten_channels,
+    num_channels,
+    unflatten_channels,
+)
+from repro.mv.lb import (
+    envelope_of_envelopes_mv,
+    lb_improved_mv_powered_qbatch,
+    lb_keogh_mv_powered,
+    lb_kim_mv_powered,
+    lb_webb_mv_powered_qbatch,
+)
+from repro.mv.tc import (
+    TC_BOX_SEGMENTS,
+    tc_box_powered_pair,
+    tc_box_powered_qbatch,
+    tc_tri_powered_pair,
+    tc_tri_powered_qbatch,
+)
+
+__all__ = [
+    "TC_BOX_SEGMENTS",
+    "dtw_banded_early_mv",
+    "dtw_banded_mv",
+    "dtw_batch_mv",
+    "dtw_qbatch_mv",
+    "dtw_reference_mv",
+    "envelope_batch_mv",
+    "envelope_mv",
+    "envelope_of_envelopes_mv",
+    "flatten_channels",
+    "lb_improved_mv_powered_qbatch",
+    "lb_keogh_mv_powered",
+    "lb_kim_mv_powered",
+    "lb_webb_mv_powered_qbatch",
+    "num_channels",
+    "tc_box_powered_pair",
+    "tc_box_powered_qbatch",
+    "tc_tri_powered_pair",
+    "tc_tri_powered_qbatch",
+    "unflatten_channels",
+]

@@ -1,0 +1,47 @@
+"""Per-channel Lemire/vHGW envelopes on channel-major flattened rows.
+
+The **only** operation the flattened layout cannot run verbatim is
+envelope construction: a sliding window that crossed a channel-segment
+boundary would mix samples of different channels, producing an envelope
+that is no valid warping envelope for either.  So the mv envelope is the
+univariate vectorized ``envelope_batch`` applied to the ``(B*d, n)``
+segment view — every channel segment becomes one batch row — and
+reshaped back.  Downstream, the elementwise clamp/sum bounds
+(``lb_keogh_powered`` & friends) then run on the flattened arrays
+unchanged: summing the per-position powered distances over the full
+``d*n`` axis *is* the channel-summed multivariate bound (max over the
+axis at p = inf is the channel-max bound).  See DESIGN.md §3.12.
+
+d = 1 dispatches to ``envelope_batch`` directly, so univariate callers
+and the d = 1 mv path execute the identical program.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.envelope import envelope_batch
+
+
+def envelope_batch_mv(
+    xs: jax.Array, w: int, d: int = 1
+) -> tuple[jax.Array, jax.Array]:
+    """(B, d*n) flattened rows -> per-channel (U, L), each (B, d*n).
+
+    ``w`` is clamped per channel (to n - 1, not d*n - 1) by the reshape:
+    each length-n segment is enveloped as its own series.
+    """
+    if d == 1:
+        return envelope_batch(xs, w)
+    b, total = xs.shape
+    if total % d:
+        raise ValueError(f"flat length {total} not a multiple of d={d}")
+    n = total // d
+    u, lo = envelope_batch(xs.reshape(b * d, n), w)
+    return u.reshape(b, total), lo.reshape(b, total)
+
+
+def envelope_mv(x: jax.Array, w: int, d: int = 1) -> tuple[jax.Array, jax.Array]:
+    """Single flattened row (d*n,) -> per-channel (U, L), each (d*n,)."""
+    u, lo = envelope_batch_mv(x[None, :], w, d)
+    return u[0], lo[0]

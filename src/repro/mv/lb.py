@@ -1,0 +1,153 @@
+"""Channel-summed LB_Kim / LB_Keogh / LB_Improved / LB_Webb (powered).
+
+Soundness, channel-wise sandwich argument (DESIGN.md §3.12): for the
+dependent DTW of ``repro.mv.dtw`` the warping path is shared, so for
+each channel ch the scalar pair alignment is a *valid univariate
+w-banded path* for (x_ch, y_ch).  Hence every univariate lower bound
+LB(x_ch, y_ch) <= DTW_p^w(x_ch, y_ch)^p holds per channel, and because
+the dependent powered cost is the channel *sum* of per-channel powered
+path costs (channel max at p = inf),
+
+    sum_ch LB_ch <= sum_ch DTW-cost_ch = DTW-cost_mv      (finite p)
+    max_ch LB_ch <= max_ch DTW-cost_ch = DTW-cost_mv      (p = inf).
+
+On the channel-major flattened layout the channel sum/max is just the
+ordinary last-axis reduction, so:
+
+* **LB_Keogh** — ``lb_keogh_powered`` runs *verbatim* on flattened rows,
+  provided the envelopes were built per channel segment
+  (``repro.mv.envelope``).  The same holds for the box bound.
+* **LB_Kim** — runs verbatim on flattened rows with no mv adjustment at
+  all: the first flat element is channel 0 at t=0, whose cost term
+  lower-bounds cell (0,0)'s channel-summed cost; the last flat element
+  is channel d-1 at t=n-1 (cell (n-1, n-1)); and each global flat
+  extremum lower-bounds *some* aligned cell via the channel it occurs
+  in.  The combine structure (first+last add, extrema join by max) is
+  unchanged.
+* **LB_Improved / LB_Webb** — the extra pass is LB_Keogh against a
+  derived envelope, so the distance arithmetic is again verbatim; only
+  the envelope(-of-envelope) sweeps move to the per-segment form.
+
+All functions dispatch to the literal univariate implementation at
+d = 1, keeping the d = 1 program bit-identical.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dtw import PNorm, elem_cost
+from repro.core import lb as lb_mod
+from repro.mv.envelope import envelope_batch_mv
+
+
+def lb_keogh_mv_powered(
+    c: jax.Array, upper: jax.Array, lower: jax.Array, p: PNorm = 1
+) -> jax.Array:
+    """Channel-summed powered LB_Keogh on flattened rows — the univariate
+    clamp/reduce verbatim (the envelopes must be per-segment)."""
+    return lb_mod.lb_keogh_powered(c, upper, lower, p)
+
+
+def lb_kim_mv_powered(c: jax.Array, q: jax.Array, p: PNorm = 1) -> jax.Array:
+    """Powered LB_Kim on flattened rows — sound without mv adjustment
+    (module docstring), so this is the univariate form verbatim."""
+    return lb_mod.lb_kim_powered(c, q, p)
+
+
+def envelope_of_envelopes_mv(
+    upper: jax.Array, lower: jax.Array, w: int, d: int = 1
+) -> tuple[jax.Array, jax.Array]:
+    """(UL, LU) for LB_Webb's correction, per channel segment.
+
+    Accepts (d*n,) or batched (Q, d*n) per-segment envelopes; d = 1 is
+    the univariate ``envelope_of_envelopes`` verbatim.
+    """
+    if d == 1:
+        return lb_mod.envelope_of_envelopes(upper, lower, w)
+    single = upper.ndim == 1
+    u2 = upper[None, :] if single else upper
+    l2 = lower[None, :] if single else lower
+    ul = envelope_batch_mv(l2, w, d)[0]  # upper envelope of L
+    lu = envelope_batch_mv(u2, w, d)[1]  # lower envelope of U
+    if single:
+        return ul[0], lu[0]
+    return ul, lu
+
+
+def lb_improved_mv_powered_qbatch(
+    cs: jax.Array,
+    qs: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    w: int,
+    p: PNorm = 1,
+    d: int = 1,
+) -> jax.Array:
+    """(B, d*n) candidates vs (Q, d*n) queries -> (Q, B) powered two-pass
+    bounds.  Identical op sequence to ``lb_improved_powered_qbatch``
+    except the pass-2 envelope of the projection is per channel segment."""
+    if d == 1:
+        return lb_mod.lb_improved_powered_qbatch(cs, qs, upper, lower, w, p)
+    nq, total = qs.shape
+    b = cs.shape[0]
+    pass1 = lb_mod.lb_keogh_powered_qbatch(cs, upper, lower, p)
+    h = lb_mod.project(cs[None, :, :], upper[:, None, :], lower[:, None, :])
+    hu, hl = envelope_batch_mv(h.reshape(nq * b, total), w, d)
+    hu = hu.reshape(nq, b, total)
+    hl = hl.reshape(nq, b, total)
+    dd = elem_cost(
+        jnp.maximum(qs[:, None, :] - hu, 0.0)
+        + jnp.maximum(hl - qs[:, None, :], 0.0),
+        p,
+    )
+    pass2 = jnp.max(dd, axis=-1) if p == jnp.inf else jnp.sum(dd, axis=-1)
+    if p == jnp.inf:
+        return jnp.maximum(pass1, pass2)
+    return pass1 + pass2
+
+
+def lb_webb_mv_powered_qbatch(
+    cs: jax.Array,
+    qs: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    w: int,
+    p: PNorm = 1,
+    d: int = 1,
+    q_ul: jax.Array | None = None,
+    q_lu: jax.Array | None = None,
+    cand_u: jax.Array | None = None,
+    cand_l: jax.Array | None = None,
+) -> jax.Array:
+    """(B, d*n) candidates vs (Q, d*n) queries -> (Q, B) powered LB_Webb.
+
+    The Webb charging argument is per (path cell, channel) scalar pair,
+    so the per-channel query-side terms sum exactly like LB_Keogh's —
+    the univariate ``_webb_qside`` arithmetic runs verbatim once the
+    candidate envelopes and the envelopes-of-envelopes are per-segment.
+    """
+    if d == 1:
+        return lb_mod.lb_webb_powered_qbatch(
+            cs, qs, upper, lower, w, p,
+            q_ul=q_ul, q_lu=q_lu, cand_u=cand_u, cand_l=cand_l,
+        )
+    pass1 = lb_mod.lb_keogh_powered_qbatch(cs, upper, lower, p)
+    if cand_u is None or cand_l is None:
+        cand_u, cand_l = envelope_batch_mv(cs, w, d)
+    if p == jnp.inf:
+        q_ul = q_lu = jnp.zeros_like(qs)  # unused under max-combine
+    elif q_ul is None or q_lu is None:
+        q_ul, q_lu = envelope_of_envelopes_mv(upper, lower, w, d)
+    qside = lb_mod._webb_qside(
+        qs[:, None, :],
+        cand_u[None, :, :],
+        cand_l[None, :, :],
+        q_ul[:, None, :],
+        q_lu[:, None, :],
+        p,
+    )
+    if p == jnp.inf:
+        return jnp.maximum(pass1, qside)
+    return pass1 + qside

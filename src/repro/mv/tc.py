@@ -1,0 +1,162 @@
+"""TC-DTW pruning bounds: the coarse envelope box and the triangle stage.
+
+Two admissible filters from "TC-DTW: Accelerating Multivariate Dynamic
+Time Warping Through Triangle Inequality and Point Clustering", adapted
+to this repo's powered-threshold cascade (derivations: DESIGN.md §3.12).
+
+**tc_box** — point-clustering / coarse-quantized envelope box.  Split
+each channel's time axis into S coarse segments.  For a candidate c and
+segment [a, b) of channel ch, let ``cmin``/``cmax`` bound the candidate
+samples and ``Umax = max U``, ``Lmin = min L`` bound the query envelope
+over the segment.  Every per-position envelope distance then satisfies
+
+    max(0, c_i - U_i, L_i - c_i) >= g := max(0, cmin - Umax, Lmin - cmax)
+
+(because c_i >= cmin, U_i <= Umax, L_i >= Lmin, c_i <= cmax), so the
+powered LB_Keogh sum over the segment is >= (b - a) * g^p (>= g at
+p = inf), and summing segments (max at inf) gives
+
+    tc_box <= LB_Keogh_mv <= DTW_mv     (powered domain).
+
+The point is cost shape: tc_box reduces each (query, candidate, segment)
+to four scalars, O(d*S) work per lane after O(n*d) shared reductions —
+an order cheaper than the O(n*d) per-lane LB_Keogh it gates, the same
+coarse-before-fine economics TC-DTW's quantized envelopes buy.
+
+**tc_tri** — the banded triangle-inequality bound of the PR 1 reference
+index, run as an *in-pipeline* stage.  Stage 0 of ``nn_search_indexed``
+already applies LB_tri against the *initial* reference-seeded bound;
+re-applying it per block inside the cascade compares against the
+*running* top-k bound, which only tightens during the sweep, so lanes
+that squeaked past stage 0 die here for O(R) arithmetic before any
+envelope work.  Theorem 1's constant ``min(2w+1, n)^(1/p)`` is unchanged
+for dependent mv DTW — the reuse-counting argument is over aligned
+(cell, channel) scalar pairs and channels add no path cells — with n
+the per-channel length.  The stage needs the reference context
+(query-to-reference and reference-to-database distances) threaded in by
+the driver; without it, it degrades to the trivial zero bound, which is
+sound and prunes nothing.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dtw import PNorm, elem_cost
+from repro.index.triangle_lb import SLACK, powered
+
+#: coarse segments per channel for tc_box — a schedule-ish constant, not
+#: a soundness knob (any segmentation is admissible).  8 keeps the
+#: per-lane work at ~4*8*d scalars while the boxes stay tight enough to
+#: fire on separated random walks.
+TC_BOX_SEGMENTS = 8
+
+
+def box_segments(n: int, s: int = TC_BOX_SEGMENTS) -> list[tuple[int, int]]:
+    """S near-equal [a, b) splits of a length-n axis (fewer when n < S)."""
+    n = int(n)
+    s = max(1, min(int(s), n))
+    bounds = [round(i * n / s) for i in range(s + 1)]
+    return [(a, b) for a, b in zip(bounds[:-1], bounds[1:]) if b > a]
+
+
+def _tc_box_impl(cs, upper, lower, p, d, segments, outer):
+    """Shared tc_box loop.  ``outer=True``: cs (B, d*n) vs envelopes
+    (Q, d*n) -> (Q, B).  ``outer=False``: lane-paired (chunk, d*n) arrays
+    -> (chunk,).  The (channel, segment) accumulation order is identical
+    in both modes, so the compacted pair form bit-matches the dense tile
+    (the per-segment reductions run over the same contiguous elements)."""
+    total = cs.shape[-1]
+    n = total // d
+    out = None
+    for ch in range(d):
+        for a, b in box_segments(n, segments):
+            sl = slice(ch * n + a, ch * n + b)
+            cmin = jnp.min(cs[..., sl], axis=-1)
+            cmax = jnp.max(cs[..., sl], axis=-1)
+            umax = jnp.max(upper[..., sl], axis=-1)
+            lmin = jnp.min(lower[..., sl], axis=-1)
+            if outer:
+                gap_lo = lmin[..., :, None] - cmax[..., None, :]
+                gap_hi = cmin[..., None, :] - umax[..., :, None]
+            else:
+                gap_lo = lmin - cmax
+                gap_hi = cmin - umax
+            g = jnp.maximum(jnp.maximum(gap_lo, gap_hi), 0.0)
+            seg = elem_cost(g, p)
+            if p != jnp.inf:
+                seg = seg * (b - a)
+            if out is None:
+                out = seg
+            elif p == jnp.inf:
+                out = jnp.maximum(out, seg)
+            else:
+                out = out + seg
+    return out
+
+
+def tc_box_powered_qbatch(
+    cs: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    p: PNorm = 1,
+    d: int = 1,
+    segments: int = TC_BOX_SEGMENTS,
+) -> jax.Array:
+    """(B, d*n) candidates vs (Q, d*n) per-segment query envelopes ->
+    (Q, B) powered box bounds (module docstring)."""
+    return _tc_box_impl(cs, upper, lower, p, d, segments, outer=True)
+
+
+def tc_box_powered_pair(
+    c: jax.Array,
+    upper: jax.Array,
+    lower: jax.Array,
+    p: PNorm = 1,
+    d: int = 1,
+    segments: int = TC_BOX_SEGMENTS,
+) -> jax.Array:
+    """Lane-paired tc_box: (chunk, d*n) candidates vs per-lane gathered
+    (chunk, d*n) envelopes -> (chunk,), bit-matching the dense form."""
+    return _tc_box_impl(c, upper, lower, p, d, segments, outer=False)
+
+
+# ----------------------------------------------------------------- tc_tri
+
+
+def tc_tri_powered_qbatch(
+    d_q_refs: jax.Array,
+    d_q_refs_wide: jax.Array,
+    d_ref_cols: jax.Array,
+    d_ref_cols_wide: jax.Array,
+    c_w,
+    p: PNorm,
+) -> jax.Array:
+    """Powered LB_tri tile: queries' reference distances (Q, R) at band
+    w / 2w against the block's gathered reference columns (R, B) ->
+    (Q, B).  Same op sequence as ``triangle_lb.lb_triangle_batch`` (both
+    mixed-band sides, clamp, SLACK, max over references) with the
+    constant as a value rather than a static, then mapped to the powered
+    threshold domain."""
+    side_a = d_q_refs_wide[..., :, None] / c_w - d_ref_cols
+    side_b = d_ref_cols_wide / c_w - d_q_refs[..., :, None]
+    lo = jnp.maximum(jnp.maximum(side_a, side_b), 0.0) * SLACK
+    return powered(jnp.max(lo, axis=-2), p)
+
+
+def tc_tri_powered_pair(
+    d_q_refs: jax.Array,
+    d_q_refs_wide: jax.Array,
+    d_ref_lanes: jax.Array,
+    d_ref_lanes_wide: jax.Array,
+    c_w,
+    p: PNorm,
+) -> jax.Array:
+    """Lane-paired LB_tri: per-lane reference distances, all (chunk, R)
+    -> (chunk,).  Elementwise ops and the (commutative, exact) max
+    reduction match the dense tile bit for bit."""
+    side_a = d_q_refs_wide / c_w - d_ref_lanes
+    side_b = d_ref_lanes_wide / c_w - d_q_refs
+    lo = jnp.maximum(jnp.maximum(side_a, side_b), 0.0) * SLACK
+    return powered(jnp.max(lo, axis=-1), p)

@@ -354,7 +354,17 @@ class QueryEngine:
         """
         db = self.db
         raw = np.asarray(query, dtype=db.config.precision)
-        if raw.ndim != 1:
+        if db.channels > 1:
+            # multivariate session: one (n, d) query per request; the
+            # prepared form below is the channel-major flattened row
+            if raw.ndim != 2:
+                raise ValueError(
+                    f"submit takes one (n, {db.channels}) query per "
+                    f"request on this {db.channels}-channel session, got "
+                    f"shape {raw.shape}; submit a batch as individual "
+                    f"requests and let the coalescer form the batch"
+                )
+        elif raw.ndim != 1:
             raise ValueError(
                 f"submit takes one (n,) query per request, got shape "
                 f"{raw.shape}; submit a batch as individual requests and "

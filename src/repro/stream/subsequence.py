@@ -53,7 +53,8 @@ import numpy as np
 from repro.core.cascade import Method
 from repro.core.dtw import PNorm
 from repro.core.pipeline import lb_stage_names, run_block_stages
-from repro.core.envelope import envelope_batch
+from repro.mv.envelope import envelope_batch_mv
+from repro.mv.layout import flatten_channels
 from repro.stream.state import STD_EPS, StreamState
 
 
@@ -128,13 +129,13 @@ def finish_np(acc: np.ndarray, p: PNorm) -> np.ndarray:
     return acc ** (1.0 / p)
 
 
-@functools.partial(jax.jit, static_argnames=("w", "p", "method"))
-def _match_block_jit(qs, upper, lower, blk, bound, mask0, w, p, method):
+@functools.partial(jax.jit, static_argnames=("w", "p", "method", "d"))
+def _match_block_jit(qs, upper, lower, blk, bound, mask0, w, p, method, d=1):
     """One window block through the shared stage pipeline (fixed
     per-template powered bound; lanes masked off by the prefilter are
     neither evaluated nor counted)."""
     return run_block_stages(
-        qs, upper, lower, w, p, method, blk, bound, mask0
+        qs, upper, lower, w, p, method, blk, bound, mask0, d=d
     )
 
 
@@ -238,13 +239,32 @@ class SubsequenceScanner:
         prefilter: bool = True,
         eps: float = STD_EPS,
         envelopes: tuple[np.ndarray, np.ndarray] | None = None,
+        d: int = 1,
     ):
-        templates = np.atleast_2d(np.asarray(templates, np.float32))
+        self.d = int(d)
+        if self.d < 1:
+            raise ValueError(f"d must be >= 1 channels, got {d}")
+        templates = np.asarray(templates, np.float32)
+        if self.d > 1:
+            # multivariate templates: (n, d) single or (Q, n, d) batch,
+            # flattened channel-major to the (Q, d*n) row layout every
+            # driver shares (DESIGN.md §3.12)
+            if templates.ndim == 2:
+                templates = templates[None]
+            if templates.ndim != 3 or templates.shape[-1] != self.d:
+                raise ValueError(
+                    f"multivariate templates must be (n, {self.d}) or "
+                    f"(Q, n, {self.d}); got shape {templates.shape}"
+                )
+            self.nq, self.n = templates.shape[0], templates.shape[1]
+            templates = np.asarray(flatten_channels(templates))
+        else:
+            templates = np.atleast_2d(templates)
+            self.nq, self.n = templates.shape
         if hop <= 0:
             raise ValueError(f"hop must be positive, got {hop}")
         if block <= 0:
             raise ValueError(f"block must be positive, got {block}")
-        self.nq, self.n = templates.shape
         self.w = int(min(w, self.n - 1))
         self.p = p
         self.hop = int(hop)
@@ -254,7 +274,11 @@ class SubsequenceScanner:
         self.prefilter = bool(prefilter)
         self.eps = float(eps)
         if znorm:
-            templates = np.stack([znorm_series(t, eps) for t in templates])
+            # per (template, channel): each channel segment of the
+            # flattened row is its own series (a no-op reshape at d=1)
+            seg = templates.reshape(self.nq * self.d, self.n)
+            seg = np.stack([znorm_series(t, eps) for t in seg])
+            templates = seg.reshape(self.nq, self.d * self.n)
         self.templates = templates
         thr = np.broadcast_to(
             np.asarray(threshold, np.float64), (self.nq,)
@@ -266,7 +290,7 @@ class SubsequenceScanner:
         # strict `lb < bound` in the shared staging must keep lb == thr
         self.gate = np.nextafter(self.thr_pow, np.float32(np.inf))
         if envelopes is None:
-            u, l = envelope_batch(jnp.asarray(templates), self.w)
+            u, l = envelope_batch_mv(jnp.asarray(templates), self.w, self.d)
         else:
             # prebuilt template envelopes (a repro.api.Database build
             # artifact): must match the post-znorm templates at band w
@@ -297,17 +321,66 @@ class SubsequenceScanner:
         return (self.block - 1) * self.hop + self.n
 
     def process_block(
-        self, state: StreamState, start0: int, n_valid: int
+        self, state, start0: int, n_valid: int
     ) -> list[Match]:
         """Evaluate windows starting at ``start0 + hop*i`` for
         ``i < n_valid`` (the rest of the block is masked padding).
-        Returns raw sub-threshold hits, exclusion not yet applied."""
+        Returns raw sub-threshold hits, exclusion not yet applied.
+
+        ``state`` is one :class:`StreamState` for univariate scanners
+        and a sequence of ``d`` channel states (pushed in lockstep) for
+        multivariate ones.
+        """
         if n_valid <= 0:
             return []
         n, hop, block = self.n, self.hop, self.block
         starts = start0 + hop * np.arange(block, dtype=np.int64)
         valid = np.arange(block) < n_valid
         avail = starts[n_valid - 1] + n - start0  # samples really present
+        if self.d == 1:
+            wins, mask0 = self._window_lanes(state, start0, avail, starts, valid)
+        else:
+            wins, mask0 = self._window_lanes_mv(
+                state, start0, avail, starts, valid
+            )
+
+        res = _match_block_jit(
+            self._qs_j,
+            self._u_j,
+            self._l_j,
+            jnp.asarray(wins),
+            self._gate_j,
+            jnp.asarray(mask0),
+            self.w,
+            self.p,
+            self.method,
+            self.d,
+        )
+        d = np.asarray(res.d)
+        masks = [np.asarray(m) for m in res.masks]
+
+        st = self.stats
+        st.n_windows += n_valid
+        for s in range(len(st.stage_names)):
+            st.stage_pruned[s] += (masks[s] & ~masks[s + 1]).sum(axis=1)
+        st.full_dtw += masks[-1].sum(axis=1)
+        st.blocks_total += 1
+        st.blocks_lb2 += int(res.need_lb2)
+        st.blocks_dtw += int(res.need_dtw)
+        st.dp_lane_work += int(res.dp_lane_work)
+        st.dp_lane_useful += int(res.dp_lane_useful)
+
+        hit = d <= self.thr_pow[:, None]
+        st.matched += hit.sum(axis=1)
+        rooted = finish_np(d.astype(np.float64), self.p)
+        out = []
+        for qi, bi in zip(*np.nonzero(hit)):
+            out.append(Match(int(qi), int(starts[bi]), float(rooted[qi, bi])))
+        return out
+
+    def _window_lanes(self, state, start0, avail, starts, valid):
+        """Univariate lane builder: (block, n) windows + S0 mask."""
+        n, hop, block = self.n, self.hop, self.block
         seg = state.view(start0, avail)
         if avail < self.span:  # tail block: pad so strides stay static
             seg = np.concatenate(
@@ -350,39 +423,79 @@ class SubsequenceScanner:
             alive0 = mask0 & (lb0 < self.gate[:, None])
             self.stats.env_pruned += (mask0 & ~alive0).sum(axis=1)
             mask0 = alive0
+        return wins, mask0
 
-        res = _match_block_jit(
-            self._qs_j,
-            self._u_j,
-            self._l_j,
-            jnp.asarray(wins),
-            self._gate_j,
-            jnp.asarray(mask0),
-            self.w,
-            self.p,
-            self.method,
-        )
-        d = np.asarray(res.d)
-        masks = [np.asarray(m) for m in res.masks]
+    def _window_lanes_mv(self, states, start0, avail, starts, valid):
+        """Multivariate lane builder: per-channel windows concatenated
+        channel-major into (block, d*n) flattened lanes.
 
-        st = self.stats
-        st.n_windows += n_valid
-        for s in range(len(st.stage_names)):
-            st.stage_pruned[s] += (masks[s] & ~masks[s + 1]).sum(axis=1)
-        st.full_dtw += masks[-1].sum(axis=1)
-        st.blocks_total += 1
-        st.blocks_lb2 += int(res.need_lb2)
-        st.blocks_dtw += int(res.need_dtw)
-        st.dp_lane_work += int(res.dp_lane_work)
-        st.dp_lane_useful += int(res.dp_lane_useful)
+        Each channel ``c`` has its own ``StreamState`` (pushed in
+        lockstep, so all share one position axis); its windows, rolling
+        z-norm stats and stream-envelope slices are extracted exactly
+        like the univariate path, then concatenated in channel order —
+        the same ``(n, d) -> (d*n,)`` layout the templates were
+        flattened to, under which the shared cascade computes the
+        dependent-DTW bounds (DESIGN.md §3.12).  The S0 prefilter stays
+        sound channel-wise: each channel's stream envelope contains the
+        window's own channel envelope, and ``envelope_prefilter`` on the
+        flattened rows is the channel-summed (p < inf) / channel-maxed
+        (p = inf) LB_Keogh.
+        """
+        if len(states) != self.d:
+            raise ValueError(
+                f"multivariate scanner needs {self.d} channel states, "
+                f"got {len(states)}"
+            )
+        n, hop, block = self.n, self.hop, self.block
+        sw = np.lib.stride_tricks.sliding_window_view
+        valid_starts = np.where(valid, starts, starts[0])
+        pad = max(self.span - avail, 0)
+        ch_wins, ch_stats = [], []
+        for st in states:
+            seg = st.view(start0, avail)
+            if pad:
+                seg = np.concatenate([seg, np.zeros(pad, seg.dtype)])
+            w_c = sw(seg, n)[::hop][:block]
+            if self.znorm:
+                mean, std = st.window_mean_std(valid_starts, n, self.eps)
+                w_c = znorm_windows(w_c, mean, std)
+                ch_stats.append((mean, std))
+            else:
+                w_c = np.ascontiguousarray(w_c)
+            ch_wins.append(w_c)
+        wins = np.concatenate(ch_wins, axis=1)
 
-        hit = d <= self.thr_pow[:, None]
-        st.matched += hit.sum(axis=1)
-        rooted = finish_np(d.astype(np.float64), self.p)
-        out = []
-        for qi, bi in zip(*np.nonzero(hit)):
-            out.append(Match(int(qi), int(starts[bi]), float(rooted[qi, bi])))
-        return out
+        mask0 = np.broadcast_to(valid[None, :], (self.nq, block)).copy()
+        if self.prefilter:
+            u_parts, l_parts = [], []
+            for ci, st in enumerate(states):
+                u_seg, l_seg = st.envelope_view(start0, avail)
+                if pad:
+                    u_seg = np.concatenate(
+                        [u_seg, np.zeros(pad, u_seg.dtype)]
+                    )
+                    l_seg = np.concatenate(
+                        [l_seg, np.zeros(pad, l_seg.dtype)]
+                    )
+                u_w = sw(u_seg, n)[::hop][:block]
+                l_w = sw(l_seg, n)[::hop][:block]
+                if self.znorm:
+                    mean, std = ch_stats[ci]
+                    u_w = ((u_w - mean[:, None]) / std[:, None]).astype(
+                        np.float32
+                    )
+                    l_w = ((l_w - mean[:, None]) / std[:, None]).astype(
+                        np.float32
+                    )
+                u_parts.append(u_w)
+                l_parts.append(l_w)
+            u_all = np.concatenate(u_parts, axis=1)
+            l_all = np.concatenate(l_parts, axis=1)
+            lb0 = envelope_prefilter(self.templates, u_all, l_all, self.p)
+            alive0 = mask0 & (lb0 < self.gate[:, None])
+            self.stats.env_pruned += (mask0 & ~alive0).sum(axis=1)
+            mask0 = alive0
+        return wins, mask0
 
 
 # ------------------------------------------------- trivial-match exclusion

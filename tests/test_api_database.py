@@ -165,22 +165,24 @@ def test_second_search_recomputes_no_database_envelopes(
 ):
     """ISSUE 5 satellite: database-side envelopes are a build artifact.
 
-    ``envelope_batch`` is monkeypatched with a shape-recording counter in
-    both the facade module (build-time calls) and the cascade module
-    (query-time calls).  Build must compute the (N_DB, n) envelopes
-    exactly once; every later ``search`` may only ever compute
-    query-shaped envelopes — the ones that genuinely depend on the query.
+    ``envelope_batch_mv`` (the channel-aware constructor every driver
+    routes through since the mv tier) is monkeypatched with a
+    shape-recording counter in both the facade module (build-time
+    calls) and the cascade module (query-time calls).  Build must
+    compute the (N_DB, n) envelopes exactly once; every later
+    ``search`` may only ever compute query-shaped envelopes — the ones
+    that genuinely depend on the query.
     """
     data, qs = problem
     calls: list[tuple[int, ...]] = []
-    real = api_db.envelope_batch
+    real_mv = api_db.envelope_batch_mv
 
-    def counting(xs, w):
+    def counting_mv(xs, w, d=1):
         calls.append(tuple(xs.shape))
-        return real(xs, w)
+        return real_mv(xs, w, d)
 
-    monkeypatch.setattr(api_db, "envelope_batch", counting)
-    monkeypatch.setattr(cascade_mod, "envelope_batch", counting)
+    monkeypatch.setattr(api_db, "envelope_batch_mv", counting_mv)
+    monkeypatch.setattr(cascade_mod, "envelope_batch_mv", counting_mv)
 
     db = Database.build(data, SearchConfig(w=W))
     db_shape = (N_DB, N)
@@ -276,10 +278,10 @@ def test_stream_reuses_cached_envelopes(monkeypatch):
 
     db = Database.build(TEMPLATES, SearchConfig(w=4, block=16))
 
-    def boom(*a, **k):  # scanner must not call envelope_batch at all
+    def boom(*a, **k):  # scanner must not build envelopes at all
         raise AssertionError("scanner recomputed template envelopes")
 
-    monkeypatch.setattr(subseq_mod, "envelope_batch", boom)
+    monkeypatch.setattr(subseq_mod, "envelope_batch_mv", boom)
     m = db.stream(threshold=2.5, hop=2)
     np.testing.assert_array_equal(np.asarray(m.scanner._u_j), db.upper)
     np.testing.assert_array_equal(np.asarray(m.scanner._l_j), db.lower)

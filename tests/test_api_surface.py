@@ -1,11 +1,13 @@
-"""Public-API surface snapshot (ISSUE 5 satellite; serve added in ISSUE 6).
+"""Public-API surface snapshot (ISSUE 5 satellite; serve added in
+ISSUE 6, the multivariate tier in ISSUE 10).
 
-``repro.api`` and ``repro.serve`` are the entry points users program
-against, so their surface — ``__all__``, the ``SearchConfig`` fields
-and defaults, every public ``Database``/``Plan`` signature, and the
-serving engine's ``QueryEngine``/``AnswerCache``/``Answer``/
-``EngineStats`` contract — is pinned against the checked-in
-``tests/api_surface_snapshot.json``.  An accidental rename, a changed
+``repro.api``, ``repro.serve`` and ``repro.mv`` are the entry points
+users program against, so their surface — ``__all__``, the
+``SearchConfig`` fields and defaults, every public
+``Database``/``Plan`` signature, the serving engine's
+``QueryEngine``/``AnswerCache``/``Answer``/``EngineStats`` contract,
+and the mv tier's layout/DTW/bound callables — is pinned against the
+checked-in ``tests/api_surface_snapshot.json``.  An accidental rename, a changed
 default, or a dropped kwarg fails CI loudly instead of breaking
 downstream callers silently.
 
@@ -47,6 +49,19 @@ PUBLIC_ENGINE_METHODS = (
     "stats",
 )
 
+#: the mv functions whose call signatures are part of the contract —
+#: the layout convention and the oracle/driver entry points callers
+#: build on directly (the rest of repro.mv.__all__ is pinned by name)
+PUBLIC_MV_SIGNATURES = (
+    "dtw_reference_mv",
+    "dtw_batch_mv",
+    "dtw_qbatch_mv",
+    "envelope_batch_mv",
+    "flatten_channels",
+    "unflatten_channels",
+    "num_channels",
+)
+
 PUBLIC_STREAM_SESSION_METHODS = (
     "push",
     "poll",
@@ -59,6 +74,7 @@ PUBLIC_STREAM_SESSION_METHODS = (
 
 def current_surface() -> dict:
     import repro.api as api
+    import repro.mv as mv
     import repro.serve as serve
 
     cfg_fields = {
@@ -101,6 +117,13 @@ def current_surface() -> dict:
                 f.name for f in dataclasses.fields(serve.EngineStats)
             ],
         },
+        "mv": {
+            "__all__": sorted(mv.__all__),
+            "signatures": {
+                name: str(inspect.signature(getattr(mv, name)))
+                for name in PUBLIC_MV_SIGNATURES
+            },
+        },
     }
 
 
@@ -121,9 +144,12 @@ def test_api_surface_matches_snapshot():
 
 def test_all_names_resolve():
     import repro.api as api
+    import repro.mv as mv
 
     for name in api.__all__:
         assert getattr(api, name, None) is not None, name
+    for name in mv.__all__:
+        assert getattr(mv, name, None) is not None, name
 
 
 if __name__ == "__main__":

@@ -24,6 +24,10 @@ from repro.core import lb as lb_mod
 from repro.core import pipeline as pipe
 from repro.core.dtw import dtw_reference
 from repro.core.envelope import envelope_batch
+from repro.mv.dtw import dtw_reference_mv
+from repro.mv.envelope import envelope_batch_mv
+from repro.mv.layout import flatten_channels
+from repro.mv.lb import envelope_of_envelopes_mv
 
 #: discovered, not listed: a new Stage registration lands here by itself
 LB_STAGE_NAMES = sorted(n for n, s in pipe.STAGES.items() if not s.exact)
@@ -111,6 +115,109 @@ def test_pair_form_matches_dense_form(stage_name, p):
     qs, cs, w = _draw(rng, znorm=False)
     ctx = _ctx(qs, w, p)
     blk = jnp.asarray(cs)
+    dense = np.asarray(stage.dense(ctx, blk))
+    prev_tile = pipe.STAGES["lb_keogh"].dense(ctx, blk)
+    qi, ci = np.divmod(np.arange(Q * B), B)
+    qi_j, ci_j = jnp.asarray(qi), jnp.asarray(ci)
+    prev = prev_tile[qi_j, ci_j]
+    bound = jnp.full((Q * B,), 1e30)
+    got = np.asarray(stage.pair(ctx, blk, qi_j, ci_j, bound, prev))
+    np.testing.assert_array_equal(got.reshape(Q, B), dense)
+
+
+# ------------------------------------------------------- multivariate sweep
+#
+# The same registry-discovered property at d > 1 (DESIGN.md §3.12):
+# every registered stage, fed channel-major flattened rows and
+# per-segment envelopes through a d-aware PipeContext, must lower-bound
+# the dependent multivariate DTW — checked against the O(n^2 d) float64
+# numpy oracle.  ``tc_tri`` degrades to the (sound) zero bound here
+# because no reference context is threaded; the indexed driver's own
+# tests cover its non-trivial path.
+
+D_MV = 3
+
+
+def _znorm_rows_mv(x):
+    """Per-(row, channel) z-normalization of (R, n, d) stacks."""
+    mean = x.mean(axis=1, keepdims=True)
+    std = np.maximum(x.std(axis=1, keepdims=True), 1e-8)
+    return (x - mean) / std
+
+
+def _draw_mv(rng, znorm):
+    """One random mv problem: channel-minor stacks + flattened twins."""
+    n = int(rng.integers(8, 33))
+    w = int(rng.integers(0, n // 2 + 1))
+    qs = rng.standard_normal((Q, n, D_MV))
+    cs = rng.standard_normal((B, n, D_MV))
+    cs[0] = qs[0] + 0.01 * rng.standard_normal((n, D_MV))
+    cs[1] = qs[-1]  # exact duplicate across every channel
+    if znorm:
+        qs, cs = _znorm_rows_mv(qs), _znorm_rows_mv(cs)
+    qs = qs.astype(np.float32)
+    cs = cs.astype(np.float32)
+    qf = np.asarray(flatten_channels(qs))
+    cf = np.asarray(flatten_channels(cs))
+    return qs, cs, qf, cf, w
+
+
+def _ctx_mv(qf, w, p):
+    """A d-aware PipeContext over flattened queries, every field filled."""
+    u, l = envelope_batch_mv(jnp.asarray(qf), w, D_MV)
+    q_ul, q_lu = envelope_of_envelopes_mv(u, l, w, D_MV)
+    return pipe.PipeContext(jnp.asarray(qf), u, l, w, p, q_ul, q_lu, d=D_MV)
+
+
+def _powered_ref_mv(q, c, w, p):
+    ref = dtw_reference_mv(q, c, w, p)  # rooted; takes channel-minor (n, d)
+    return ref if p in (1, np.inf) else ref**p
+
+
+@pytest.mark.parametrize("znorm", [False, True], ids=["raw", "znorm"])
+@pytest.mark.parametrize("p", [1, 2, np.inf], ids=["p1", "p2", "pinf"])
+@pytest.mark.parametrize("stage_name", LB_STAGE_NAMES)
+def test_every_registered_stage_is_a_lower_bound_mv(stage_name, p, znorm):
+    stage = pipe.STAGES[stage_name]
+    seed = abs(hash(("mv", stage_name, str(p), znorm))) % 2**32
+    rng = np.random.default_rng(seed)
+    for _ in range(N_TRIALS):
+        qs, cs, qf, cf, w = _draw_mv(rng, znorm)
+        vals = np.asarray(stage.dense(_ctx_mv(qf, w, p), jnp.asarray(cf)))
+        for i in range(Q):
+            for j in range(B):
+                ref = _powered_ref_mv(qs[i], cs[j], w, p)
+                eps = 1e-4 * max(1.0, abs(ref))
+                assert vals[i, j] <= ref + eps, (
+                    f"{stage_name} is not an mv lower bound: "
+                    f"lb={vals[i, j]} > dtw={ref} "
+                    f"(p={p}, w={w}, n={qs.shape[1]}, d={D_MV}, "
+                    f"znorm={znorm})"
+                )
+
+
+@pytest.mark.parametrize("p", [1, 2, np.inf], ids=["p1", "p2", "pinf"])
+@pytest.mark.parametrize("stage_name", EXACT_STAGE_NAMES)
+def test_exact_stage_matches_reference_mv(stage_name, p):
+    stage = pipe.STAGES[stage_name]
+    rng = np.random.default_rng(7)
+    qs, cs, qf, cf, w = _draw_mv(rng, znorm=False)
+    vals = np.asarray(stage.dense(_ctx_mv(qf, w, p), jnp.asarray(cf)))
+    for i in range(Q):
+        for j in range(B):
+            ref = _powered_ref_mv(qs[i], cs[j], w, p)
+            np.testing.assert_allclose(vals[i, j], ref, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("p", [1, 2, np.inf], ids=["p1", "p2", "pinf"])
+@pytest.mark.parametrize("stage_name", LB_STAGE_NAMES)
+def test_pair_form_matches_dense_form_mv(stage_name, p):
+    """The drivers' bit-match contract, multivariate edition."""
+    stage = pipe.STAGES[stage_name]
+    rng = np.random.default_rng(11)
+    _, _, qf, cf, w = _draw_mv(rng, znorm=False)
+    ctx = _ctx_mv(qf, w, p)
+    blk = jnp.asarray(cf)
     dense = np.asarray(stage.dense(ctx, blk))
     prev_tile = pipe.STAGES["lb_keogh"].dense(ctx, blk)
     qi, ci = np.divmod(np.arange(Q * B), B)

@@ -1,0 +1,491 @@
+"""Multivariate tier exactness (DESIGN.md §3.12).
+
+The mv subsystem's contract is the same as the univariate one, lifted
+to d channels under dependent DTW: every driver — scan, host, indexed,
+sharded, stream — must return exactly what a naive per-pair
+``dtw_reference_mv`` scan returns, for p in {1, 2, inf} with and
+without per-(row, channel) z-normalization.  The banded/early device
+twins are pinned to the O(n^2 d) float64 oracle, the TC-DTW box bound
+to its LB_Keogh <= DTW sandwich, and the session facade (build / save /
+load / serve) to the driver results.
+"""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from helpers import run_in_subprocess
+
+from repro.api import Database, SearchConfig
+from repro.core.dtw import dtw_reference
+from repro.core.envelope import envelope_batch
+from repro.mv.dtw import (
+    dtw_banded_diag_mv,
+    dtw_banded_early_mv,
+    dtw_banded_mv,
+    dtw_batch_mv,
+    dtw_qbatch_mv,
+    dtw_reference_mv,
+)
+from repro.mv.envelope import envelope_batch_mv
+from repro.mv.layout import (
+    channel_segments,
+    flatten_channels,
+    num_channels,
+    unflatten_channels,
+)
+from repro.mv.lb import lb_keogh_mv_powered
+from repro.mv.tc import tc_box_powered_qbatch
+
+D = 3
+N_DB, N_LEN, W = 24, 20, 3
+NQ = 3
+P_IDS = ["p1", "p2", "pinf"]
+P_VALUES = [1, 2, np.inf]
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _fresh_compile_caches():
+    """Drop the jit caches accumulated by the rest of tier-1 before the
+    mv sweeps start.  This module compiles every driver and method at
+    d = 3 on top of hundreds of prior tests' executables; on a
+    single-core container that pushes the process over the mmap budget
+    and XLA's compiler segfaults (the same failure mode
+    tests/test_tuning.py guards against).  Clearing first keeps the
+    module hermetic and the whole suite inside the limit."""
+    import jax
+
+    jax.clear_caches()
+
+
+def _mv_data(seed=0, n_db=N_DB, n=N_LEN, nq=NQ, d=D):
+    rng = np.random.default_rng(seed)
+    db = np.cumsum(rng.normal(size=(n_db, n, d)), axis=1).astype(np.float32)
+    qs = np.cumsum(rng.normal(size=(nq, n, d)), axis=1).astype(np.float32)
+    if nq > 1:
+        # a near-duplicate query: the regime where a wrong bound flips top-k
+        qs[1] = db[5] + 0.01 * rng.normal(size=(n, d)).astype(np.float32)
+    return db, qs
+
+
+def _oracle_matrix(prep_q, prep_db, w, p, d):
+    """(Q, N) rooted distances via the numpy oracle on prepared rows."""
+    uq = np.asarray(unflatten_channels(prep_q, d))
+    uc = np.asarray(unflatten_channels(prep_db, d))
+    return np.array(
+        [[dtw_reference_mv(q, c, w, p) for c in uc] for q in uq]
+    )
+
+
+# --------------------------------------------------------------- layout
+
+
+def test_layout_roundtrip():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(5, 11, D)).astype(np.float32)
+    flat = np.asarray(flatten_channels(x))
+    assert flat.shape == (5, D * 11)
+    # channel-major: d contiguous per-channel segments per row
+    for ch in range(D):
+        np.testing.assert_array_equal(
+            flat[:, ch * 11 : (ch + 1) * 11], x[:, :, ch]
+        )
+    np.testing.assert_array_equal(np.asarray(unflatten_channels(flat, D)), x)
+    segs = channel_segments(flat, D)
+    assert np.asarray(segs).shape == (5, D, 11)
+    assert num_channels(x) == D
+
+
+def test_flatten_d1_is_identity():
+    """(N, n, 1) flattens to the byte-identical univariate rows — the
+    structural basis of the d = 1 bit-identity guarantee."""
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(4, 9)).astype(np.float32)
+    flat = np.asarray(flatten_channels(x[:, :, None]))
+    np.testing.assert_array_equal(flat, x)
+    assert flat.tobytes() == x.tobytes()
+
+
+# ------------------------------------------------------------- envelopes
+
+
+def test_envelope_batch_mv_is_per_channel_univariate():
+    """The mv envelope is exactly the univariate envelope run per
+    channel segment — no cross-segment leakage at the boundaries."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(4, N_LEN, D)).astype(np.float32)
+    flat = jnp.asarray(flatten_channels(x))
+    for w in (0, 2, N_LEN - 1):
+        u, l = envelope_batch_mv(flat, w, D)
+        for ch in range(D):
+            uu, ll = envelope_batch(jnp.asarray(x[:, :, ch]), w)
+            sl = slice(ch * N_LEN, (ch + 1) * N_LEN)
+            np.testing.assert_array_equal(np.asarray(u)[:, sl], np.asarray(uu))
+            np.testing.assert_array_equal(np.asarray(l)[:, sl], np.asarray(ll))
+
+
+def test_envelope_batch_mv_d1_dispatches_bit_identical():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(4, N_LEN)).astype(np.float32))
+    u1, l1 = envelope_batch(x, 3)
+    u2, l2 = envelope_batch_mv(x, 3, 1)
+    np.testing.assert_array_equal(np.asarray(u1), np.asarray(u2))
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+# ------------------------------------------------------------- DTW twins
+
+
+@pytest.mark.parametrize("p", P_VALUES, ids=P_IDS)
+def test_dtw_twins_match_oracle_mv(p):
+    db, qs = _mv_data(seed=5, n_db=6, nq=2)
+    qf = np.asarray(flatten_channels(qs))
+    cf = np.asarray(flatten_channels(db))
+    for w in (0, W, N_LEN):  # w >= n exercises the unconstrained clamp
+        ref = np.array(
+            [[dtw_reference_mv(q, c, w, p) for c in db] for q in qs]
+        )
+        got_q = np.asarray(
+            dtw_qbatch_mv(jnp.asarray(qf), jnp.asarray(cf), w, p, d=D)
+        )
+        np.testing.assert_allclose(got_q, ref, rtol=2e-4, atol=1e-5)
+        got_b = np.asarray(
+            dtw_batch_mv(jnp.asarray(qf[0]), jnp.asarray(cf), w, p, d=D)
+        )
+        np.testing.assert_allclose(got_b, ref[0], rtol=2e-4, atol=1e-5)
+        pairwise = dtw_banded_diag_mv if p == np.inf else dtw_banded_mv
+        got_p = float(
+            pairwise(jnp.asarray(qf[0]), jnp.asarray(cf[0]), w, p, d=D)
+        )
+        np.testing.assert_allclose(got_p, ref[0, 0], rtol=2e-4, atol=1e-5)
+
+
+def test_dtw_banded_early_mv_contract():
+    """Early-abandoning twin: exact below the bound, >= bound when
+    abandoned — same contract as the univariate DP."""
+    db, qs = _mv_data(seed=6, n_db=8, nq=1)
+    qf = jnp.asarray(np.asarray(flatten_channels(qs))[0])
+    cf = np.asarray(flatten_channels(db))
+    for p in (1, 2):
+        exact = np.array([dtw_reference_mv(qs[0], c, W, p) for c in db])
+        powered = exact if p == 1 else exact**p
+        for bound in (np.inf, np.median(powered), powered.min() * 0.5):
+            got = np.array(
+                [
+                    float(
+                        dtw_banded_early_mv(
+                            qf, jnp.asarray(c), W, jnp.float32(bound), p, D
+                        )
+                    )
+                    for c in cf
+                ]
+            )
+            for g, ref in zip(got, powered):
+                if ref < bound:
+                    np.testing.assert_allclose(g, ref, rtol=2e-4, atol=1e-5)
+                else:
+                    assert g >= min(bound, ref) * (1 - 1e-4)
+
+
+def test_dtw_reference_mv_d1_matches_univariate():
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=N_LEN).astype(np.float32)
+    y = rng.normal(size=N_LEN).astype(np.float32)
+    for p in P_VALUES:
+        for w in (0, W, N_LEN):
+            assert dtw_reference_mv(x, y, w, p) == dtw_reference(x, y, w, p)
+            assert dtw_reference_mv(
+                x[:, None], y[:, None], w, p
+            ) == dtw_reference(x, y, w, p)
+
+
+# --------------------------------------------------------------- TC-DTW
+
+
+@pytest.mark.parametrize("p", P_VALUES, ids=P_IDS)
+def test_tc_box_sandwich(p):
+    """tc_box <= LB_Keogh_mv <= DTW_mv in the powered domain, and the
+    box actually fires (is > 0 somewhere) on separated random walks."""
+    db, qs = _mv_data(seed=8, n_db=10, nq=2)
+    qf = jnp.asarray(flatten_channels(qs))
+    cf = jnp.asarray(flatten_channels(db))
+    u, l = envelope_batch_mv(qf, W, D)
+    box = np.asarray(tc_box_powered_qbatch(cf, u, l, p, D))
+    keogh = np.asarray(lb_keogh_mv_powered(cf[None], u[:, None], l[:, None], p))
+    assert (box <= keogh + 1e-4 * np.maximum(1.0, np.abs(keogh))).all()
+    assert (box > 0).any(), "box bound never fires on separated walks"
+    for i, q in enumerate(qs):
+        for j, c in enumerate(db):
+            ref = dtw_reference_mv(q, c, W, p)
+            ref_pow = ref if p in (1, np.inf) else ref**p
+            assert box[i, j] <= ref_pow + 1e-4 * max(1.0, abs(ref_pow))
+
+
+# --------------------------------------- exactness gates (scan/host/indexed)
+
+
+@pytest.mark.parametrize("znorm", [False, True], ids=["raw", "znorm"])
+@pytest.mark.parametrize("p", P_VALUES, ids=P_IDS)
+def test_mv_search_matches_oracle(p, znorm):
+    """Database.build((N, n, d)) -> search is exact on every local
+    driver, bit-consistent across drivers, with the stage accounting
+    invariant intact."""
+    db, qs = _mv_data(seed=9)
+    cfg = SearchConfig(w=W, p=p, znorm=znorm, block=8, k=3)
+    sess = Database.build(db, cfg, index=True, n_refs=3, seed=0)
+    assert sess.channels == D
+    prep_q = sess.prepare_queries(qs)
+    ref = _oracle_matrix(prep_q, sess.data, sess.w, p, D)
+    order = np.argsort(ref, axis=1, kind="stable")[:, :3]
+    want = np.sort(ref, axis=1)[:, :3]
+    for driver in ("scan", "host", "indexed"):
+        res = sess.search(qs, k=3, driver=driver)
+        np.testing.assert_array_equal(res.indices, order, err_msg=driver)
+        np.testing.assert_allclose(
+            res.distances, want, rtol=2e-4, atol=1e-5, err_msg=driver
+        )
+        s = res.stats
+        accounted = (
+            int(s.lb0_pruned) + int(np.sum(s.stage_pruned)) + int(s.full_dtw)
+        )
+        assert accounted == NQ * N_DB, (driver, s)
+    # single-query route returns the batch's first row
+    one = sess.search(qs[0], k=3, driver="scan")
+    np.testing.assert_array_equal(one.indices, order[0])
+    np.testing.assert_allclose(one.distances, want[0], rtol=2e-4, atol=1e-5)
+
+
+def test_mv_methods_agree():
+    """Every stage pipeline (including the TC-DTW cascades and the
+    calibrated planner) returns identical answers on mv sessions."""
+    db, qs = _mv_data(seed=10)
+    cfg = SearchConfig(w=W, p=1, znorm=True, block=8, k=2)
+    sess = Database.build(db, cfg, index=True, n_refs=3, seed=0)
+    base = sess.search(qs, k=2, method="full")
+    for method in (
+        "lb_keogh", "lb_improved", "lb_webb", "kim_improved",
+        "tc_box", "tc_tri", "auto",
+    ):
+        for driver in ("scan", "indexed"):
+            res = sess.search(qs, k=2, method=method, driver=driver)
+            np.testing.assert_array_equal(
+                res.indices, base.indices, err_msg=f"{method}/{driver}"
+            )
+            np.testing.assert_allclose(
+                res.distances, base.distances, rtol=1e-5,
+                err_msg=f"{method}/{driver}",
+            )
+
+
+def test_mv_plan_explain_mentions_channels():
+    db, qs = _mv_data(seed=11)
+    sess = Database.build(db, SearchConfig(w=W, p=1, method="auto", block=8))
+    plan = sess.plan(sess.prepare_queries(qs))
+    assert plan.channels == D
+    text = plan.explain()
+    assert f"channels: {D}" in text
+    assert "tc_box" in text  # mv stages considered by the planner
+
+
+def test_mv_classify():
+    db, qs = _mv_data(seed=12)
+    labels = np.arange(N_DB) % 4
+    sess = Database.build(db, SearchConfig(w=W, p=2, block=8))
+    ref = _oracle_matrix(
+        sess.prepare_queries(qs), sess.data, sess.w, 2, D
+    )
+    want = labels[np.argmin(ref, axis=1)]
+    got = sess.classify(labels, qs)
+    np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------- bundle round-trip
+
+
+def test_mv_save_load_roundtrip(tmp_path):
+    db, qs = _mv_data(seed=13)
+    cfg = SearchConfig(w=W, p=1, znorm=True, block=8, k=2)
+    sess = Database.build(db, cfg, index=True, n_refs=3, seed=0)
+    path = sess.save(str(tmp_path / "mv_session"))
+    loaded = Database.load(path)
+    assert loaded.channels == D
+    assert loaded.fingerprint == sess.fingerprint
+    a = sess.search(qs, k=2, driver="indexed")
+    b = loaded.search(qs, k=2, driver="indexed")
+    np.testing.assert_array_equal(a.indices, b.indices)
+    np.testing.assert_array_equal(a.distances, b.distances)
+
+
+# ------------------------------------------------------------ serving tier
+
+
+def test_mv_engine_bit_matches_direct_search():
+    from repro.serve.engine import QueryEngine
+
+    db, qs = _mv_data(seed=14)
+    sess = Database.build(db, SearchConfig(w=W, p=1, znorm=True, block=8))
+    direct = sess.search(qs, k=2)
+    with QueryEngine(sess, max_batch=4, max_wait_ms=1.0) as eng:
+        for i in range(NQ):
+            ans = eng.search(qs[i], k=2)
+            np.testing.assert_array_equal(ans.indices, direct.indices[i])
+            np.testing.assert_array_equal(ans.distances, direct.distances[i])
+        with pytest.raises(ValueError, match="channel"):
+            eng.search(qs[0, :, 0], k=2)  # univariate query on mv session
+
+
+# ---------------------------------------------------------------- sharded
+
+SHARDED_CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core.distributed import pad_database, sharded_nn_search
+from repro.mv.dtw import dtw_reference_mv
+from repro.mv.layout import flatten_channels, unflatten_channels
+
+rng = np.random.default_rng(0)
+d, n, w = 3, 20, 3
+db = np.cumsum(rng.normal(size=(40, n, d)), axis=1).astype(np.float32)
+qs = np.cumsum(rng.normal(size=(2, n, d)), axis=1).astype(np.float32)
+qs[1] = db[7] + 0.01 * rng.normal(size=(n, d)).astype(np.float32)
+qf = np.asarray(flatten_channels(qs))
+cf = np.asarray(flatten_channels(db))
+
+devs = np.array(jax.devices())
+assert devs.size == 8, devs
+mesh = Mesh(devs, ("data",))
+dbp, n_real = pad_database(cf, mesh, block=8)
+assert n_real == cf.shape[0]
+for p in (1, 2):
+    ref = np.array([[dtw_reference_mv(q, c, w, p) for c in db] for q in qs])
+    res = sharded_nn_search(
+        qf, dbp, mesh, w=w, p=p, k=3, block=8, sync_every=2, d=d
+    )
+    want_i = np.argsort(ref, axis=1, kind="stable")[:, :3]
+    want_d = np.sort(ref, axis=1)[:, :3]
+    assert np.array_equal(res.indices, want_i), (p, res.indices, want_i)
+    np.testing.assert_allclose(res.distances, want_d, rtol=2e-4, atol=1e-5)
+print("MV SHARDED OK")
+"""
+
+
+@pytest.mark.slow
+def test_mv_sharded_matches_oracle():
+    out = run_in_subprocess(SHARDED_CODE, n_devices=8)
+    assert "MV SHARDED OK" in out
+
+
+# ----------------------------------------------------------------- stream
+
+
+@pytest.mark.parametrize("znorm", [False, True], ids=["raw", "znorm"])
+@pytest.mark.parametrize("p", P_VALUES, ids=P_IDS)
+def test_mv_stream_matches_oracle(p, znorm):
+    """Chunked multivariate StreamMatcher == naive per-window oracle
+    scan + greedy suppression, with the window accounting intact."""
+    from repro.stream.matcher import StreamMatcher, windowed_matches
+    from repro.stream.state import STD_EPS
+    from repro.stream.subsequence import Match, greedy_suppress, znorm_series
+
+    rng = np.random.default_rng(15)
+    d, n, L, hop, w = D, 16, 220, 2, 3
+    stream = np.cumsum(
+        rng.normal(size=(L, d)).astype(np.float32), axis=0
+    ).astype(np.float32)
+    tpl = stream[60 : 60 + n].copy()
+    templates = np.stack(
+        [tpl, np.cumsum(rng.normal(size=(n, d)), axis=0).astype(np.float32)]
+    )
+
+    tq = templates.astype(np.float32)
+    if znorm:
+        tq = np.stack(
+            [
+                np.stack(
+                    [znorm_series(tq[q, :, c]) for c in range(d)], axis=1
+                )
+                for q in range(tq.shape[0])
+            ]
+        )
+    oracle = {}
+    for s in range(0, L - n + 1, hop):
+        win = stream[s : s + n].astype(np.float32)
+        if znorm:
+            cols = []
+            for c in range(d):
+                x = stream[s : s + n, c].astype(np.float64)
+                mean = x.sum() / n
+                var = max(x @ x / n - mean * mean, 0.0)
+                std = max(math.sqrt(var), STD_EPS)
+                cols.append(
+                    ((win[:, c].astype(np.float64) - mean) / std).astype(
+                        np.float32
+                    )
+                )
+            win = np.stack(cols, axis=1)
+        for qi in range(tq.shape[0]):
+            oracle[(qi, s)] = float(dtw_reference_mv(tq[qi], win, w, p))
+
+    thr = 4.0 if znorm else 6.0
+    m = StreamMatcher(
+        templates, w, thr, p=p, hop=hop, znorm=znorm, block=16, d=d
+    )
+    i = 0
+    for sz in (37, 61, 113, 50):  # odd chunk splits cross block edges
+        m.push(stream[i : i + sz])
+        i += sz
+    m.flush()
+    got = {(h.tid, h.start): h.dist for h in m.matches()}
+
+    raw_hits = [
+        Match(k[0], k[1], v) for k, v in oracle.items() if v <= thr
+    ]
+    exp = {(h.tid, h.start): h.dist for h in greedy_suppress(raw_hits, n)}
+    assert set(got) == set(exp), (p, znorm, set(got) ^ set(exp))
+    for key in got:
+        assert abs(got[key] - exp[key]) <= 1e-4 * max(1.0, abs(exp[key]))
+    st = m.stats
+    total = st.env_pruned + st.stage_pruned.sum(axis=0) + st.full_dtw
+    np.testing.assert_array_equal(total, st.n_windows)
+
+    # offline twin sees the same stream in one call
+    mm, _ = windowed_matches(
+        stream, templates, w, thr, p=p, hop=hop, znorm=znorm, block=16, d=d
+    )
+    assert {(h.tid, h.start): h.dist for h in mm} == got
+
+
+def test_mv_database_stream_finds_planted_template():
+    db, _ = _mv_data(seed=16)
+    sess = Database.build(db, SearchConfig(w=W, p=1, znorm=True, block=8))
+    rng = np.random.default_rng(17)
+    stream = np.cumsum(
+        rng.normal(size=(200, D)).astype(np.float32), axis=0
+    ).astype(np.float32)
+    planted = sess.raw[4]  # (n, d): build keeps raw in the API layout
+    stream[90 : 90 + N_LEN] = planted + 0.001 * rng.normal(
+        size=(N_LEN, D)
+    ).astype(np.float32)
+    m = sess.stream(threshold=2.0)
+    m.push(stream)
+    m.flush()
+    hits = [(h.tid, h.start) for h in m.matches()]
+    assert (4, 90) in hits, hits
+
+
+# --------------------------------------------------------- error contracts
+
+
+def test_mv_contract_errors():
+    db, qs = _mv_data(seed=18)
+    with pytest.raises(ValueError, match="channels=2"):
+        Database.build(db, SearchConfig(w=W, channels=2))
+    sess = Database.build(db, SearchConfig(w=W, block=8))
+    with pytest.raises(ValueError):
+        sess.prepare_queries(qs[:, :, :2])  # wrong channel count
+    with pytest.raises(ValueError):
+        sess.prepare_queries(qs[0, :, 0])  # univariate query on mv session
+    with pytest.raises(ValueError, match="anytime"):
+        Database.build(db, SearchConfig(w=W), anytime=True)

@@ -1,0 +1,187 @@
+"""d = 1 regression pins for the multivariate tier (DESIGN.md §3.12).
+
+The mv subsystem's layout makes (N, n, 1) data flatten to the
+byte-identical univariate rows, and every d = 1 code path dispatches to
+the literal univariate implementation — so a session built from
+``x[:, :, None]`` must be *bit-identical* to one built from ``x``:
+same top-k values, same indices, same stage counters, on every driver
+and method.  These tests pin that guarantee; if an mv change perturbs
+the univariate program in any way, they fail before the seed's own
+tests do.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.api import Database, SearchConfig
+from repro.core.envelope import envelope_batch
+from repro.kernels.dtw.ops import dtw_op
+from repro.kernels.envelope.ops import envelope_op
+from repro.kernels.lb_fused.ops import lb_fused_qbatch_op
+from repro.kernels.lb_improved.ops import lb_improved_qbatch_op
+from repro.kernels.lb_keogh.ops import lb_keogh_qbatch_op
+from repro.kernels.lb_kim.ops import lb_kim_qbatch_op
+
+N_DB, N_LEN, W = 20, 24, 3
+NQ = 3
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _fresh_compile_caches():
+    """Drop the jit caches accumulated by the rest of tier-1 before the
+    parity sweeps start.  This module compiles every (method, driver)
+    program twice (univariate + d=1 builds) on top of hundreds of prior
+    tests' executables; on a single-core container that pushes the
+    process over the mmap budget and XLA's compiler segfaults (the same
+    failure mode tests/test_tuning.py guards against).  Clearing first
+    keeps the module hermetic and the whole suite inside the limit."""
+    import jax
+
+    jax.clear_caches()
+
+
+def _data(seed=0):
+    rng = np.random.default_rng(seed)
+    db = np.cumsum(rng.normal(size=(N_DB, N_LEN)), axis=1).astype(np.float32)
+    qs = np.cumsum(rng.normal(size=(NQ, N_LEN)), axis=1).astype(np.float32)
+    qs[1] = db[4] + 0.01 * rng.normal(size=N_LEN).astype(np.float32)
+    return db, qs
+
+
+def _assert_stats_equal(a, b, ctxmsg):
+    assert a.n_candidates == b.n_candidates, ctxmsg
+    assert a.full_dtw == b.full_dtw, ctxmsg
+    assert a.stage_names == b.stage_names, ctxmsg
+    assert tuple(a.stage_pruned) == tuple(b.stage_pruned), ctxmsg
+    assert a.lb0_pruned == b.lb0_pruned, ctxmsg
+    assert a.blocks_total == b.blocks_total, ctxmsg
+    assert a.blocks_lb2 == b.blocks_lb2, ctxmsg
+    assert a.blocks_dtw == b.blocks_dtw, ctxmsg
+
+
+def _assert_results_identical(a, b, ctxmsg):
+    np.testing.assert_array_equal(a.distances, b.distances, err_msg=ctxmsg)
+    np.testing.assert_array_equal(a.indices, b.indices, err_msg=ctxmsg)
+    _assert_stats_equal(a.stats, b.stats, ctxmsg)
+    for sa, sb in zip(a.per_query, b.per_query):
+        _assert_stats_equal(sa, sb, ctxmsg)
+
+
+@pytest.mark.parametrize("znorm", [False, True], ids=["raw", "znorm"])
+@pytest.mark.parametrize("p", [1, 2, np.inf], ids=["p1", "p2", "pinf"])
+def test_build_with_unit_channel_axis_is_bit_identical(p, znorm):
+    """Database.build(x[:, :, None]) == Database.build(x), bit for bit:
+    artifacts, fingerprint, and every driver's search results."""
+    db, qs = _data(seed=0)
+    cfg = SearchConfig(w=W, p=p, znorm=znorm, block=8, k=3)
+    uni = Database.build(db, cfg, index=True, n_refs=3, seed=0)
+    mv1 = Database.build(db[:, :, None], cfg, index=True, n_refs=3, seed=0)
+    assert mv1.channels == 1
+    assert mv1.fingerprint == uni.fingerprint
+    assert np.asarray(mv1.data).tobytes() == np.asarray(uni.data).tobytes()
+    for e1, e0 in zip(mv1.envelopes, uni.envelopes):
+        assert np.asarray(e1).tobytes() == np.asarray(e0).tobytes()
+    for driver in ("scan", "host", "indexed"):
+        a = uni.search(qs, k=3, driver=driver)
+        b = mv1.search(qs[:, :, None], k=3, driver=driver)
+        _assert_results_identical(a, b, f"driver={driver}")
+        c = mv1.search(qs, k=3, driver=driver)  # 2-D queries also accepted
+        _assert_results_identical(a, c, f"driver={driver} (2-D queries)")
+
+
+def test_methods_bit_identical_with_unit_channel_axis():
+    db, qs = _data(seed=1)
+    cfg = SearchConfig(w=W, p=1, znorm=True, block=8, k=2)
+    uni = Database.build(db, cfg, index=True, n_refs=3, seed=0)
+    mv1 = Database.build(db[:, :, None], cfg, index=True, n_refs=3, seed=0)
+    for method in (
+        "full", "lb_keogh", "lb_improved", "lb_webb", "kim_improved",
+        "tc_box", "tc_tri", "auto",
+    ):
+        for driver in ("scan", "indexed"):
+            a = uni.search(qs, k=2, method=method, driver=driver)
+            b = mv1.search(qs, k=2, method=method, driver=driver)
+            _assert_results_identical(b, a, f"{method}/{driver}")
+
+
+def test_stream_d1_bit_identical():
+    """windowed_matches(..., d=1) == the legacy univariate call: same
+    matches, same per-window stage accounting."""
+    from repro.stream.matcher import windowed_matches
+
+    rng = np.random.default_rng(2)
+    n = 16
+    stream = np.cumsum(rng.normal(size=300).astype(np.float32))
+    templates = np.stack([stream[50 : 50 + n], stream[120 : 120 + n]])
+    for p in (1, 2, np.inf):
+        a, sa = windowed_matches(
+            stream, templates, 3, 3.0, p=p, hop=1, znorm=True, block=16
+        )
+        b, sb = windowed_matches(
+            stream, templates, 3, 3.0, p=p, hop=1, znorm=True, block=16, d=1
+        )
+        assert a == b, p
+        np.testing.assert_array_equal(sa.env_pruned, sb.env_pruned)
+        np.testing.assert_array_equal(sa.stage_pruned, sb.stage_pruned)
+        np.testing.assert_array_equal(sa.full_dtw, sb.full_dtw)
+
+
+def test_kernel_ops_d1_bit_identical():
+    """Every kernel op called with d=1 returns exactly what the
+    d-less call returns (same tune bucket, same program)."""
+    rng = np.random.default_rng(3)
+    b, n, w, nq = 12, 32, 4, 2
+    cands = jnp.asarray(rng.normal(size=(b, n)).astype(np.float32))
+    qs = jnp.asarray(rng.normal(size=(nq, n)).astype(np.float32))
+    u, l = envelope_batch(qs, w)
+    bounds = jnp.full((nq,), 1e30, jnp.float32)
+
+    ue, le = envelope_op(cands, w, interpret=True)
+    ue1, le1 = envelope_op(cands, w, interpret=True, d=1)
+    np.testing.assert_array_equal(np.asarray(ue), np.asarray(ue1))
+    np.testing.assert_array_equal(np.asarray(le), np.asarray(le1))
+
+    for p in (1, 2):
+        lb, h = lb_keogh_qbatch_op(cands, u, l, p, interpret=True)
+        lb1, h1 = lb_keogh_qbatch_op(cands, u, l, p, interpret=True, d=1)
+        np.testing.assert_array_equal(np.asarray(lb), np.asarray(lb1))
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(h1))
+
+        li = lb_improved_qbatch_op(cands, qs, u, l, w, p, interpret=True)
+        li1 = lb_improved_qbatch_op(
+            cands, qs, u, l, w, p, interpret=True, d=1
+        )
+        np.testing.assert_array_equal(np.asarray(li), np.asarray(li1))
+
+        f_lb1, f_lb = lb_fused_qbatch_op(
+            cands, qs, u, l, w, bounds, p, interpret=True
+        )
+        g_lb1, g_lb = lb_fused_qbatch_op(
+            cands, qs, u, l, w, bounds, p, interpret=True, d=1
+        )
+        np.testing.assert_array_equal(np.asarray(f_lb1), np.asarray(g_lb1))
+        np.testing.assert_array_equal(np.asarray(f_lb), np.asarray(g_lb))
+
+        kim = lb_kim_qbatch_op(cands, qs, p=p, interpret=True)
+        kim1 = lb_kim_qbatch_op(cands, qs, p=p, interpret=True, d=1)
+        np.testing.assert_array_equal(np.asarray(kim), np.asarray(kim1))
+
+        dd = dtw_op(qs[0], cands, w, p, interpret=True)
+        dd1 = dtw_op(qs[0], cands, w, p, interpret=True, d=1)
+        np.testing.assert_array_equal(np.asarray(dd), np.asarray(dd1))
+
+
+def test_save_load_preserves_unit_channel_parity(tmp_path):
+    db, qs = _data(seed=4)
+    cfg = SearchConfig(w=W, p=1, znorm=True, block=8, k=2)
+    uni = Database.build(db, cfg)
+    mv1 = Database.load(mv1_path := Database.build(db[:, :, None], cfg).save(
+        str(tmp_path / "d1")
+    ))
+    assert mv1.channels == 1
+    a = uni.search(qs, k=2)
+    b = mv1.search(qs, k=2)
+    np.testing.assert_array_equal(a.distances, b.distances)
+    np.testing.assert_array_equal(a.indices, b.indices)
+    assert mv1_path.endswith(".npz")

@@ -139,8 +139,21 @@ def test_cascade_choice_deterministic(regime):
 
 
 def test_every_pipeline_costed():
-    plan = choose_cascade(_regime_cold(), k=1)
-    assert sorted(m for m, _ in plan.predicted) == sorted(PIPELINES)
+    """Every pipeline the calibration can price is costed; pipelines
+    needing stages the probe never sampled — the TC-DTW stages on this
+    legacy four-stage calibration (a real ``calibrate`` run samples
+    ``tc_box``; ``tc_tri`` needs the reference context and is never
+    calibrated) — are absent rather than mispriced."""
+    cal = _regime_cold()
+    plan = choose_cascade(cal, k=1)
+    want = sorted(
+        m
+        for m, stages in PIPELINES.items()
+        if all(s in cal.stage_names or s == "full" for s in stages)
+    )
+    assert sorted(m for m, _ in plan.predicted) == want
+    assert len(plan.predicted) >= 6  # the pre-TC families, at least
+    assert {"tc_box", "tc_tri"}.isdisjoint(dict(plan.predicted))
     costs = [c for _, c in plan.predicted]
     assert costs == sorted(costs)  # ascending, chosen first
     assert plan.predicted[0][0] == plan.method

@@ -48,7 +48,20 @@ BASELINE_DIR = os.path.join(
 def load_rows(path: str) -> dict[str, float]:
     with open(path) as f:
         payload = json.load(f)
-    return {r["name"]: float(r["us_per_call"]) for r in payload.get("rows", [])}
+    rows: dict[str, float] = {}
+    for i, r in enumerate(payload.get("rows", [])):
+        try:
+            rows[r["name"]] = float(r["us_per_call"])
+        except (KeyError, TypeError, ValueError) as e:
+            raise SystemExit(
+                f"bench_compare: malformed row {i} in {path}: {r!r} "
+                f"({type(e).__name__}: {e}).  Every row needs 'name' and a "
+                f"numeric 'us_per_call'; regenerate the artifact with "
+                f"`PYTHONPATH=src:. python benchmarks/run.py` and, if this "
+                f"is a baseline, re-pin it with "
+                f"`python tools/bench_compare.py <fresh_dir> --update`."
+            ) from None
+    return rows
 
 
 def compare_dir(
@@ -70,7 +83,13 @@ def compare_dir(
         name = os.path.basename(path)
         base_path = os.path.join(baseline_dir, name)
         if not os.path.exists(base_path):
-            print(f"[NEW ] {name}: no baseline yet (run with --update to pin)")
+            print(
+                f"[NEW ] {name}: no checked-in baseline under "
+                f"{os.path.normpath(baseline_dir)!r} — skipping this module "
+                f"(new benchmarks never fail the gate).  Pin one with "
+                f"`python tools/bench_compare.py {fresh_dir} --update` and "
+                f"commit benchmarks/baselines/{name}."
+            )
             continue
         fresh, base = load_rows(path), load_rows(base_path)
         if prefixes:
